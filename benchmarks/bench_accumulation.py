@@ -1,0 +1,67 @@
+"""Paper Table I: execution time of k sequential GEMM/SYRK accumulations,
+and the tree-reduction (Alg. 3) counterpart.
+
+The paper shows near-linear growth of the sequential chain (the left-looking
+accumulator is the critical path).  We measure the same chain as a lax.scan
+(sequential semantics) vs chunked_tree_sum (Alg. 3), plus the derived
+critical-path depth (k vs ceil(k/c) + log2 c).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree_reduction import chunked_tree_sum
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = True):
+    t = 120 if quick else 256
+    ks = [100, 500, 1000] if quick else [1000, 5000, 10000]
+    rng = np.random.default_rng(0)
+    rows = []
+    for k in ks:
+        a = jnp.asarray(rng.standard_normal((k, t, t)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((k, t, t)), jnp.float32)
+
+        @jax.jit
+        def seq_gemm(a, b):
+            def body(c, xs):
+                x, y = xs
+                return c + x @ y.T, None
+            return jax.lax.scan(body, jnp.zeros((t, t), jnp.float32), (a, b))[0]
+
+        @jax.jit
+        def seq_syrk(a):
+            def body(c, x):
+                return c + x @ x.T, None
+            return jax.lax.scan(body, jnp.zeros((t, t), jnp.float32), a)[0]
+
+        @jax.jit
+        def tree_gemm(a, b):
+            terms = jnp.einsum("kab,kcb->kac", a, b)
+            return chunked_tree_sum(terms, 32)
+
+        t_gemm = _time(seq_gemm, a, b)
+        t_syrk = _time(seq_syrk, a)
+        t_tree = _time(tree_gemm, a, b)
+        ref = np.asarray(seq_gemm(a, b))
+        got = np.asarray(tree_gemm(a, b))
+        assert np.abs(ref - got).max() < 1e-2 * max(1, np.abs(ref).max())
+        depth_seq, depth_tree = k, int(np.ceil(k / 32)) + 5
+        rows.append((f"tableI_gemms_k{k}", t_gemm * 1e6,
+                     f"seq_syrk_us={t_syrk*1e6:.0f};tree_us={t_tree*1e6:.0f};"
+                     f"depth_seq={depth_seq};depth_tree={depth_tree};"
+                     f"tree_speedup={t_gemm/t_tree:.2f}x"))
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Fig. 11 (scalability across cores) — structural analogue.
+
+This container has one physical core, so wall-clock core-scaling cannot be
+measured.  What *determines* that scaling is the task-DAG shape the paper
+plots in Fig. 2: width (available parallelism) vs depth (critical path).
+We compute both from the symbolic factorization for each matrix, with and
+without tree reduction, and report the derived max speedup bound
+(Brent: T_p >= max(T_1/p, depth)).  Wall-clock on real hardware scales with
+exactly these numbers; see EXPERIMENTS.md §Fig11 for the mapping.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import TileGrid, symbolic_factorize, tile_pattern_from_coo
+from repro.data import table2_matrix
+
+
+def run(quick: bool = True, scale: float = 0.04, tile: int = 32):
+    ids = [2, 9, 14] if quick else [1, 2, 5, 9, 12, 14, 18]
+    rows = []
+    for mid in ids:
+        A, struct = table2_matrix(mid, scale=scale)
+        g = TileGrid(struct, t=tile)
+        symb = symbolic_factorize(tile_pattern_from_coo(A, g))
+        n_tasks = len(symb.tasks)
+        depth = symb.critical_path_length()
+        width = symb.max_parallelism()
+        acc = symb.accumulation_counts()
+        max_chain = int(acc.max())
+        # tree reduction rewrites the longest accumulation chain k -> log2 k
+        depth_tree = depth - max_chain + int(np.ceil(np.log2(max(max_chain, 1)))) + 1
+        for cores in (1, 4, 16, 64):
+            bound_seq = n_tasks / max(n_tasks / cores, depth)
+            bound_tree = n_tasks / max(n_tasks / cores, depth_tree)
+            rows.append((
+                f"fig11_matrix{mid}_cores{cores}", 0.0,
+                f"tasks={n_tasks};depth={depth};width={width};"
+                f"speedup_bound={bound_seq:.1f};"
+                f"speedup_bound_tree={bound_tree:.1f}"))
+    return rows

@@ -1,0 +1,62 @@
+"""Paper Appendix B (Fig. 15): tile-size sweep on Matrix ID 12 — time and
+GFLOP/s vs tile size; plus Table III's accelerator tile-size analysis
+transposed to TPU (derived roofline terms per tile size).
+
+The paper found 120–240 optimal on CPU (L3-bound) and 600 on GPU
+(occupancy-bound).  On TPU the governing constraints are MXU alignment
+(t % 128) and the VMEM working set of the fused band window
+(2·jb·t²·4B) — reported per tile size below.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (BandedCTSF, TileGrid, factorize_window,
+                        symbolic_factorize, tile_pattern_from_coo)
+from repro.data import table2_matrix
+
+_PEAK_TPU_F32 = 197e12 / 3  # bf16 peak / 3 ~ f32 MXU throughput per chip
+_VMEM_BYTES = 128 * 2 ** 20
+
+
+def _time(fn, reps=2):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = True, scale: float = 0.05):
+    A, struct = table2_matrix(12, scale=scale)
+    tiles = [16, 32, 64] if quick else [16, 24, 32, 48, 64, 96, 128]
+    rows = []
+    for t in tiles:
+        g = TileGrid(struct, t=t)
+        bm = BandedCTSF.from_sparse(A, g)
+        symb = symbolic_factorize(tile_pattern_from_coo(A, g))
+        flops = symb.total_flops(t)
+        fn = jax.jit(lambda m=bm: factorize_window(m, tree_chunks=8).ctsf.Dr)
+        dt = _time(lambda: jax.block_until_ready(fn()))
+        gflops = flops / dt / 1e9
+        # TPU derived terms for this tile size (Table III analogue)
+        bt = g.band_tiles
+        vmem_window = (2 * min(8, bt + 1) + 1) * t * t * 4
+        mxu_align = min(1.0, (t / 128.0) if t < 128 else 1.0)
+        rows.append((
+            f"appB_tile{t}", dt * 1e6,
+            f"gflops={gflops:.2f};cpu_measured=1;"
+            f"tpu_vmem_window_kib={vmem_window/1024:.0f};"
+            f"tpu_mxu_alignment={mxu_align:.2f};"
+            f"extra_flops_vs_t16={flops/symb_flops_ref(struct, scale):.2f}"))
+    return rows
+
+
+def symb_flops_ref(struct, scale, t_ref: int = 16):
+    A, s2 = table2_matrix(12, scale=scale)
+    g = TileGrid(s2, t=t_ref)
+    symb = symbolic_factorize(tile_pattern_from_coo(A, g))
+    return symb.total_flops(t_ref)

@@ -1,0 +1,49 @@
+"""Paper Fig. 12: factorization with vs without tree reduction, matrices
+with few vs many accumulations (ids 2 and 14).
+
+The paper's contrast: id 2 (84 accumulations) saturates quickly; id 14
+(4166 accumulations) keeps scaling.  We measure wall time (single-core XLA:
+the tree mainly exposes vectorization here) and the accumulation counts +
+critical-path compression that produce the paper's multi-core effect.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (BandedCTSF, TileGrid, factorize_window,
+                        symbolic_factorize, tile_pattern_from_coo)
+from repro.core.tree_reduction import should_use_tree
+from repro.data import table2_matrix
+
+
+def _time(fn, reps=2):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = True, scale: float = 0.05, tile: int = 32):
+    rows = []
+    for mid in (2, 14):
+        A, struct = table2_matrix(mid, scale=scale)
+        g = TileGrid(struct, t=tile)
+        bm = BandedCTSF.from_sparse(A, g)
+        symb = symbolic_factorize(tile_pattern_from_coo(A, g))
+        n_acc = int(symb.accumulation_counts().max())
+        times = {}
+        for chunks in (1, 8, 32):
+            fn = jax.jit(lambda m=bm, c=chunks:
+                         factorize_window(m, tree_chunks=c).ctsf.Dr)
+            times[chunks] = _time(lambda: jax.block_until_ready(fn()))
+        use = should_use_tree(n_acc, 32)
+        rows.append((
+            f"fig12_matrix{mid}", times[8] * 1e6,
+            f"seq_us={times[1]*1e6:.0f};tree8_us={times[8]*1e6:.0f};"
+            f"tree32_us={times[32]*1e6:.0f};max_accum={n_acc};"
+            f"paper_rule_use_tree={use}"))
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-scale
+matrices (long on CPU); the default is structure-preserving scaled versions.
+
+  Table I     -> bench_accumulation   (sequential GEMM/SYRK chains vs tree)
+  Fig. 10     -> bench_libraries      (sTiles vs dense/sparse baselines)
+  Fig. 11     -> bench_scalability    (DAG width/depth + speedup bounds)
+  Fig. 12     -> bench_tree_reduction (tree on/off, matrices 2 & 14)
+  Fig. 13     -> bench_libraries (dense crossover column)
+  Table III   -> bench_tile_size      (+ accelerator tile-size terms)
+  App. A      -> bench_concurrent     (concurrent factorizations, precond)
+  §Roofline   -> roofline             (from dry-run artifacts)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--only", default=None)
+    args = p.parse_args()
+    quick = not args.full
+
+    from . import (bench_accumulation, bench_concurrent, bench_libraries,
+                   bench_scalability, bench_tile_size, bench_tree_reduction,
+                   roofline)
+    suites = {
+        "accumulation": bench_accumulation,
+        "libraries": bench_libraries,
+        "scalability": bench_scalability,
+        "tree_reduction": bench_tree_reduction,
+        "tile_size": bench_tile_size,
+        "concurrent": bench_concurrent,
+        "roofline": roofline,
+    }
+    failed = False
+    print("name,us_per_call,derived")
+    for name, mod in suites.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            for row in mod.run(quick=quick):
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+                sys.stdout.flush()
+        except Exception:
+            failed = True
+            print(f"{name},ERROR,", flush=True)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

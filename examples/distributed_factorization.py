@@ -1,0 +1,58 @@
+"""Distributed single-matrix factorization across a device mesh — the
+paper's "future work" (App. A), built on adaptive-ND partitioning +
+cross-chip GEADD-tree reduction (DESIGN.md §2).
+
+Uses 8 fake CPU devices (set before jax import) to emulate the mesh; on a
+real pod the same code runs over ICI.
+
+    PYTHONPATH=src python examples/distributed_factorization.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import BandedCTSF, TileGrid
+from repro.core.distributed import (assemble_factor, distributed_factorize,
+                                    partition_banded)
+from repro.data import make_arrowhead
+
+
+def main():
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    # block-independent diagonal (the paper's bandwidth-100/1000 regime,
+    # rho=0) + dense arrow: adaptive-ND partitions are exact
+    t, parts = 16, 4
+    n = 64 * t + 2 * t
+    A, struct = make_arrowhead(n, t, 2 * t, rho=0.0, seed=0)
+    grid = TileGrid(struct, t=t)
+    bm = BandedCTSF.from_sparse(A, grid)
+
+    pm = partition_banded(bm, parts)
+    print(f"partitioned: {parts} independent diagonal blocks of "
+          f"{pm.Dr.shape[1]} tiles + shared {grid.n_arrow_tiles}-tile corner")
+
+    out = distributed_factorize(pm, mesh, axis="model")
+    f = assemble_factor(out, grid)
+
+    Lref = np.linalg.cholesky(bm.to_dense(lower_only=False))
+    err = np.abs(f.ctsf.to_dense() - np.tril(Lref)).max()
+    print(f"distributed factor matches dense Cholesky: max err {err:.2e}")
+
+    # time it vs single-device
+    fn = jax.jit(lambda p: distributed_factorize(pm, mesh, axis="model").Dr)
+    jax.block_until_ready(fn(pm.Dr))
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(pm.Dr))
+    print(f"sharded factorization step: {(time.perf_counter()-t0)*1e3:.1f} ms "
+          f"(partitions in parallel + ppermute GEADD tree for the corner)")
+
+
+if __name__ == "__main__":
+    main()

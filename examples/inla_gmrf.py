@@ -1,0 +1,102 @@
+"""INLA-style Bayesian inference — the paper's driving application.
+
+Spatio-temporal GMRF with fixed effects:
+
+    y = X beta + u + eps,   u ~ N(0, K(theta)^{-1}),  K = Q_t(rho) (x) ... (x) Q_s
+
+The joint latent precision Q(theta) is exactly the paper's block-arrowhead
+pattern (Fig. 1): banded latent block + dense fixed-effect arrow.  Each
+objective evaluation needs a Cholesky factorization (logdet + solve), and
+the central-difference gradient over the hyperparameters theta needs 2·dim
+*independent* factorizations — the concurrent workload of Appendix A, run
+here as one batched/sharded `concurrent_factorize` call.
+
+    PYTHONPATH=src python examples/inla_gmrf.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import BandedCTSF, TileGrid
+from repro.core.concurrent import (concurrent_factorize, concurrent_logdet,
+                                   stack_ctsf)
+from repro.core.solve import solve
+from repro.core.structure import ArrowheadStructure
+from repro.data.gmrf import ar1_precision, lattice_precision
+
+
+def build_precision(theta, nt=32, ns=48, n_fixed=16, seed=0):
+    """Q(theta) for theta = (log tau_t, logit rho, log tau_s)."""
+    ltau_t, lrho, ltau_s = theta
+    rho = float(np.tanh(lrho))
+    qt = ar1_precision(nt, rho=rho, tau=float(np.exp(ltau_t)))
+    qs = lattice_precision(ns, coupling=0.4, tau=float(np.exp(ltau_s)))
+    k = sp.kron(qt, sp.eye(ns)) + sp.kron(sp.eye(nt), qs)
+    nd = nt * ns
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((nd, n_fixed)) * (0.5 / np.sqrt(nd))
+    c = float((x ** 2).sum() / 1e-3 + 1.0)
+    q = sp.bmat([[k, sp.csc_matrix(x)],
+                 [sp.csc_matrix(x.T), sp.csc_matrix(np.eye(n_fixed) * c)]],
+                format="csc")
+    struct = ArrowheadStructure(n=nd + n_fixed, bandwidth=ns, arrow=n_fixed)
+    return sp.csc_matrix(q), struct
+
+
+def objective_terms(thetas, grid, y):
+    """Batched objective: -logdet(Q)/2 + y^T Q^{-1} y / 2 for each theta."""
+    mats = []
+    for th in thetas:
+        Q, struct = build_precision(th)
+        mats.append(BandedCTSF.from_sparse(Q, grid))
+    batch = stack_ctsf(mats)
+    t0 = time.perf_counter()
+    factor = concurrent_factorize(batch)            # Appendix A workload
+    lds = concurrent_logdet(factor)
+    jax.block_until_ready(lds)
+    dt = time.perf_counter() - t0
+    # quadratic forms via per-matrix solves
+    quads = []
+    for i in range(len(thetas)):
+        from repro.core.cholesky import CholeskyFactor
+        fi = CholeskyFactor(BandedCTSF(grid, factor.ctsf.Dr[i],
+                                       factor.ctsf.R[i], factor.ctsf.C[i]))
+        xi = solve(fi, y)
+        quads.append(float(y @ xi))
+    obj = [-0.5 * float(lds[i]) + 0.5 * quads[i] for i in range(len(thetas))]
+    return np.array(obj), dt
+
+
+def main():
+    theta = np.array([0.0, 0.5, 0.0])
+    Q0, struct = build_precision(theta)
+    grid = TileGrid(struct, t=16)
+    rng = np.random.default_rng(1)
+    y = jnp.asarray(rng.standard_normal(grid.padded_n) * 0.1, jnp.float32)
+
+    print(f"latent dim {struct.n_diag} + {struct.arrow} fixed effects; "
+          f"bandwidth {struct.bandwidth}")
+    h, lr = 0.05, 0.1
+    for it in range(5):
+        # central differences: 2*dim(theta) independent factorizations + f(x)
+        probes = [theta]
+        for d in range(3):
+            for s in (+h, -h):
+                tp = theta.copy()
+                tp[d] += s
+                probes.append(tp)
+        vals, dt = objective_terms(probes, grid, y)
+        grad = np.array([(vals[1 + 2 * d] - vals[2 + 2 * d]) / (2 * h)
+                         for d in range(3)])
+        theta = theta - lr * grad / max(1.0, np.abs(grad).max())
+        print(f"iter {it}: f={vals[0]:.2f} |grad|={np.abs(grad).max():.3f} "
+              f"theta={np.round(theta, 3).tolist()} "
+              f"({len(probes)} factorizations in {dt*1e3:.0f} ms)")
+    print("done — hyperparameters fitted with concurrent sTiles factorizations")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Assemble EXPERIMENTS.md sections from results/ artifacts."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import load_all, markdown_table, analyse_record
+
+
+def dryrun_table():
+    lines = ["| arch | shape | mesh | status | mem GiB/dev | lower s | compile s | collectives (scanned module) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for tag in ("single", "multi"):
+        for fn in sorted(glob.glob(f"results/dryrun/*_{tag}.json")):
+            d = json.load(open(fn))
+            if d["status"] == "ok":
+                coll = d.get("collectives_scanned", {})
+                cs = " ".join(f"{k}:{v/2**20:.0f}MiB" for k, v in coll.items()
+                              if k != "total" and v > 0)
+                lines.append(
+                    f"| {d['arch']} | {d['shape']} | {d['mesh']} | ok | "
+                    f"{d['memory']['total_per_device_gib']:.2f} | "
+                    f"{d.get('lower_s','—')} | {d.get('compile_s','—')} | {cs} |")
+            else:
+                lines.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                             f"{d['status']} | — | — | — | — |")
+    return "\n".join(lines)
+
+
+def perf_section():
+    parts = []
+    parts.append(open("results/solver_hillclimb.md").read())
+    parts.append("""
+## LM-cell §Perf track (b): the three hillclimbed cells (dry-run roofline terms, single-pod 16x16)
+
+Selection per spec: worst-fitting/largest (command-r-plus-104b train_4k),
+most collective-bound (granite-moe-3b train_4k, coll/compute = 54x), most
+representative of the paper's banded/structured-state regime (zamba2-2.7b
+train_4k — hybrid SSM + the arrowhead-preconditioner training target).
+Terms in seconds/step/device; "fits" = total <= 16 GiB (v5e HBM).
+""")
+    rows = ["| cell | change | mem GiB | compute s | memory s | collective s | frac | verdict |",
+            "|---|---|---|---|---|---|---|---|"]
+
+    base = {}
+    for r in load_all("single"):
+        if "skipped" not in r:
+            base[(r["arch"], r["shape"])] = r
+
+    def row(cell, change, d, verdict):
+        rows.append(f"| {cell} | {change} | {d['mem_gib']:.2f} | "
+                    f"{d['t_compute']:.2e} | {d['t_memory']:.2e} | "
+                    f"{d['t_coll']:.2e} | {d['frac']:.3f} | {verdict} |")
+
+    def baserow(arch, shape):
+        b = base[(arch, shape)]
+        rows.append(f"| {arch} {shape} | baseline | {b['mem_gib']:.2f} | "
+                    f"{b['t_compute_s']:.2e} | {b['t_memory_s']:.2e} | "
+                    f"{b['t_collective_s']:.2e} | {b['roofline_fraction']:.3f} | "
+                    f"{'FITS' if b['mem_gib'] <= 16 else 'DOES NOT FIT'} |")
+
+    it1 = json.load(open("results/hillclimb_iter1.json"))
+    it2 = json.load(open("results/hillclimb_iter2.json"))
+    it3 = json.load(open("results/hillclimb_iter3.json")) \
+        if os.path.exists("results/hillclimb_iter3.json") else {}
+
+    baserow("command-r-plus-104b", "train_4k")
+    row("", "grad_accum=4", it1["cmdr_ga4"], "mem 36->19 GiB (still over)")
+    row("", "grad_accum=8", it2["cmdr_ga8"], "FITS (14.2); +re-gather cost")
+    if "cmdr_ga8_dots" in it3 and "error" not in it3["cmdr_ga8_dots"]:
+        row("", "ga8 + remat=dots", it3["cmdr_ga8_dots"], "REFUTED for capacity: 25.9 GiB (dots saves matmul outputs) despite compute -18% and useful 0.75->0.91; keep remat=full+ga8")
+    baserow("granite-moe-3b-a800m", "train_4k")
+    row("", "EP padding 40->48", it1["granite3b_ep"], "collective 13.6->3.4 s (4x)")
+    row("", "+ grad_accum=2", it1["granite3b_ep_ga2"], "FITS (11.0)")
+    if "granite3b_ep_ga2_dots" in it3 and "error" not in it3["granite3b_ep_ga2_dots"]:
+        row("", "+ remat=dots", it3["granite3b_ep_ga2_dots"], "<5% on all terms -> stop (3 consecutive small gains)")
+    baserow("zamba2-2.7b", "train_4k")
+    row("", "per-layer remat + DP-only acts", it1["zamba_fix"], "mem 28->13 GiB; bytes UP (model axis idle)")
+    row("", "+ ssd_chunk=32", it1["zamba_fix_q32"], "REFUTED: no change")
+    row("", "+ grad_accum=2", it1["zamba_fix_ga2"], "7.0 GiB")
+    if "zamba_headshard_ga2" in it2 and "error" not in it2.get("zamba_headshard_ga2", {"error": 1}):
+        row("", "SSD head-shard + ga2", it2["zamba_headshard_ga2"], "mostly REFUTED: bytes ~-11% only (GSPMD reshards around the constraint)")
+    if "zamba_seqforce_ga2" in it2 and "error" not in it2.get("zamba_seqforce_ga2", {"error": 1}):
+        row("", "forced seq-shard + ga2", it2["zamba_seqforce_ga2"], "WINNER: 6.8 GiB fits, terms back to baseline level (frac 0.038 vs 0.043) -> seq-sharding restored as the all-family default")
+    parts.append("\n".join(rows))
+    parts.append("""
+
+**Recommended production configs** (memory-feasible on v5e-256, best measured
+terms): command-r-plus-104b train: `remat=full, grad_accum=8` (14.2 GiB,
+frac 0.214 — the only *runnable* config; baseline frac 0.322 is an OOM
+paper number); granite-moe-3b train: `expert_pad_to=48 (EP), grad_accum=2`
+(11.0 GiB, collective term 4x down); zamba2-2.7b train: `seq-sharded acts +
+per-layer remat + grad_accum=2` (6.8 GiB at baseline-level terms —
+re-measured under the restored defaults: 6.79 GiB, frac 0.038, reproducing
+the winner exactly).  The same recipe extends to qwen2-72b train (26.0 GiB
+baseline): measured ga=2 -> 19.3 GiB (not enough), ga=4 -> **12.7 GiB,
+frac 0.236** (fits; `results/hillclimb_verify.json`).  Perf score
+note: decode cells are HBM-bandwidth-bound by nature (roofline fraction
+measured against the 6ND/2ND compute convention, which excludes
+cache-attention work — the dominant real work at 32k-500k contexts).""")
+    return "\n".join(parts)
+
+
+def main():
+    src_md = "EXPERIMENTS.template.md" if __import__("os").path.exists("EXPERIMENTS.template.md") else "EXPERIMENTS.md"
+    md = open(src_md).read()
+    if os.path.exists("results/bench_output.csv"):
+        bench = open("results/bench_output.csv").read()
+        md = md.replace("<!-- BENCH_RESULTS -->",
+                        "```\n" + bench.strip() + "\n```")
+    md = md.replace("<!-- DRYRUN_RESULTS -->", dryrun_table())
+    rows = load_all("single")
+    md = md.replace("<!-- ROOFLINE_RESULTS -->", markdown_table(rows))
+    md = md.replace("<!-- PERF_RESULTS -->", perf_section())
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md assembled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+import os, sys, json, dataclasses
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from repro.launch.dryrun import dryrun_cell
+from repro.configs.base import RunConfig
+from benchmarks.roofline import analyse_record
+
+EXPS = [
+    # (tag, arch, shape, run-kwargs)
+    ("cmdr_ga4",      "command-r-plus-104b",  "train_4k", dict(grad_accum=4)),
+    ("granite3b_ep",  "granite-moe-3b-a800m", "train_4k", dict()),             # EP padding now default in config
+    ("granite3b_ep_ga2", "granite-moe-3b-a800m", "train_4k", dict(grad_accum=2)),
+    ("zamba_fix",     "zamba2-2.7b",          "train_4k", dict()),             # per-layer remat + DP-only acts
+    ("zamba_fix_q32", "zamba2-2.7b",          "train_4k", dict(ssd_chunk=32)),
+    ("zamba_fix_ga2", "zamba2-2.7b",          "train_4k", dict(grad_accum=2)),
+]
+out = {}
+for tag, arch, shape, kw in EXPS:
+    try:
+        rec = dryrun_cell(arch, shape, run=RunConfig(**kw), extrapolate=True, verbose=False)
+        a = analyse_record(rec)
+        out[tag] = {"mem_gib": rec["memory"]["total_per_device_gib"],
+                    "t_compute": a["t_compute_s"], "t_memory": a["t_memory_s"],
+                    "t_coll": a["t_collective_s"], "frac": a["roofline_fraction"],
+                    "useful": a["useful_ratio"], "dominant": a["dominant"]}
+        print(f"{tag:18s} mem={out[tag]['mem_gib']:7.2f} GiB  cmp={a['t_compute_s']:.2e} "
+              f"mem_t={a['t_memory_s']:.2e} coll={a['t_collective_s']:.2e} "
+              f"frac={a['roofline_fraction']:.3f} useful={a['useful_ratio']:.2f}", flush=True)
+    except Exception as e:
+        out[tag] = {"error": str(e)[:300]}
+        print(f"{tag:18s} ERROR {str(e)[:200]}", flush=True)
+json.dump(out, open("results/hillclimb_iter1.json", "w"), indent=1)

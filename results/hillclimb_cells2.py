@@ -1,0 +1,28 @@
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from repro.launch.dryrun import dryrun_cell
+from repro.configs.base import RunConfig
+from benchmarks.roofline import analyse_record
+
+EXPS = [
+    ("cmdr_ga8",           "command-r-plus-104b", "train_4k", dict(grad_accum=8)),
+    ("zamba_headshard_ga2","zamba2-2.7b",         "train_4k", dict(grad_accum=2, ssm_head_shard=True)),
+    ("zamba_seqforce_ga2", "zamba2-2.7b",         "train_4k", dict(grad_accum=2, activation_sharding="sequence_all")),
+]
+out = {}
+for tag, arch, shape, kw in EXPS:
+    try:
+        rec = dryrun_cell(arch, shape, run=RunConfig(**kw), extrapolate=True, verbose=False)
+        a = analyse_record(rec)
+        out[tag] = {"mem_gib": rec["memory"]["total_per_device_gib"],
+                    "t_compute": a["t_compute_s"], "t_memory": a["t_memory_s"],
+                    "t_coll": a["t_collective_s"], "frac": a["roofline_fraction"],
+                    "useful": a["useful_ratio"]}
+        print(f"{tag:20s} mem={out[tag]['mem_gib']:7.2f} cmp={a['t_compute_s']:.2e} "
+              f"mem_t={a['t_memory_s']:.2e} coll={a['t_collective_s']:.2e} "
+              f"frac={a['roofline_fraction']:.3f} useful={a['useful_ratio']:.2f}", flush=True)
+    except Exception as e:
+        out[tag] = {"error": str(e)[:300]}
+        print(f"{tag:20s} ERROR {str(e)[:200]}", flush=True)
+json.dump(out, open("results/hillclimb_iter2.json", "w"), indent=1)

@@ -1,0 +1,20 @@
+"""sTiles core: structured sparse Cholesky factorization in JAX."""
+from .structure import (ArrowheadStructure, TileGrid, measure_arrowhead,
+                        tile_pattern_from_coo, banded_arrowhead_tile_pattern)
+from .symbolic import SymbolicFactorization, Task, TaskType, symbolic_factorize
+from .ctsf import BandedCTSF, TileMatrix
+from .cholesky import CholeskyFactor, factorize_tasklist, factorize_window
+from .tree_reduction import chunked_tree_sum, should_use_tree, tree_combine
+from .solve import (backward_solve, forward_solve, logdet,
+                    marginal_variances, sample_gmrf, solve)
+
+__all__ = [
+    "ArrowheadStructure", "TileGrid", "measure_arrowhead",
+    "tile_pattern_from_coo", "banded_arrowhead_tile_pattern",
+    "SymbolicFactorization", "Task", "TaskType", "symbolic_factorize",
+    "BandedCTSF", "TileMatrix",
+    "CholeskyFactor", "factorize_tasklist", "factorize_window",
+    "chunked_tree_sum", "should_use_tree", "tree_combine",
+    "backward_solve", "forward_solve", "logdet", "marginal_variances",
+    "sample_gmrf", "solve",
+]

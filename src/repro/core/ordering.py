@@ -1,0 +1,288 @@
+"""Fill-reducing orderings for block-arrowhead matrices (paper §III-A).
+
+Implements the three families the paper analyses — RCM, AMD, and Nested
+Dissection — plus the paper's two structure-aware twists:
+
+  * **partial** orderings that permute only the banded diagonal part and
+    leave the dense arrowhead region untouched (Fig. 3: excluding the orange
+    region cut fill-in by ~32.7% on their Matrix B);
+  * the **adaptive ND** of §III-A: separator size = bandwidth (+ arrow
+    columns), separator moved to the *end* of the matrix, preserving the
+    arrowhead shape while exposing independent partitions (Fig. 4).
+
+All orderings are evaluated with the paper's acceptance rule: "the number of
+fill-ins is evaluated before and after the ordering; if there is no
+improvement, the method is not used."
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.sparse import csgraph
+
+from .structure import ArrowheadStructure, TileGrid, measure_arrowhead, tile_pattern_from_coo
+
+__all__ = [
+    "OrderingResult",
+    "rcm_ordering",
+    "amd_ordering",
+    "adaptive_nd_ordering",
+    "metis_like_nd_ordering",
+    "best_ordering",
+    "apply_permutation",
+    "tile_fill_in",
+]
+
+
+@dataclasses.dataclass
+class OrderingResult:
+    name: str
+    perm: np.ndarray            # new_index -> old_index
+    fill_before: int
+    fill_after: int
+    accepted: bool
+    partitions: Optional[np.ndarray] = None  # ND only: partition id per new index
+
+    @property
+    def improvement(self) -> float:
+        if self.fill_before == 0:
+            return 0.0
+        return 1.0 - self.fill_after / max(1, self.fill_before)
+
+
+# ---------------------------------------------------------------------------
+# Fill-in evaluation (tile level — what sTiles actually allocates)
+# ---------------------------------------------------------------------------
+
+def _symbolic_elimination_tiles(tile_lower: np.ndarray) -> np.ndarray:
+    """Tile-level symbolic Cholesky: returns the L tile pattern.
+
+    Classic column elimination on the (small) tile graph: eliminating column
+    k joins all its below-diagonal neighbours into a clique — restricted to
+    the standard quotient-graph shortcut of only linking to the first
+    neighbour's column (etree-based transitive reduction would be cheaper;
+    tile counts are small so direct set propagation is fine).
+    """
+    nt = tile_lower.shape[0]
+    patt = [set(np.nonzero(tile_lower[:, k])[0][np.nonzero(tile_lower[:, k])[0] > k])
+            for k in range(nt)]
+    for k in range(nt):
+        nbrs = sorted(patt[k])
+        if not nbrs:
+            continue
+        p = nbrs[0]  # etree parent: fill propagates to parent column
+        patt[p].update(x for x in nbrs if x > p)
+    L = np.zeros_like(tile_lower)
+    for k in range(nt):
+        L[k, k] = True
+        for r in patt[k]:
+            L[r, k] = True
+    return L
+
+
+def tile_fill_in(pattern: sp.spmatrix, structure: ArrowheadStructure, t: int,
+                 total: bool = False) -> int:
+    """Fill tiles created by factorization (|L_tiles| - |A_tiles|), or with
+    ``total=True`` the factor's allocated tile count |L_tiles| — the quantity
+    that decides storage and FLOPs (a scrambled matrix has *few* fill tiles
+    because every tile is already dirty; |L| exposes that)."""
+    grid = TileGrid(structure, t)
+    a_tiles = tile_pattern_from_coo(pattern, grid)
+    l_tiles = _symbolic_elimination_tiles(a_tiles)
+    if total:
+        return int(l_tiles.sum())
+    return int(l_tiles.sum() - a_tiles.sum())
+
+
+# ---------------------------------------------------------------------------
+# Orderings
+# ---------------------------------------------------------------------------
+
+def _partial_wrap(perm_diag: np.ndarray, n: int, nd: int) -> np.ndarray:
+    """Extend a permutation of the diagonal part with identity on the arrow."""
+    perm = np.empty(n, dtype=np.int64)
+    perm[:nd] = perm_diag
+    perm[nd:] = np.arange(nd, n)
+    return perm
+
+
+def rcm_ordering(pattern: sp.spmatrix, structure: ArrowheadStructure,
+                 partial: bool = True) -> np.ndarray:
+    """(Partial) Reverse Cuthill-McKee.
+
+    ``partial=True`` is the paper's recommended variant: RCM runs on the
+    banded diagonal part only, the arrowhead block keeps its position.
+    """
+    n, nd = structure.n, structure.n_diag
+    csr = sp.csr_matrix(pattern)
+    if partial and structure.arrow > 0:
+        sub = csr[:nd, :nd]
+        perm_diag = np.asarray(csgraph.reverse_cuthill_mckee(sub, symmetric_mode=True),
+                               dtype=np.int64)
+        return _partial_wrap(perm_diag, n, nd)
+    return np.asarray(csgraph.reverse_cuthill_mckee(csr, symmetric_mode=True), dtype=np.int64)
+
+
+def amd_ordering(pattern: sp.spmatrix, structure: ArrowheadStructure,
+                 partial: bool = True) -> np.ndarray:
+    """Approximate minimum degree (simplified quotient-graph AMD).
+
+    Selects the node of (approximate) least external degree, eliminates it,
+    and represents the resulting clique implicitly through element lists —
+    the same mechanism AMD [Amestoy/Davis/Duff] uses, without supervariable
+    detection (adequate for the moderate graph sizes sTiles preprocesses).
+    """
+    n, nd = structure.n, structure.n_diag
+    csr = sp.csr_matrix(pattern)
+    target = csr[:nd, :nd] if (partial and structure.arrow > 0) else csr
+    m = target.shape[0]
+
+    adj: list = [set(target.indices[target.indptr[i]:target.indptr[i + 1]]) - {i}
+                 for i in range(m)]
+    elements: list = [set() for _ in range(m)]  # elements adjacent to each var
+    elem_members: Dict[int, set] = {}
+    alive = np.ones(m, dtype=bool)
+    degree = np.array([len(a) for a in adj], dtype=np.int64)
+    order = np.empty(m, dtype=np.int64)
+
+    import heapq
+    heap = [(int(degree[i]), i) for i in range(m)]
+    heapq.heapify(heap)
+    stamp = 0
+    for pos in range(m):
+        while True:
+            d, v = heapq.heappop(heap)
+            if alive[v] and d == degree[v]:
+                break
+        order[pos] = v
+        alive[v] = False
+        # Build the new element (clique) = adj(v) U members of v's elements.
+        clique = set(x for x in adj[v] if alive[x])
+        for e in elements[v]:
+            clique.update(x for x in elem_members[e] if alive[x])
+        clique.discard(v)
+        eid = stamp
+        stamp += 1
+        elem_members[eid] = clique
+        for u in clique:
+            adj[u].discard(v)
+            elements[u] -= elements[v]
+            elements[u].add(eid)
+            # approximate degree: |adj| + sum of element sizes (upper bound)
+            degree[u] = len([x for x in adj[u] if alive[x]]) + sum(
+                len(elem_members[e]) for e in elements[u])
+            heapq.heappush(heap, (int(degree[u]), u))
+        for e in elements[v]:
+            elem_members[e].discard(v)
+
+    if partial and structure.arrow > 0:
+        return _partial_wrap(order, n, nd)
+    return order
+
+
+def adaptive_nd_ordering(pattern: sp.spmatrix, structure: ArrowheadStructure,
+                         n_parts: int = 2) -> OrderingResult:
+    """The paper's adaptive nested dissection (§III-A, Fig. 4).
+
+    1. The separator size equals the bandwidth (arrow columns are already at
+       the end and act as a global separator).
+    2. The separator — the ``bandwidth`` columns straddling each partition
+       boundary — is moved towards the end of the matrix, preserving the
+       arrowhead shape and leaving ``n_parts`` independent diagonal
+       partitions.
+    """
+    n, nd, bw = structure.n, structure.n_diag, structure.bandwidth
+    if n_parts < 2 or nd <= n_parts * (bw + 1):
+        ident = np.arange(n, dtype=np.int64)
+        return OrderingResult("adaptive_nd", ident, 0, 0, accepted=False)
+
+    cuts = [round(nd * p / n_parts) for p in range(1, n_parts)]
+    sep_mask = np.zeros(nd, dtype=bool)
+    for c in cuts:
+        lo, hi = max(0, c - (bw + 1) // 2), min(nd, c + (bw + 1) // 2)
+        sep_mask[lo:hi] = True
+
+    part_idx = np.nonzero(~sep_mask)[0]
+    sep_idx = np.nonzero(sep_mask)[0]
+    perm = np.concatenate([part_idx, sep_idx, np.arange(nd, n)]).astype(np.int64)
+
+    # partition ids in the *new* ordering (for distributed factorization)
+    parts = np.full(n, -1, dtype=np.int64)
+    bounds = [0] + cuts + [nd]
+    pid_of_old = np.zeros(nd, dtype=np.int64)
+    for p in range(n_parts):
+        pid_of_old[bounds[p]:bounds[p + 1]] = p
+    parts[:len(part_idx)] = pid_of_old[part_idx]
+    return OrderingResult("adaptive_nd", perm, 0, 0, accepted=True, partitions=parts)
+
+
+def metis_like_nd_ordering(pattern: sp.spmatrix, structure: ArrowheadStructure,
+                           levels: int = 2) -> np.ndarray:
+    """Generic (METIS-style) recursive nested dissection via spectral-free
+    BFS bisection, used as the baseline ND the paper compares against.
+
+    Recursively: pick a pseudo-peripheral node, BFS-level the graph, take the
+    median level as separator, recurse on the two halves, emit
+    [left, right, separator].
+    """
+    csr = sp.csr_matrix(pattern)
+    n = csr.shape[0]
+
+    def dissect(nodes: np.ndarray, depth: int) -> np.ndarray:
+        if depth == 0 or len(nodes) < 32:
+            return nodes
+        sub = csr[nodes][:, nodes]
+        order = np.asarray(csgraph.reverse_cuthill_mckee(sub, symmetric_mode=True))
+        # BFS-levelled order: separator = middle slice of width ~ sqrt degree
+        mid = len(nodes) // 2
+        width = max(1, int(np.sqrt(sub.nnz / max(1, len(nodes)))) * 4)
+        lo, hi = max(0, mid - width), min(len(nodes), mid + width)
+        left, sep, right = order[:lo], order[lo:hi], order[hi:]
+        return np.concatenate([
+            dissect(nodes[left], depth - 1),
+            dissect(nodes[right], depth - 1),
+            nodes[sep],
+        ])
+
+    return dissect(np.arange(n, dtype=np.int64), levels)
+
+
+def apply_permutation(mat: sp.spmatrix, perm: np.ndarray) -> sp.csc_matrix:
+    """Symmetric permutation P A P^T with perm[new] = old."""
+    csr = sp.csc_matrix(mat)
+    return sp.csc_matrix(csr[perm][:, perm])
+
+
+# ---------------------------------------------------------------------------
+# Ordering selection (paper's acceptance rule + per-structure guidance)
+# ---------------------------------------------------------------------------
+
+_CANDIDATES: Dict[str, Callable] = {
+    "partial_rcm": lambda A, s: rcm_ordering(A, s, partial=True),
+    "rcm": lambda A, s: rcm_ordering(A, s, partial=False),
+    "partial_amd": lambda A, s: amd_ordering(A, s, partial=True),
+}
+
+
+def best_ordering(pattern: sp.spmatrix, structure: ArrowheadStructure, t: int,
+                  candidates=None) -> OrderingResult:
+    """Try candidate orderings; keep the best; reject if no fill improvement.
+
+    Implements the paper's guidance table: partial RCM preferred for
+    band-narrowing, AMD for irregular patterns, adaptive ND handled
+    separately (it optimizes parallelism, not fill).
+    """
+    base_fill = tile_fill_in(pattern, structure, t, total=True)
+    best_name, best_perm, best_fill = "identity", np.arange(structure.n, dtype=np.int64), base_fill
+    for name in (candidates or _CANDIDATES):
+        perm = _CANDIDATES[name](pattern, structure)
+        permuted = apply_permutation(pattern, perm)
+        new_struct = measure_arrowhead(permuted, arrow_hint=structure.arrow)
+        fill = tile_fill_in(permuted, new_struct, t, total=True)
+        if fill < best_fill:
+            best_name, best_perm, best_fill = name, perm, fill
+    return OrderingResult(best_name, best_perm, base_fill, best_fill,
+                          accepted=best_name != "identity")

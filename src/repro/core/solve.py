@@ -1,0 +1,157 @@
+"""Triangular solves, log-determinant and GMRF sampling from sTiles factors.
+
+INLA (the paper's driving application) needs, per factorization: solves
+``A x = b`` (posterior means), ``log det A`` (Laplace approximations) and
+samples ``L^{-T} z`` (GMRF realizations).  All operate directly on the
+banded-arrowhead CTSF factor without densification.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .cholesky import CholeskyFactor
+from .ctsf import BandedCTSF
+
+__all__ = ["forward_solve", "backward_solve", "solve", "logdet",
+           "sample_gmrf", "marginal_variances"]
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+def _split_rhs(ctsf: BandedCTSF, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    g = ctsf.grid
+    t, ndt, nat = g.t, g.n_diag_tiles, g.n_arrow_tiles
+    b = b.reshape(-1)
+    assert b.shape[0] == g.padded_n, f"rhs must be padded to {g.padded_n}"
+    bd = b[: ndt * t].reshape(ndt, t)
+    ba = b[ndt * t:].reshape(nat, t) if nat else jnp.zeros((0, t), b.dtype)
+    return bd, ba
+
+
+@functools.partial(jax.jit, static_argnames=("grid",))
+def _forward_impl(Dr, R, C, bd, ba, grid):
+    """Solve L y = b."""
+    t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
+    yp = jnp.zeros((ndt + bt, t), bd.dtype)  # bt leading zeros
+
+    def step(k, yp):
+        # y_k = Lkk^{-1} (b_k - sum_{j=1..bt} L[k,k-j] y_{k-j})
+        ywin = jax.lax.dynamic_slice(yp, (k, 0), (bt, t)) if bt else yp[:0]
+        # ywin[bt - j] = y_{k-j}; Dr[k, j] = L[k, k-j]
+        drk = jax.lax.dynamic_slice(Dr, (k, 0, 0, 0), (1, bt + 1, t, t))[0]
+        acc = jnp.einsum("jab,jb->a", jnp.flip(drk[1:], axis=0), ywin,
+                         precision=_HI) if bt else 0.0
+        bk = jax.lax.dynamic_slice(bd, (k, 0), (1, t))[0]
+        yk = jax.scipy.linalg.solve_triangular(drk[0], bk - acc, lower=True)
+        return jax.lax.dynamic_update_slice(yp, yk[None], (k + bt, 0))
+
+    yp = jax.lax.fori_loop(0, ndt, step, yp)
+    yd = yp[bt:]
+
+    if nat:
+        # arrow rows: y_a = Lc^{-1} (b_a - sum_n R[n] y_n), block forward
+        acc = jnp.einsum("niab,nb->ia", R, yd, precision=_HI)
+        ya = jnp.zeros((nat, t), bd.dtype)
+        for i in range(nat):
+            rhs = ba[i] - acc[i]
+            for j in range(i):
+                rhs = rhs - jnp.dot(C[i, j], ya[j], precision=_HI)
+            ya = ya.at[i].set(
+                jax.scipy.linalg.solve_triangular(C[i, i], rhs, lower=True))
+    else:
+        ya = ba
+    return yd, ya
+
+
+@functools.partial(jax.jit, static_argnames=("grid",))
+def _backward_impl(Dr, R, C, yd, ya, grid):
+    """Solve L^T x = y."""
+    t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
+
+    if nat:
+        xa = jnp.zeros((nat, t), yd.dtype)
+        for i in range(nat - 1, -1, -1):
+            rhs = ya[i]
+            for j in range(i + 1, nat):
+                rhs = rhs - jnp.dot(C[j, i].T, xa[j], precision=_HI)
+            xa = xa.at[i].set(jax.scipy.linalg.solve_triangular(
+                C[i, i], rhs, lower=True, trans=1))
+    else:
+        xa = ya
+
+    # band rows, reverse sweep:
+    # x_k = Lkk^{-T}(y_k - sum_{j=1..bt} L[k+j,k]^T x_{k+j} - sum_i R[k,i]^T xa_i)
+    Drp = jnp.pad(Dr, ((0, bt), (0, 0), (0, 0), (0, 0)))  # slack for k+j reads
+    xp = jnp.zeros((ndt + bt, t), yd.dtype)
+
+    jr = jnp.arange(bt)
+
+    def step(i, xp):
+        k = ndt - 1 - i
+        wb = jax.lax.dynamic_slice(Drp, (k + 1, 0, 0, 0), (bt, bt + 1, t, t)) \
+            if bt else Drp[:0]
+        # L[k+j, k] = Drp[k+j, j]  -> wb[j-1, j]
+        sub = wb[jr, jr + 1] if bt else wb[:, 0]
+        xwin = jax.lax.dynamic_slice(xp, (k + 1, 0), (bt, t)) if bt else xp[:0]
+        acc = jnp.einsum("jab,ja->b", sub, xwin, precision=_HI) if bt else 0.0
+        if nat:
+            rk = jax.lax.dynamic_slice(R, (k, 0, 0, 0), (1, nat, t, t))[0]
+            acc = acc + jnp.einsum("iab,ia->b", rk, xa, precision=_HI)
+        yk = jax.lax.dynamic_slice(yd, (k, 0), (1, t))[0]
+        lkk = jax.lax.dynamic_slice(Dr, (k, 0, 0, 0), (1, 1, t, t))[0, 0]
+        xk = jax.scipy.linalg.solve_triangular(lkk, yk - acc, lower=True, trans=1)
+        return jax.lax.dynamic_update_slice(xp, xk[None], (k, 0))
+
+    xp = jax.lax.fori_loop(0, ndt, step, xp)
+    return xp[:ndt], xa
+
+
+def forward_solve(factor: CholeskyFactor, b: jnp.ndarray) -> jnp.ndarray:
+    ctsf = factor.ctsf
+    bd, ba = _split_rhs(ctsf, b)
+    yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, ctsf.grid)
+    return jnp.concatenate([yd.reshape(-1), ya.reshape(-1)])
+
+
+def backward_solve(factor: CholeskyFactor, y: jnp.ndarray) -> jnp.ndarray:
+    ctsf = factor.ctsf
+    yd, ya = _split_rhs(ctsf, y)
+    xd, xa = _backward_impl(ctsf.Dr, ctsf.R, ctsf.C, yd, ya, ctsf.grid)
+    return jnp.concatenate([xd.reshape(-1), xa.reshape(-1)])
+
+
+def solve(factor: CholeskyFactor, b: jnp.ndarray) -> jnp.ndarray:
+    """A x = b via L L^T."""
+    return backward_solve(factor, forward_solve(factor, b))
+
+
+def logdet(factor: CholeskyFactor) -> jnp.ndarray:
+    return factor.logdet()
+
+
+def sample_gmrf(factor: CholeskyFactor, key: jax.Array) -> jnp.ndarray:
+    """Draw x ~ N(0, A^{-1}) via x = L^{-T} z (the INLA sampling primitive)."""
+    z = jax.random.normal(key, (factor.ctsf.grid.padded_n,), dtype=jnp.float32)
+    return backward_solve(factor, z)
+
+
+def marginal_variances(factor: CholeskyFactor,
+                       indices: jnp.ndarray) -> jnp.ndarray:
+    """Selected diagonal of A^{-1} — INLA's posterior marginal variances.
+
+    (A^{-1})_{ii} = ‖L^{-1} e_i‖²; each selected index costs one forward
+    band solve (O(n·b) — the factor is reused across all of INLA's
+    per-latent marginals, which is why factorize-once matters there).
+    """
+    g = factor.ctsf.grid
+
+    def one(i):
+        e = jnp.zeros((g.padded_n,), jnp.float32).at[i].set(1.0)
+        y = forward_solve(factor, e)
+        return jnp.sum(y * y)
+
+    return jax.lax.map(one, jnp.asarray(indices))

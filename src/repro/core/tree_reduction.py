@@ -1,0 +1,72 @@
+"""Tree reduction of accumulation chains (paper §IV-A, Algorithm 3).
+
+The left-looking factorization accumulates k GEMM/SYRK products into one
+tile; executed sequentially that chain is the critical path (paper Table I:
+time grows linearly in k).  Algorithm 3 splits the products into per-worker
+chunks, each worker accumulates its chunk locally, and the partial tiles are
+combined by a binary GEADD tree (Figs. 6–7).
+
+On TPU the same reassociation appears at two levels:
+
+* on-chip: the chunk axis becomes a parallel batch dimension (independent
+  contractions XLA/MXU can overlap) and the log₂-depth pairwise GEADD tree
+  is unrolled at trace time;
+* cross-chip: partials live on different devices and the GEADD tree becomes
+  a `ppermute` butterfly (see ``repro.sharding.collectives.tree_allreduce``).
+
+The paper's enablement heuristic is kept verbatim: use the tree only when
+the number of accumulations is at least twice the number of workers.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+__all__ = ["should_use_tree", "tree_combine", "chunked_tree_sum"]
+
+
+def should_use_tree(n_accumulations: int, n_workers: int) -> bool:
+    """Paper §IV-A: 'at least 2 cores, and ... accumulations at least double
+    the number of cores being used'."""
+    return n_workers >= 2 and n_accumulations >= 2 * n_workers
+
+
+def tree_combine(partials: jnp.ndarray,
+                 add: Optional[Callable] = None) -> jnp.ndarray:
+    """Binary-tree pairwise combine over the leading axis (log₂ depth).
+
+    ``partials``: (c, ...) stacked partial results, returns their sum with
+    tree association order — numerically the paper's GEADD hierarchy.
+    """
+    add = add or ops.geadd
+    while partials.shape[0] > 1:
+        c = partials.shape[0]
+        half = c // 2
+        combined = add(partials[0:2 * half:2], partials[1:2 * half:2])
+        if c % 2:
+            combined = jnp.concatenate([combined, partials[-1:]], axis=0)
+        partials = combined
+    return partials[0]
+
+
+def chunked_tree_sum(terms: jnp.ndarray, n_chunks: int,
+                     add: Optional[Callable] = None) -> jnp.ndarray:
+    """Sum ``terms`` (K, ...) over axis 0 via Algorithm 3.
+
+    K products are split into ``n_chunks`` contiguous ranges (the paper's
+    ``start_range/end_range`` per worker); each chunk is accumulated
+    sequentially (a worker's local loop) and chunk partials are combined by
+    the GEADD tree.  Equivalent to ``terms.sum(0)`` up to fp reassociation.
+    """
+    k = terms.shape[0]
+    n_chunks = max(1, min(n_chunks, k))
+    pad = (-k) % n_chunks
+    if pad:
+        terms = jnp.concatenate(
+            [terms, jnp.zeros((pad,) + terms.shape[1:], terms.dtype)], axis=0)
+    per = terms.shape[0] // n_chunks
+    partials = terms.reshape((n_chunks, per) + terms.shape[1:]).sum(axis=1)
+    return tree_combine(partials, add=add)

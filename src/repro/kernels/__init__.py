@@ -1,0 +1,5 @@
+"""Pallas TPU tile kernels for the sTiles hot spots (POTRF/TRSM/SYRK/GEMM/
+GEADD and the fused band-panel update), with pure-jnp oracles in ref.py."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

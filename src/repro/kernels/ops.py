@@ -1,0 +1,89 @@
+"""Jitted public wrappers for the tile kernels, with backend dispatch.
+
+``impl`` selects between the Pallas TPU kernels (``"pallas"`` — validated on
+CPU through interpret mode, compiled natively on TPU) and the pure-jnp
+references (``"ref"`` — what XLA fuses itself; the default on CPU where
+interpret-mode Python execution would dominate).  The factorization code
+calls these and is oblivious to the backend; tests assert the two agree.
+"""
+from __future__ import annotations
+
+import os
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .potrf import potrf_pallas
+from .trsm import trsm_pallas
+from .gemm import gemm_pallas, syrk_pallas, geadd_pallas
+from .band_update import band_update_pallas
+
+__all__ = ["potrf", "trsm", "syrk", "gemm", "geadd", "band_update",
+           "default_impl"]
+
+Impl = Literal["ref", "pallas", "unrolled"]
+
+
+def default_impl() -> Impl:
+    env = os.environ.get("REPRO_KERNEL_IMPL")
+    if env in ("ref", "pallas", "unrolled"):
+        return env  # type: ignore[return-value]
+    # Pallas natively on TPU; jnp-fused path on CPU (interpret mode is for
+    # validation, not production CPU perf).
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def potrf(a: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return potrf_pallas(a, interpret=_interp())
+    return ref.potrf_ref(a) if a.ndim == 2 else jax.vmap(ref.potrf_ref)(
+        a.reshape((-1,) + a.shape[-2:])).reshape(a.shape)
+
+
+def trsm(l_kk: jnp.ndarray, a_mk: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return trsm_pallas(l_kk, a_mk, interpret=_interp())
+    if a_mk.ndim == 2:
+        return ref.trsm_ref(l_kk, a_mk)
+    flat = a_mk.reshape((-1,) + a_mk.shape[-2:])
+    return jax.vmap(lambda x: ref.trsm_ref(l_kk, x))(flat).reshape(a_mk.shape)
+
+
+def syrk(c_kk: jnp.ndarray, a_kn: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return syrk_pallas(c_kk, a_kn, interpret=_interp())
+    return ref.syrk_ref(c_kk, a_kn)
+
+
+def gemm(c_mk: jnp.ndarray, a_mn: jnp.ndarray, b_kn: jnp.ndarray,
+         impl: Impl | None = None) -> jnp.ndarray:
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return gemm_pallas(c_mk, a_mn, b_kn, interpret=_interp())
+    return ref.gemm_ref(c_mk, a_mn, b_kn)
+
+
+def geadd(a: jnp.ndarray, b: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return geadd_pallas(a, b, interpret=_interp())
+    return ref.geadd_ref(a, b)
+
+
+def band_update(w: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return band_update_pallas(w, interpret=_interp())
+    if impl == "unrolled" or (impl == "ref" and w.shape[0] <= 6):
+        # small bands: skip structurally-zero (e, j) pairs entirely
+        return ref.band_update_unrolled_ref(w)
+    return ref.band_update_ref(w)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: single-tile Cholesky factorization (POTRF).
+
+One (t, t) SPD tile is loaded into VMEM once, factorized in-register with a
+masked right-looking column loop, and written back once.  On the MXU the
+surrounding SYRK/GEMM traffic dominates (O(ndt·b²) matmuls vs O(ndt) POTRFs,
+same as cuSOLVER's role in the paper) so this kernel optimizes for a single
+HBM round-trip rather than peak FLOPs.
+
+The column loop uses only masked vector ops (no dynamic scatters), which maps
+cleanly onto the VPU's (8, 128) lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["potrf_pallas"]
+
+
+def _potrf_kernel(a_ref, o_ref):
+    t = a_ref.shape[-1]
+    a = a_ref[0].astype(jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    rvec = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+
+    def step(j, a):
+        # pivot = a[j, j]
+        pivot = jnp.sum(jnp.where((rows == j) & (cols == j), a, 0.0))
+        dinv = jax.lax.rsqrt(pivot)
+        # column j, scaled: L[i, j] = a[i, j] / sqrt(pivot), rows >= j
+        col = jnp.sum(jnp.where(cols == j, a, 0.0), axis=1) * dinv
+        col = jnp.where(rvec >= j, col, 0.0)
+        # trailing update: a[i, m] -= col[i] * col[m] for i > j, m > j
+        trailing = (rows > j) & (cols > j)
+        a = a - jnp.where(trailing, col[:, None] * col[None, :], 0.0)
+        # write the finished column j
+        a = jnp.where(cols == j, col[:, None], a)
+        return a
+
+    a = jax.lax.fori_loop(0, t, step, a)
+    o_ref[0] = jnp.where(rows >= cols, a, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def potrf_pallas(a: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Cholesky of one (t, t) tile (or a batch (..., t, t) via grid)."""
+    batch_shape = a.shape[:-2]
+    t = a.shape[-1]
+    a3 = a.reshape((-1, t, t))
+    nb = a3.shape[0]
+    out = pl.pallas_call(
+        _potrf_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, t, t), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, t, t), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, t, t), a.dtype),
+        interpret=interpret,
+    )(a3)
+    return out.reshape(batch_shape + (t, t))

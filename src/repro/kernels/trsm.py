@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: off-diagonal tile triangular solve (TRSM).
+
+Computes ``X = A @ L^{-T}`` for one (t, t) tile against the freshly
+factorized diagonal tile L (lower).  Forward substitution over columns with
+masked vector ops; the whole tile lives in VMEM for the duration.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["trsm_pallas"]
+
+
+def _trsm_kernel(l_ref, a_ref, o_ref):
+    t = l_ref.shape[-1]
+    l = l_ref[0].astype(jnp.float32)
+    a = a_ref[0].astype(jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    cvec = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+
+    def step(j, x):
+        # X[:, j] = (A[:, j] - X[:, :j] @ L[j, :j]^T) / L[j, j]
+        lrow = jnp.sum(jnp.where(rows == j, l, 0.0), axis=0)       # L[j, :]
+        lrow_m = jnp.where(cvec < j, lrow, 0.0)
+        ljj = jnp.sum(jnp.where(cvec == j, lrow, 0.0))
+        acol = jnp.sum(jnp.where(cols == j, a, 0.0), axis=1)        # A[:, j]
+        xcol = (acol - jnp.dot(x, lrow_m, precision=jax.lax.Precision.HIGHEST)) / ljj
+        return jnp.where(cols == j, xcol[:, None], x)
+
+    x = jax.lax.fori_loop(0, t, step, jnp.zeros((t, t), jnp.float32))
+    o_ref[0] = x.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def trsm_pallas(l_kk: jnp.ndarray, a_mk: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    """Batched tile TRSM: broadcasting L over a batch of A tiles."""
+    t = a_mk.shape[-1]
+    batch_shape = a_mk.shape[:-2]
+    a3 = a_mk.reshape((-1, t, t))
+    nb = a3.shape[0]
+    l3 = jnp.broadcast_to(l_kk, (nb, t, t)) if l_kk.ndim == 2 else l_kk.reshape((-1, t, t))
+    out = pl.pallas_call(
+        _trsm_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, t, t), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, t, t), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, t, t), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, t, t), a_mk.dtype),
+        interpret=interpret,
+    )(l3, a3)
+    return out.reshape(batch_shape + (t, t))

@@ -1,0 +1,315 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware (deliverable (e)).
+
+For every (architecture × input shape × mesh) cell this lowers + compiles
+the real step function — ``train_step`` (loss+grad+AdamW) for train shapes,
+``prefill`` for prefill shapes, ``decode_step`` for decode shapes — against
+ShapeDtypeStruct stand-ins (no allocation), then records:
+
+  * ``compiled.memory_analysis()``  (bytes/device: proves it fits),
+  * ``compiled.cost_analysis()``    (per-device HLO FLOPs/bytes),
+  * collective bytes parsed from the optimized HLO text,
+  * per-layer-extrapolated FLOPs/bytes/collectives (XLA's cost analysis
+    counts while-loop bodies once, so the roofline terms are derived from
+    1- and 2-layer *unrolled* lowers of the same cell — layers are
+    homogeneous, which is what makes scan-over-layers valid in the first
+    place).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out results/dryrun   # every cell
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ModelConfig, RunConfig, SHAPES, ShapeConfig
+from repro.models.registry import get_model, input_specs, supports_shape
+from repro.optim.adamw import adamw_init
+from repro.sharding.partition import Rules, make_rules
+from .mesh import make_production_mesh
+from .train import TrainState, make_train_step
+
+__all__ = ["dryrun_cell", "collective_bytes", "main"]
+
+# optimized-HLO line: "%name = f32[64,16]{1,0} all-gather(%operand), ..."
+# (operand shapes are NOT inlined, so operand bytes are derived from the
+# result shape + the op's semantics + the replica group size)
+_COLLECTIVE_LINE_RE = re.compile(
+    r"=\s*(?:\()?((?:f|bf|s|u|pred)[0-9]{0,2})\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8": 1}
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes of every collective op in the (optimized) HLO.
+
+    Operand size derivation from the result shape R and group size g:
+      all-reduce / all-to-all / collective-permute : R
+      all-gather                                   : R / g
+      reduce-scatter                               : R * g
+    (-start async variants counted once; -done carries no new bytes).
+    """
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_LINE_RE.search(line)
+        if m is None:
+            continue
+        dt, dims, op = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        result = float(n * nbytes)
+        g = _group_size(line)
+        if op == "all-gather":
+            operand = result / g
+        elif op == "reduce-scatter":
+            operand = result * g
+        else:
+            operand = result
+        out[op] = out.get(op, 0.0) + operand
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def _reduced_layers(cfg: ModelConfig, n: int) -> ModelConfig:
+    upd: Dict[str, Any] = {}
+    if cfg.family == "hybrid":
+        upd["n_layers"] = n * cfg.shared_attn_every
+    else:
+        upd["n_layers"] = n
+    if cfg.family == "encdec":
+        upd["encoder_layers"] = n
+    return dataclasses.replace(cfg, **upd)
+
+
+def _layer_count(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.shared_attn_every
+    return cfg.n_layers
+
+
+def _lower_cell(cfg: ModelConfig, shape: ShapeConfig, run: RunConfig,
+                mesh, rules: Rules):
+    """Build + lower the step function for one cell. Returns `lowered`."""
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    max_seq = shape.seq_len
+
+    if shape.kind == "train":
+        params = jax.eval_shape(lambda k: api.init(k, cfg, max_seq), key)
+        state = TrainState(params=params, opt=adamw_init_shapes(params),
+                           step=jax.ShapeDtypeStruct((), jnp.int32))
+        step_fn = make_train_step(cfg, run, rules)
+        batch = input_specs(cfg, shape)
+        state_sh = TrainState(rules.param_shardings(params),
+                              type(state.opt)(rules.param_shardings(params),
+                                              rules.param_shardings(params),
+                                              rules.replicated()),
+                              rules.replicated(), None, None)
+        rep = rules.replicated()
+        metrics_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+        with mesh:
+            return jax.jit(step_fn, in_shardings=(state_sh, rules.batch_specs(batch)),
+                           out_shardings=(state_sh, metrics_sh),
+                           donate_argnums=(0,)).lower(state, batch)
+
+    if shape.kind == "prefill":
+        params = jax.eval_shape(lambda k: api.init(k, cfg, max_seq), key)
+        batch = input_specs(cfg, shape)
+
+        def prefill_fn(p, b):
+            return api.prefill(p, b, cfg, run, constrain=rules.constrain)
+
+        with mesh:
+            return jax.jit(
+                prefill_fn,
+                in_shardings=(rules.param_shardings(params),
+                              rules.batch_specs(batch)),
+            ).lower(params, batch)
+
+    # decode
+    params = jax.eval_shape(lambda k: api.init(k, cfg, max_seq), key)
+    caches = jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, max_seq))
+    spec = input_specs(cfg, shape)
+    cache_sh = rules.cache_shardings(caches)
+
+    def decode_fn(p, c, tok, pos):
+        return api.decode_step(p, c, tok, pos, cfg, run,
+                               constrain=rules.constrain)
+
+    with mesh:
+        return jax.jit(
+            decode_fn,
+            in_shardings=(rules.param_shardings(params), cache_sh,
+                          rules.batch_specs(spec["token"]), rules.replicated()),
+            out_shardings=(rules.batch_specs(
+                jax.ShapeDtypeStruct((shape.global_batch, cfg.vocab_padded),
+                                     jnp.float32)), cache_sh),
+            donate_argnums=(1,),
+        ).lower(params, caches, spec["token"], spec["pos"])
+
+
+def adamw_init_shapes(params):
+    from repro.optim.adamw import AdamWState
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return AdamWState(m=zeros, v=jax.tree.map(lambda x: x, zeros),
+                      count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool = False,
+                run: Optional[RunConfig] = None,
+                extrapolate: bool = True, verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile one cell; return the §Dry-run record."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    run = run or RunConfig()
+    skip = supports_shape(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh, cfg, run, shape)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "x".join(str(s) for s in mesh.devices.shape),
+                           "status": "ok", "run": dataclasses.asdict(run)}
+
+    t0 = time.time()
+    lowered = _lower_cell(cfg, shape, run, mesh, rules)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "total_per_device_gib": round(
+            (ma.argument_size_in_bytes + ma.output_size_in_bytes
+             + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2 ** 30, 3),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["cost_scanned"] = {"flops": float(ca.get("flops", 0.0)),
+                           "bytes": float(ca.get("bytes accessed", 0.0))}
+    rec["collectives_scanned"] = collective_bytes(compiled.as_text())
+
+    if extrapolate:
+        per = {}
+        for n in (1, 2):
+            cfg_n = _reduced_layers(cfg, n)
+            # unrolled layers AND single-block attention / CE (scan trip
+            # counts are not multiplied by XLA's cost analysis, so every
+            # loop must have trip count 1 for exact FLOP accounting)
+            run_n = dataclasses.replace(
+                run, scan_layers=False, unroll_attn=True,
+                q_chunk=min(4096, shape.seq_len),
+                kv_chunk=min(4096, shape.seq_len),
+                loss_chunk=shape.seq_len)
+            rules_n = make_rules(mesh, cfg_n, run_n, shape)
+            low = _lower_cell(cfg_n, shape, run_n, mesh, rules_n)
+            comp = low.compile()
+            can = comp.cost_analysis() or {}
+            per[n] = {"flops": float(can.get("flops", 0.0)),
+                      "bytes": float(can.get("bytes accessed", 0.0)),
+                      "coll": collective_bytes(comp.as_text())["total"]}
+        L = _layer_count(cfg)
+        rec["cost_extrapolated"] = {
+            k: per[1][k] + (per[2][k] - per[1][k]) * (L - 1)
+            for k in ("flops", "bytes", "coll")}
+        rec["cost_per_layer"] = {k: per[2][k] - per[1][k]
+                                 for k in ("flops", "bytes", "coll")}
+
+    if verbose:
+        mem = rec["memory"]["total_per_device_gib"]
+        fl = rec.get("cost_extrapolated", rec["cost_scanned"])["flops"]
+        print(f"[dryrun] {arch:24s} {shape_name:12s} mesh={rec['mesh']:8s} "
+              f"mem/dev={mem:7.2f} GiB flops/dev={fl:.3e} "
+              f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+    return rec
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=configs.ARCH_IDS)
+    p.add_argument("--shape", choices=list(SHAPES))
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true",
+                   help="run every (arch x shape) cell on this mesh")
+    p.add_argument("--out", default=None, help="directory for JSON records")
+    p.add_argument("--no-extrapolate", action="store_true")
+    args = p.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not (args.arch and args.shape):
+            p.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    records = []
+    for arch, shape in cells:
+        try:
+            rec = dryrun_cell(arch, shape, multi_pod=args.multi_pod,
+                              extrapolate=not args.no_extrapolate)
+        except Exception as exc:  # record, keep going
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "error": f"{type(exc).__name__}: {exc}"}
+            print(f"[dryrun] {arch} {shape} FAILED: {rec['error']}")
+        records.append(rec)
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            mesh_tag = "multi" if args.multi_pod else "single"
+            fn = os.path.join(args.out, f"{rec['arch']}_{rec['shape']}_{mesh_tag}.json")
+            with open(fn, "w") as f:
+                json.dump(rec, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"[dryrun] {n_ok} ok / {n_skip} skipped / {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

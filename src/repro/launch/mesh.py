@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state.  Single pod: 16×16 =
+256 chips (data × model).  Multi-pod: 2 pods × 256 = 512 chips with a
+leading DCN-like ``pod`` axis used for data parallelism + gradient
+all-reduce only.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Mesh over whatever devices exist (tests, examples, CPU runs)."""
+    devs = np.array(jax.devices()[: data * model]).reshape(data, model)
+    return jax.sharding.Mesh(devs, ("data", "model"))

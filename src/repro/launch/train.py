@@ -1,0 +1,251 @@
+"""Training driver: builds the sharded train_step and runs the
+fault-tolerant loop.
+
+``python -m repro.launch.train --arch qwen2-7b --steps 100 ...`` trains a
+(reduced or full) model on synthetic Markov data with AdamW or the sTiles
+arrowhead-preconditioned optimizer.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import ModelConfig, RunConfig, SHAPES
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.synthetic import MarkovStream, token_batch
+from repro.models.registry import get_model, input_specs
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_lr)
+from repro.optim.arrowhead import ArrowheadPrecond, build_precond
+from repro.runtime.fault_tolerance import TrainLoop
+from repro.sharding.partition import Rules, make_rules
+from .mesh import make_local_mesh, make_production_mesh
+
+__all__ = ["TrainState", "make_train_step", "init_state", "train", "main"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    step: jnp.ndarray
+    precond: Optional[Dict[str, jnp.ndarray]] = None   # arrowhead stats
+    factor: Optional[Dict[str, jnp.ndarray]] = None    # arrowhead factor
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step, self.precond, self.factor), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_state(key, cfg: ModelConfig, run: RunConfig, max_seq: int = 0,
+               precond: Optional[ArrowheadPrecond] = None) -> TrainState:
+    api = get_model(cfg)
+    params = api.init(key, cfg, max_seq)
+    state = TrainState(params=params, opt=adamw_init(params),
+                       step=jnp.zeros((), jnp.int32))
+    if precond is not None:
+        state.precond = precond.init_state()
+        state.factor = precond.factorize(state.precond)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, rules: Optional[Rules],
+                    precond: Optional[ArrowheadPrecond] = None,
+                    total_steps: int = 10_000):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    api = get_model(cfg)
+    constrain = rules.constrain if rules is not None else None
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        def loss_fn(p, b):
+            return api.loss(p, b, cfg, run, constrain=constrain)
+
+        if run.grad_accum > 1:
+            # microbatched gradient accumulation: reshape every batch leaf
+            # (B, ...) -> (A, B/A, ...) and scan, peaking one microbatch of
+            # activations at a time
+            a = run.grad_accum
+            micro = jax.tree.map(
+                lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]), batch)
+
+            def accum(carry, mb):
+                acc, ltot = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                acc = jax.tree.map(
+                    lambda x, y: x + y.astype(jnp.float32), acc, g)
+                return (acc, ltot + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            from repro.models.layers import scan_or_unroll
+            (gsum, lsum), _ = scan_or_unroll(
+                accum, (zeros, jnp.zeros((), jnp.float32)), micro,
+                scan=run.scan_layers, remat="none")
+            grads = jax.tree.map(lambda x: x / a, gsum)
+            loss = lsum / a
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+
+        new_precond, new_factor = state.precond, state.factor
+        if precond is not None:
+            new_precond = precond.update_stats(state.precond, grads)
+            refresh = (state.step % run.precond_every) == 0
+            refreshed = precond.factorize(new_precond)
+            new_factor = jax.tree.map(
+                lambda a, b: jnp.where(refresh, a, b), refreshed, state.factor)
+            grads = precond.precondition(new_factor, grads)
+
+        lr = cosine_lr(state.step, run.learning_rate,
+                       warmup=max(2, total_steps // 10), total=total_steps)
+        new_params, new_opt = adamw_update(
+            grads, state.opt, state.params, lr,
+            weight_decay=run.weight_decay)
+        new_state = TrainState(new_params, new_opt, state.step + 1,
+                               new_precond, new_factor)
+        return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return train_step
+
+
+def shard_train_step(train_step, mesh, rules: Rules, state: TrainState,
+                     batch_template) -> Tuple[Any, Any]:
+    """jit the step with explicit state/batch shardings; returns
+    (jitted_fn, state_shardings)."""
+    param_sh = rules.param_shardings(state.params)
+    opt_sh = AdamWState(m=param_sh, v=param_sh,
+                        count=rules.replicated())
+    rep = rules.replicated()
+    pre_sh = None if state.precond is None else jax.tree.map(
+        lambda _: rep, state.precond)
+    fac_sh = None if state.factor is None else jax.tree.map(
+        lambda _: rep, state.factor)
+    state_sh = TrainState(param_sh, opt_sh, rep, pre_sh, fac_sh)
+    batch_sh = rules.batch_specs(batch_template)
+    metrics_sh = {"loss": rep, "grad_norm": rep, "lr": rep}
+    fn = jax.jit(train_step, in_shardings=(state_sh, batch_sh),
+                 out_shardings=(state_sh, metrics_sh), donate_argnums=(0,))
+    return fn, state_sh
+
+
+# ---------------------------------------------------------------------------
+# CLI driver (runs reduced configs on local devices; full configs dry-run
+# through launch/dryrun.py)
+# ---------------------------------------------------------------------------
+
+def reduce_config(cfg: ModelConfig, layers: int = 4, d_model: int = 256,
+                  vocab: int = 512) -> ModelConfig:
+    """Scale an assigned architecture down to laptop size, preserving family
+    structure (used by smoke tests and the quickstart examples)."""
+    factor = max(1, cfg.d_model // d_model)
+    upd = dict(
+        n_layers=min(cfg.n_layers, layers), d_model=cfg.d_model // factor,
+        d_ff=max(8, cfg.d_ff // factor), vocab=min(cfg.vocab, vocab),
+        head_dim=max(8, cfg.hd // factor // 2 * 2),   # rope needs even dims
+    )
+    if cfg.family in ("ssm", "hybrid"):
+        upd["ssm_head_dim"] = max(8, cfg.ssm_head_dim // factor)
+        upd["ssm_state"] = min(cfg.ssm_state, 32)
+    if cfg.family == "hybrid":
+        upd["n_layers"] = cfg.shared_attn_every * max(
+            1, min(cfg.n_layers, layers) // cfg.shared_attn_every)
+    if cfg.family == "moe":
+        upd["n_experts"] = min(cfg.n_experts, 8)
+        upd["top_k"] = min(cfg.top_k, 2)
+        upd["expert_pad_to"] = 0
+    if cfg.family == "encdec":
+        upd["encoder_layers"] = min(cfg.encoder_layers, layers)
+        upd["encoder_seq"] = min(cfg.encoder_seq, 64)
+    if cfg.family == "vlm":
+        upd["n_image_tokens"] = min(cfg.n_image_tokens, 8)
+    return dataclasses.replace(cfg, **upd)
+
+
+def train(arch: str, steps: int = 50, batch: int = 8, seq: int = 128,
+          optimizer: str = "adamw", reduced: bool = True,
+          checkpoint_dir: str = "/tmp/repro_ckpt", seed: int = 0,
+          log_every: int = 10, injector=None) -> Dict[str, Any]:
+    cfg = configs.get(arch)
+    if reduced:
+        cfg = reduce_config(cfg)
+    run = RunConfig(optimizer=optimizer, remat="none", loss_chunk=128,
+                    checkpoint_every=max(10, steps // 4))
+    mesh = make_local_mesh()
+    rules = make_rules(mesh, cfg, run)
+    key = jax.random.PRNGKey(seed)
+
+    precond = None
+    api = get_model(cfg)
+    if optimizer == "arrowhead":
+        params0 = jax.eval_shape(lambda k: api.init(k, cfg, seq), key)
+        precond = build_precond(params0, r=run.precond_proj_dim,
+                                band=run.precond_band, seed=seed)
+    state = init_state(key, cfg, run, max_seq=seq, precond=precond)
+    step_fn = make_train_step(cfg, run, rules, precond, total_steps=steps)
+    jit_step, state_sh = shard_train_step(step_fn, mesh, rules, state,
+                                          _host_batch(cfg, 0, batch, seq, seed))
+
+    ckpt = Checkpointer(checkpoint_dir, keep=2)
+    stream = MarkovStream(cfg.vocab, seed=seed)
+
+    def batch_fn(step):
+        extras = _extras(cfg, batch)
+        return stream.batch(step, batch, seq, extras)
+
+    loop = TrainLoop(step_fn=jit_step, batch_fn=batch_fn, checkpointer=ckpt,
+                     checkpoint_every=run.checkpoint_every,
+                     injector=injector, log_every=log_every)
+    with mesh:
+        final = loop.run(state, 0, steps)
+    losses = [float(m["loss"]) for m in loop.history]
+    return {"state": final, "losses": losses, "loop": loop,
+            "entropy_floor": stream.entropy_floor, "cfg": cfg}
+
+
+def _extras(cfg, batch):
+    extras = {}
+    if cfg.family == "vlm":
+        extras["image_embeds"] = np.zeros(
+            (batch, cfg.n_image_tokens, cfg.d_model), np.float32)
+    if cfg.family == "encdec":
+        extras["frame_embeds"] = np.random.default_rng(0).standard_normal(
+            (batch, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    return extras
+
+
+def _host_batch(cfg, step, batch, seq, seed):
+    return token_batch(seed, step, batch, seq, cfg.vocab, _extras(cfg, batch))
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen2-7b", choices=configs.ARCH_IDS)
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--optimizer", default="adamw",
+                   choices=["adamw", "arrowhead"])
+    p.add_argument("--full", action="store_true",
+                   help="use the full (not reduced) architecture config")
+    p.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    args = p.parse_args()
+    out = train(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+                optimizer=args.optimizer, reduced=not args.full,
+                checkpoint_dir=args.checkpoint_dir)
+    print(f"first loss {out['losses'][0]:.4f} -> last {out['losses'][-1]:.4f} "
+          f"(markov entropy floor {out['entropy_floor']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,510 @@
+"""Shared model building blocks: norms, rotary, chunked (flash-style)
+attention with GQA, gated MLPs.
+
+All pure functions over plain dict pytrees (no framework dependency).
+Long-context memory discipline: attention never materializes the full
+(S, S) score matrix — query blocks are scanned and key/value blocks stream
+through an online-softmax accumulator, so `prefill_32k` lowers with
+O(S · kv_chunk) live scores per chip.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "embed_init", "rms_norm", "layer_norm", "apply_rope",
+    "chunked_attention", "decode_attention", "attention_params",
+    "attention_apply", "mlp_params", "mlp_apply", "norm_params", "norm_apply",
+    "chunked_cross_entropy", "scan_or_unroll",
+]
+
+_F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=_F32) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), _F32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=_F32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), _F32) * 0.02).astype(dtype)
+
+
+def norm_params(d: int, kind: str = "rms") -> Dict[str, jnp.ndarray]:
+    p = {"scale": jnp.ones((d,), _F32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), _F32)
+    return p
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(_F32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(_F32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale + bias).astype(dt)
+
+
+def norm_apply(p: Dict[str, jnp.ndarray], x: jnp.ndarray, kind: str = "rms"):
+    if kind == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=_F32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, :, None].astype(_F32) * freqs[None, None, :]   # (B,S,half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(_F32), x[..., half:].astype(_F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _chunk_size(total: int, want: int) -> int:
+    c = min(want, total)
+    while total % c:
+        c -= 1
+    return max(1, c)
+
+
+def _flash_fwd_blocks(qs, ks, vs, causal: bool, q_offset: int):
+    """Forward over pre-chunked blocks.
+
+    qs: (nq, B, qc, KV, G, D) pre-scaled; ks/vs: (nk, B, kc, KV, D).
+    Returns outs (nq, B, qc, KV, G, D) f32-accumulated (cast by caller) and
+    lse (nq, B, KV, G, qc) — the only O(S) softmax residual.
+    """
+    nq, B, qc, KV, G, D = qs.shape
+    nk, _, kc = vs.shape[:3]
+    q_iota = jnp.arange(qc)
+    k_iota = jnp.arange(kc)
+
+    def q_block(_, xs):
+        qi, qblk = xs
+
+        def kv_step(carry, kv_xs):
+            m, l, acc = carry
+            ki, kblk, vblk = kv_xs
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=_F32)
+            if causal:
+                qpos = qi * qc + q_offset + q_iota
+                kpos = ki * kc + k_iota
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk, preferred_element_type=_F32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, G, qc), -1e30, _F32),
+                jnp.zeros((B, KV, G, qc), _F32),
+                jnp.zeros((B, KV, G, qc, D), _F32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (jnp.arange(nk), ks, vs))
+        l = jnp.maximum(l, 1e-30)
+        out = (acc / l[..., None]).transpose(0, 3, 1, 2, 4)   # (B,qc,KV,G,D)
+        return None, (out, m + jnp.log(l))
+
+    _, (outs, lse) = jax.lax.scan(q_block, None, (jnp.arange(nq), qs))
+    return outs, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal: bool, q_chunk: int, kv_chunk: int, q_offset: int):
+    """Flash attention core (q pre-scaled).  O(S) residuals via custom VJP:
+    the backward pass recomputes score blocks instead of saving them (the
+    score tensor never exists at O(S²) — forward or backward)."""
+    out, _ = _flash_vjp_fwd(q, k, v, causal, q_chunk, kv_chunk, q_offset)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal, q_chunk, kv_chunk, q_offset):
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qc = _chunk_size(Sq, q_chunk)
+    kc = _chunk_size(Skv, kv_chunk)
+    nq, nk = Sq // qc, Skv // kc
+    qs = q.reshape(B, nq, qc, KV, G, D).swapaxes(0, 1)
+    ks = k.reshape(B, nk, kc, KV, D).swapaxes(0, 1)
+    vs = v.reshape(B, nk, kc, KV, D).swapaxes(0, 1)
+    outs, lse = _flash_fwd_blocks(qs, ks, vs, causal, q_offset)
+    out = outs.swapaxes(0, 1).reshape(B, Sq, H, D).astype(q.dtype)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, q_chunk, kv_chunk, q_offset, res, do):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qc = _chunk_size(Sq, q_chunk)
+    kc = _chunk_size(Skv, kv_chunk)
+    nq, nk = Sq // qc, Skv // kc
+    qs = q.reshape(B, nq, qc, KV, G, D).swapaxes(0, 1)
+    ks = k.reshape(B, nk, kc, KV, D).swapaxes(0, 1)
+    vs = v.reshape(B, nk, kc, KV, D).swapaxes(0, 1)
+    dos = do.reshape(B, nq, qc, KV, G, D).swapaxes(0, 1)
+    outs = out.reshape(B, nq, qc, KV, G, D).swapaxes(0, 1)
+    # delta_i = rowsum(dO * O)  -> (nq, B, KV, G, qc)
+    delta = jnp.einsum("nbqhgd,nbqhgd->nbhgq", dos.astype(_F32),
+                       outs.astype(_F32))
+    q_iota = jnp.arange(qc)
+    k_iota = jnp.arange(kc)
+
+    def q_block(carry, xs):
+        dk, dv = carry
+        qi, qblk, doblk, lse_i, delta_i = xs
+
+        def kv_step(carry2, kv_xs):
+            dq_i, dk, dv = carry2
+            ki, kblk, vblk = kv_xs
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=_F32)
+            if causal:
+                qpos = qi * qc + q_offset + q_iota
+                kpos = ki * kc + k_iota
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            p = jnp.exp(s - lse_i[..., None])                      # (B,KV,G,qc,kc)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", doblk, vblk,
+                            preferred_element_type=_F32)
+            ds = p * (dp - delta_i[..., None])
+            dq_i = dq_i + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kblk,
+                                     preferred_element_type=_F32)
+            dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qblk,
+                              preferred_element_type=_F32)
+            dv_j = jnp.einsum("bhgqk,bqhgd->bkhd", p, doblk,
+                              preferred_element_type=_F32)
+            dk = dk.at[ki].add(dk_j)
+            dv = dv.at[ki].add(dv_j)
+            return (dq_i, dk, dv), None
+
+        init = (jnp.zeros((B, qc, KV, G, D), _F32), dk, dv)
+        (dq_i, dk, dv), _ = jax.lax.scan(kv_step, init,
+                                         (jnp.arange(nk), ks, vs))
+        return (dk, dv), dq_i
+
+    dk0 = jnp.zeros((nk, B, kc, KV, D), _F32)
+    dv0 = jnp.zeros((nk, B, kc, KV, D), _F32)
+    (dk, dv), dqs = jax.lax.scan(
+        q_block, (dk0, dv0), (jnp.arange(nq), qs, dos, lse, delta))
+    dq = dqs.swapaxes(0, 1).reshape(B, Sq, H, D).astype(q.dtype)
+    dk = dk.swapaxes(0, 1).reshape(B, Skv, KV, D).astype(k.dtype)
+    dv = dv.swapaxes(0, 1).reshape(B, Skv, KV, D).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def _attention_blocked_unrolled(q, k, v, causal, q_chunk, kv_chunk, q_offset):
+    """Same blocked math with Python-level loops (no lax.scan).  Used by the
+    roofline harness: XLA cost analysis does not multiply while-loop bodies
+    by trip count, so analysis lowerings must contain no loops."""
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    qc = _chunk_size(Sq, q_chunk)
+    kc = _chunk_size(Skv, kv_chunk)
+    nq, nk = Sq // qc, Skv // kc
+    q5 = q.reshape(B, nq, qc, KV, G, D)
+    k4 = k.reshape(B, nk, kc, KV, D)
+    v4 = v.reshape(B, nk, kc, KV, D)
+    outs = []
+    for qi in range(nq):
+        m = jnp.full((B, KV, G, qc), -1e30, _F32)
+        l = jnp.zeros((B, KV, G, qc), _F32)
+        acc = jnp.zeros((B, KV, G, qc, D), _F32)
+        for ki in range(nk):
+            if causal and ki * kc > qi * qc + q_offset + qc - 1:
+                continue  # fully masked block: skip (saves the extra flops)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q5[:, qi], k4[:, ki],
+                           preferred_element_type=_F32)
+            if causal:
+                qpos = qi * qc + q_offset + jnp.arange(qc)
+                kpos = ki * kc + jnp.arange(kc)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v4[:, ki], preferred_element_type=_F32)
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.transpose(0, 3, 1, 2, 4).reshape(B, qc, H, D))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, q_chunk: int = 512,
+                      kv_chunk: int = 1024, q_offset: int = 0,
+                      unroll: bool = False) -> jnp.ndarray:
+    """Flash attention.  q: (B,Sq,H,D), k/v: (B,Skv,KV,D) -> (B,Sq,H,D).
+
+    KV blocks stream through an online-softmax accumulator; the custom VJP
+    recomputes score blocks in the backward pass, so live score memory is
+    (B, KV, G, qc, kc) in *both* directions and the only O(S) extras are the
+    log-sum-exp statistics.  ``unroll=True`` emits loop-free HLO (and skips
+    fully-masked causal blocks) for the cost-analysis harness.
+    """
+    scale = q.shape[-1] ** -0.5
+    if unroll:
+        return _attention_blocked_unrolled(q * scale, k, v, causal,
+                                           q_chunk, kv_chunk, q_offset)
+    return _flash(q * scale, k, v, causal, q_chunk, kv_chunk, q_offset)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     cache_len: jnp.ndarray, softcap: float = 0.0) -> jnp.ndarray:
+    """Single-token attention against a (possibly partially filled) cache.
+
+    q: (B, 1, H, D); caches: (B, T, KV, D); cache_len: () or (B,) valid length
+    (the new token's position is cache_len, attended inclusively).
+    """
+    B, _, H, D = q.shape
+    _, T, KV, _ = k_cache.shape
+    G = H // KV
+    q5 = (q * D ** -0.5).reshape(B, KV, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", q5, k_cache, preferred_element_type=_F32)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(T)
+    valid = pos[None, :] <= jnp.asarray(cache_len).reshape(-1, 1)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache, preferred_element_type=_F32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + apply)
+# ---------------------------------------------------------------------------
+
+def attention_params(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                     bias: bool = False, qk_norm: bool = False,
+                     d_kv_model: Optional[int] = None) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    dkv = d_kv_model or d_model
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim),
+        "wk": dense_init(ks[1], dkv, n_kv * head_dim),
+        "wv": dense_init(ks[2], dkv, n_kv * head_dim),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), _F32)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), _F32)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), _F32)
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), _F32)
+        p["k_norm"] = jnp.ones((head_dim,), _F32)
+    return p
+
+
+def _project_qkv(p, x, kv_x, n_heads, n_kv, head_dim, dtype):
+    B, S, _ = x.shape
+    Skv = kv_x.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dh->bsh", kv_x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dh->bsh", kv_x, p["wv"].astype(dtype))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dtype), k + p["bk"].astype(dtype), v + p["bv"].astype(dtype)
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, Skv, n_kv, head_dim)
+    v = v.reshape(B, Skv, n_kv, head_dim)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def attention_apply(p: Dict[str, Any], x: jnp.ndarray, *,
+                    n_heads: int, n_kv: int, head_dim: int,
+                    positions: Optional[jnp.ndarray] = None,
+                    rope_theta: float = 10_000.0, use_rope: bool = True,
+                    causal: bool = True, kv_x: Optional[jnp.ndarray] = None,
+                    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    cache_len: Optional[jnp.ndarray] = None,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    unroll: bool = False,
+                    constrain=None) -> Tuple[jnp.ndarray, Optional[Tuple]]:
+    """Full attention block.  Returns (out, new_cache).
+
+    Modes:
+      * training/prefill: cache=None -> chunked causal attention; if
+        ``cache_len`` is given the computed k/v are returned for caching.
+      * decode: cache=(k,v) -> append one token at ``cache_len``, attend.
+      * cross: kv_x set, causal=False, use_rope=False (whisper decoder).
+    """
+    dtype = x.dtype
+    kv_src = kv_x if kv_x is not None else x
+    q, k, v = _project_qkv(p, x, kv_src, n_heads, n_kv, head_dim, dtype)
+    if constrain is not None:
+        q, k, v = constrain(q, "qkv"), constrain(k, "kv"), constrain(v, "kv")
+
+    new_cache = None
+    if cache is not None:
+        k_cache, v_cache = cache
+        pos = jnp.asarray(cache_len)
+        if use_rope:
+            q = apply_rope(q, pos.reshape(1, 1) * jnp.ones((1, 1), jnp.int32),
+                           rope_theta)
+            k = apply_rope(k, pos.reshape(1, 1) * jnp.ones((1, 1), jnp.int32),
+                           rope_theta)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, pos.astype(jnp.int32), 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, pos.astype(jnp.int32), 0, 0))
+        out = decode_attention(q, k_cache.astype(dtype), v_cache.astype(dtype), pos)
+        new_cache = (k_cache, v_cache)
+    else:
+        if use_rope:
+            S = x.shape[1]
+            positions = positions if positions is not None else jnp.arange(S)
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+        out = chunked_attention(q, k, v, causal=causal, q_chunk=q_chunk,
+                                kv_chunk=kv_chunk, unroll=unroll)
+        if cache_len is not None:           # prefill: hand k/v to the caller
+            new_cache = (k, v)
+    out = out.reshape(out.shape[0], out.shape[1], n_heads * head_dim)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dtype))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(key, d_model: int, d_ff: int, act: str = "silu",
+               bias: bool = False) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d_model, d_ff),
+         "wo": dense_init(ks[1], d_ff, d_model)}
+    if act == "silu":
+        p["wg"] = dense_init(ks[2], d_model, d_ff)
+    if bias:
+        p["bi"] = jnp.zeros((d_ff,), _F32)
+        p["bo"] = jnp.zeros((d_model,), _F32)
+    return p
+
+
+def chunked_cross_entropy(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray,
+                          softcap: float = 0.0, chunk: int = 512,
+                          transpose_w: bool = False) -> jnp.ndarray:
+    """Mean next-token CE without materializing full (B, S, V) logits.
+
+    h: (B, S, D); w: (D, V) (or (V, D) with transpose_w); labels: (B, S),
+    -1 = masked.  Scans sequence chunks; each chunk's logits are a rematted
+    temporary, bounding live logit memory to (B, chunk, V).
+    """
+    B, S, D = h.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    hs = h.reshape(B, nc, c, D).swapaxes(0, 1)
+    ls = labels.reshape(B, nc, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hb, lb = xs
+        if transpose_w:
+            logits = jnp.einsum("bsd,vd->bsv", hb, w.astype(hb.dtype))
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", hb, w.astype(hb.dtype))
+        logits = logits.astype(_F32)
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, jnp.maximum(lb, 0)[..., None],
+                                  axis=-1)[..., 0]
+        mask = (lb >= 0).astype(_F32)
+        tot, cnt = carry
+        return (tot + jnp.sum((logz - tgt) * mask), cnt + mask.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), _F32), jnp.zeros((), _F32)),
+                                 (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def scan_or_unroll(body, carry, xs, *, scan: bool, remat: str):
+    """Run `body(carry, xs_slice)` over the leading axis of ``xs`` — either as
+    a `lax.scan` (small HLO; production) or a Python unroll (used by the
+    roofline harness where while-loop cost accounting would undercount).
+    """
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    if scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda x: x[i], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def mlp_apply(p: Dict[str, Any], x: jnp.ndarray, act: str = "silu",
+              constrain=None) -> jnp.ndarray:
+    dtype = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dtype))
+    if "bi" in p:
+        h = h + p["bi"].astype(dtype)
+    if act == "silu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dtype))
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    if constrain is not None:
+        h = constrain(h, "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(dtype)
+    return out

@@ -1,0 +1,306 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-scan formulation.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the sequence is
+split into chunks of Q tokens; within a chunk the recurrence is computed as
+a (masked, decay-weighted) quadratic attention-like contraction; across
+chunks a small (H, P, N) state is carried by a `lax.scan`.  Decode keeps the
+recurrent form: O(1) state update per token — this is why the `long_500k`
+shape runs for the SSM/hybrid architectures and is skipped for full
+attention.
+
+Block layout (mamba2-1.3b): in_proj -> [z | x | B | C | dt], short causal
+depthwise conv on (x|B|C), SSD core, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from . import layers as L
+
+__all__ = ["mamba_params", "mamba_apply", "mamba_decode", "init_mamba_cache",
+           "ssd_chunked", "ssd_decode", "init", "loss", "prefill", "decode_step",
+           "init_cache"]
+
+_F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, d_skip, chunk: int = 64):
+    """SSD forward.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); a_log: (H,);
+    bmat/cmat: (B, S, G, N); d_skip: (H,).  Returns (y, final_state) with
+    final_state (B, G, HG, P, N).
+    """
+    B, S, H, P = x.shape
+    G, N = bmat.shape[2], bmat.shape[3]
+    HG = H // G
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    A = -jnp.exp(a_log.astype(_F32))                    # (H,) negative
+    a = dt.astype(_F32) * A                              # (B,S,H)
+    ag = a.reshape(B, nc, Q, G, HG)
+    cum = jnp.cumsum(ag, axis=2)                         # (B,nc,Q,G,HG)
+
+    xg = x.reshape(B, nc, Q, G, HG, P).astype(_F32)
+    dtg = dt.reshape(B, nc, Q, G, HG).astype(_F32)
+    dtx = xg * dtg[..., None]
+    bg = bmat.reshape(B, nc, Q, G, N).astype(_F32)
+    cg = cmat.reshape(B, nc, Q, G, N).astype(_F32)
+
+    # ---- intra-chunk (quadratic within Q) -------------------------------
+    scores = jnp.einsum("bcqgn,bckgn->bcqkg", cg, bg)
+    seg = cum[:, :, :, None] - cum[:, :, None]           # (B,nc,Q,Q,G,HG)
+    iq = jnp.arange(Q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None, None]
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+    att = scores[..., None] * decay                      # (B,nc,Q,Q,G,HG)
+    y_intra = jnp.einsum("bcqkgh,bckghp->bcqghp", att, dtx)
+
+    # ---- chunk states ----------------------------------------------------
+    last = cum[:, :, -1:]                                # (B,nc,1,G,HG)
+    w = jnp.exp(last - cum)                              # decay to chunk end
+    state_c = jnp.einsum("bckghp,bckgh,bckgn->bcghpn", dtx, w, bg)
+
+    # ---- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(last[:, :, 0])                 # (B,nc,G,HG)
+
+    def step(h, xs):
+        dec, s = xs
+        h_new = h * dec[..., None, None] + s
+        return h_new, h                                   # emit state *before*
+
+    h0 = jnp.zeros((B, G, HG, P, N), _F32)
+    final, h_prev = jax.lax.scan(
+        step, h0, (chunk_decay.swapaxes(0, 1), state_c.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                        # (B,nc,G,HG,P,N)
+
+    y_inter = jnp.einsum("bcqgn,bcqgh,bcghpn->bcqghp", cg, jnp.exp(cum), h_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + x.astype(_F32) * d_skip.astype(_F32)[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode(state, x, dt, a_log, bvec, cvec, d_skip):
+    """One-token SSD update.  x: (B,H,P); dt: (B,H); b/c: (B,G,N);
+    state: (B,G,HG,P,N)."""
+    B, H, P = x.shape
+    G, N = bvec.shape[1], bvec.shape[2]
+    HG = H // G
+    A = -jnp.exp(a_log.astype(_F32))
+    ag = (dt.astype(_F32) * A).reshape(B, G, HG)
+    xg = x.reshape(B, G, HG, P).astype(_F32)
+    dtx = xg * dt.reshape(B, G, HG)[..., None]
+    new_state = (state * jnp.exp(ag)[..., None, None]
+                 + jnp.einsum("bghp,bgn->bghpn", dtx, bvec.astype(_F32)))
+    y = jnp.einsum("bgn,bghpn->bghp", cvec.astype(_F32), new_state)
+    y = y.reshape(B, H, P) + x.astype(_F32) * d_skip.astype(_F32)[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": L.norm_params(d, "rms"),
+        "w_in": L.dense_init(ks[0], d, 2 * di + 2 * g * n + h),
+        "conv": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), _F32) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), _F32),
+        "a_log": jnp.zeros((h,), _F32),
+        "d_skip": jnp.ones((h,), _F32),
+        "dt_bias": jnp.full((h,), -2.0, _F32),
+        "gate_norm": jnp.ones((di,), _F32),
+        "w_out": L.dense_init(ks[3], di, d),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di: di + di + 2 * g * n]
+    dt = proj[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, kernel, bias):
+    """Depthwise causal conv, width w: sum of shifted copies (w is 4)."""
+    w = kernel.shape[0]
+    out = xbc * kernel[-1]
+    for i in range(1, w):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * kernel[-1 - i]
+    return out + bias
+
+
+def mamba_apply(p, h, cfg: ModelConfig, chunk: int = 64, constrain=None,
+                return_state: bool = False):
+    """Full-sequence Mamba2 block (training / prefill)."""
+    dtype = h.dtype
+    di, g, n, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    B, S, _ = h.shape
+    hn = L.rms_norm(h, p["ln"]["scale"])
+    proj = jnp.einsum("bsd,dk->bsk", hn, p["w_in"].astype(dtype))
+    z, xbc, dt = _split_proj(proj, cfg)
+    conv_tail = xbc[:, -cfg.ssm_conv:]          # raw inputs for decode carry
+    xbc = _causal_conv(xbc, p["conv"].astype(dtype), p["conv_b"].astype(dtype))
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :di].reshape(B, S, nh, cfg.ssm_head_dim)
+    bmat = xbc[..., di: di + g * n].reshape(B, S, g, n)
+    cmat = xbc[..., di + g * n:].reshape(B, S, g, n)
+    dt = jax.nn.softplus(dt.astype(_F32) + p["dt_bias"])
+    if constrain is not None:
+        x = constrain(x, "ssm_x")
+    y, final_state = ssd_chunked(x, dt, p["a_log"], bmat, cmat, p["d_skip"],
+                                 chunk=chunk)
+    y = y.reshape(B, S, di)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(_F32)).astype(dtype), p["gate_norm"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"].astype(dtype))
+    if return_state:
+        return h + out, (final_state, conv_tail)
+    return h + out, None
+
+
+def mamba_decode(p, h, cache, cfg: ModelConfig):
+    """One-token Mamba2 step.  h: (B, 1, d); cache: dict(state, conv)."""
+    dtype = h.dtype
+    di, g, n, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    B = h.shape[0]
+    hn = L.rms_norm(h[:, 0], p["ln"]["scale"])
+    proj = jnp.einsum("bd,dk->bk", hn, p["w_in"].astype(dtype))
+    z, xbc, dt = _split_proj(proj, cfg)
+    # conv over the rolling buffer
+    conv_buf = jnp.concatenate([cache["conv"][:, 1:], xbc[:, None]], axis=1)
+    kernel = p["conv"].astype(dtype)
+    xbc = (conv_buf * kernel[None]).sum(axis=1) + p["conv_b"].astype(dtype)
+    xbc = jax.nn.silu(xbc)
+    x = xbc[..., :di].reshape(B, nh, cfg.ssm_head_dim)
+    bvec = xbc[..., di: di + g * n].reshape(B, g, n)
+    cvec = xbc[..., di + g * n:].reshape(B, g, n)
+    dt = jax.nn.softplus(dt.astype(_F32) + p["dt_bias"])
+    y, new_state = ssd_decode(cache["state"], x, dt, p["a_log"], bvec, cvec,
+                              p["d_skip"])
+    y = y.reshape(B, di)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(_F32)).astype(dtype),
+                   p["gate_norm"])
+    out = jnp.einsum("bk,kd->bd", y, p["w_out"].astype(dtype))
+    new_cache = {"state": new_state, "conv": conv_buf}
+    return h + out[:, None], new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, n_layers: Optional[int] = None,
+                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    hg = cfg.ssm_heads // g
+    conv_ch = cfg.d_inner + 2 * g * n
+    return {
+        "state": jnp.zeros((nl, batch, g, hg, cfg.ssm_head_dim, n), _F32),
+        "conv": jnp.zeros((nl, batch, cfg.ssm_conv, conv_ch), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 LM (attention-free)
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig, max_seq: int = 0) -> Dict[str, Any]:
+    ke, ku, kl = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model),
+        "final_norm": L.norm_params(cfg.d_model, "rms"),
+        "layers": jax.vmap(lambda k: mamba_params(k, cfg))(lkeys),
+        "unembed": L.dense_init(ku, cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return init_mamba_cache(cfg, batch, dtype=dtype)
+
+
+def _forward(params, h, cfg, run, constrain=None):
+    def body(h, lp):
+        h, _ = mamba_apply(lp, h, cfg, chunk=run.ssd_chunk,
+                           constrain=constrain)
+        if constrain is not None:
+            h = constrain(h, "act")
+        return h, None
+
+    h, _ = L.scan_or_unroll(body, h, params["layers"],
+                            scan=run.scan_layers, remat=run.remat)
+    return h
+
+
+def loss(params, batch, cfg: ModelConfig, run: RunConfig, constrain=None):
+    dtype = jnp.dtype(run.compute_dtype)
+    tokens, labels = batch["tokens"], batch["labels"]
+    h = params["embed"][tokens].astype(dtype)
+    if constrain is not None:
+        h = constrain(h, "act")
+    h = _forward(params, h, cfg, run, constrain)
+    h = L.rms_norm(h, params["final_norm"]["scale"])
+    return L.chunked_cross_entropy(h, params["unembed"], labels,
+                                   chunk=run.loss_chunk)
+
+
+def prefill(params, tokens, cfg: ModelConfig, run: RunConfig,
+            image_embeds=None, constrain=None):
+    """Prefill = full forward, collecting final SSM state per layer."""
+    dtype = jnp.dtype(run.compute_dtype)
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(dtype)
+
+    def body(h, lp):
+        h, (state, conv_tail) = mamba_apply(lp, h, cfg, chunk=run.ssd_chunk,
+                                            constrain=constrain,
+                                            return_state=True)
+        return h, (state, conv_tail)
+
+    h, (states, conv_tails) = L.scan_or_unroll(
+        body, h, params["layers"], scan=run.scan_layers, remat=run.remat)
+    h = L.rms_norm(h[:, -1:], params["final_norm"]["scale"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(dtype))
+    cache = {"state": states, "conv": conv_tails.astype(dtype)}
+    return logits[:, 0].astype(_F32), cache
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig, run: RunConfig,
+                constrain=None):
+    dtype = jnp.dtype(run.compute_dtype)
+    h = params["embed"][token].astype(dtype)
+
+    def body(carry, xs):
+        h, states, convs = carry
+        lp, i = xs
+        cache_l = {"state": jax.lax.dynamic_index_in_dim(states, i, 0, False),
+                   "conv": jax.lax.dynamic_index_in_dim(convs, i, 0, False)}
+        h, nc = mamba_decode(lp, h, cache_l, cfg)
+        states = jax.lax.dynamic_update_index_in_dim(states, nc["state"], i, 0)
+        convs = jax.lax.dynamic_update_index_in_dim(convs, nc["conv"], i, 0)
+        return (h, states, convs), None
+
+    (h, states, convs), _ = L.scan_or_unroll(
+        body, (h, caches["state"], caches["conv"]),
+        (params["layers"], jnp.arange(cfg.n_layers)),
+        scan=run.scan_layers, remat="none")
+    h = L.rms_norm(h, params["final_norm"]["scale"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(dtype))
+    return logits[:, 0].astype(_F32), {"state": states, "conv": convs}

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts MLP (granite-moe style): top-k routing with
+capacity-bounded sort-based dispatch.
+
+FLOP-optimal dispatch: the (tokens × top_k) assignments are sorted by expert
+id, truncated to a static per-expert capacity C = ceil(T·k·cf / E), gathered
+into an (E, C, D) buffer, run through a batched expert einsum, and
+scatter-added back with router gates.  Total MLP FLOPs = active-expert FLOPs
+× capacity factor (vs. the dense-all-experts approach's E/k× blow-up).
+
+Expert parallelism: when the expert count divides the `model` axis the
+(E, C, D) buffer and expert weights are sharded on E (true EP — XLA inserts
+the all-to-all); otherwise expert weights are TP-sharded on d_ff
+(granite-moe-3b's 40 experts vs 16-way axis).  See sharding/partition.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = ["moe_params", "moe_apply"]
+
+_F32 = jnp.float32
+
+
+def moe_params(key, d_model: int, d_ff: int, n_experts: int,
+               pad_to: int = 0) -> Dict[str, Any]:
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d_model)
+    ep = pad_to or n_experts          # padded weight count (EP divisibility)
+    return {
+        "router": dense_init(ks[0], d_model, n_experts),
+        "wi": (jax.random.normal(ks[1], (ep, d_model, d_ff), _F32) * scale),
+        "wg": (jax.random.normal(ks[2], (ep, d_model, d_ff), _F32) * scale),
+        "wo": (jax.random.normal(ks[3], (ep, d_ff, d_model), _F32)
+               / math.sqrt(d_ff)),
+    }
+
+
+def _dispatch_one(xt, logits, top_k: int, cap: int, E: int):
+    """Per-sequence dispatch (vmapped over batch so the batch dim — and with
+    it every dispatch tensor — stays sharded over DP; a global dispatch
+    would force GSPMD to all-gather all tokens onto every data shard)."""
+    S, D = xt.shape
+    gates, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    sk = S * top_k
+    expert_idx = idx.reshape(sk)
+    token_idx = jnp.repeat(jnp.arange(S), top_k)
+    gate_w = gates.reshape(sk)
+
+    order = jnp.argsort(expert_idx)                      # stable
+    se, st, sg = expert_idx[order], token_idx[order], gate_w[order]
+
+    # position-in-expert: running index since the last expert boundary
+    pos_all = jnp.arange(sk)
+    seg_start = jnp.where(se != jnp.roll(se, 1), pos_all, 0)
+    seg_start = seg_start.at[0].set(0)
+    last_start = jax.lax.associative_scan(jnp.maximum, seg_start)
+    pos_in_expert = pos_all - last_start
+
+    keep = pos_in_expert < cap
+    dest = jnp.where(keep, se * cap + pos_in_expert, E * cap)  # overflow slot
+
+    buf = jnp.zeros((E * cap + 1, D), xt.dtype)
+    buf = buf.at[dest].set(xt[st])
+    return buf[:-1].reshape(E, cap, D), (keep, dest, st, sg)
+
+
+def _combine_one(out, dispatch_info, S: int, D: int, E: int, cap: int, dtype):
+    keep, dest, st, sg = dispatch_info
+    flat = out.reshape(E * cap, D)
+    y_assign = jnp.where(keep[:, None], flat[jnp.clip(dest, 0, E * cap - 1)], 0.0)
+    y_assign = y_assign * sg[:, None].astype(dtype)
+    return jnp.zeros((S, D), dtype).at[st].add(y_assign)
+
+
+def moe_apply(p: Dict[str, Any], x: jnp.ndarray, *, top_k: int,
+              capacity_factor: float = 1.25, constrain=None) -> jnp.ndarray:
+    dtype = x.dtype
+    B, S, D = x.shape
+    E = p["router"].shape[1]          # routable experts
+    Ep = p["wi"].shape[0]             # allocated (possibly padded) experts
+    cap = max(1, int(math.ceil(S * top_k * capacity_factor / E)))
+    cap = (cap + 3) // 4 * 4                             # lane-friendly
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dtype)).astype(_F32)
+    buf, info = jax.vmap(
+        lambda xt, lg: _dispatch_one(xt, lg, top_k, cap, Ep))(x, logits)
+    # buf: (B, E, cap, D) — B stays on DP, E on the model axis when EP divides
+    if constrain is not None:
+        buf = constrain(buf, "experts")
+
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(dtype))
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(dtype))
+    h = jax.nn.silu(g) * h
+    if constrain is not None:
+        h = constrain(h, "experts_ff")
+    out = jnp.einsum("becf,efd->becd", h, p["wo"].astype(dtype))
+
+    y = jax.vmap(
+        lambda o, i: _combine_one(o, i, S, D, Ep, cap, dtype))(out, info)
+    return y.reshape(B, S, D)

@@ -1,0 +1,123 @@
+"""Unified model API over the architecture families.
+
+Every family exposes: init(key, cfg, max_seq), loss(params, batch, cfg, run),
+prefill(params, batch, cfg, run), decode_step(params, caches, token, pos,
+cfg, run), init_cache(cfg, batch, max_len) — resolved here by cfg.family.
+`input_specs` builds the ShapeDtypeStruct stand-ins for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from . import mamba2, transformer, whisper, zamba2
+
+__all__ = ["ModelAPI", "get_model", "input_specs", "supports_shape"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def _transformer_api() -> ModelAPI:
+    def _init(key, cfg, max_seq=0):
+        return transformer.init(key, cfg)
+
+    def _prefill(params, batch, cfg, run, constrain=None):
+        if isinstance(batch, dict):
+            return transformer.prefill(params, batch["tokens"], cfg, run,
+                                       image_embeds=batch.get("image_embeds"),
+                                       constrain=constrain)
+        return transformer.prefill(params, batch, cfg, run, constrain=constrain)
+
+    return ModelAPI(_init, transformer.loss, _prefill, transformer.decode_step,
+                    transformer.init_cache)
+
+
+def _mamba_api() -> ModelAPI:
+    def _init(key, cfg, max_seq=0):
+        return mamba2.init(key, cfg)
+
+    def _prefill(params, batch, cfg, run, constrain=None):
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch
+        return mamba2.prefill(params, tokens, cfg, run, constrain=constrain)
+
+    return ModelAPI(_init, mamba2.loss, _prefill, mamba2.decode_step,
+                    mamba2.init_cache)
+
+
+def _zamba_api() -> ModelAPI:
+    def _init(key, cfg, max_seq=0):
+        return zamba2.init(key, cfg)
+
+    def _prefill(params, batch, cfg, run, constrain=None):
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch
+        return zamba2.prefill(params, tokens, cfg, run, constrain=constrain)
+
+    return ModelAPI(_init, zamba2.loss, _prefill, zamba2.decode_step,
+                    zamba2.init_cache)
+
+
+def _whisper_api() -> ModelAPI:
+    return ModelAPI(whisper.init, whisper.loss, whisper.prefill,
+                    whisper.decode_step, whisper.init_cache)
+
+
+_FAMILIES = {
+    "dense": _transformer_api,
+    "moe": _transformer_api,
+    "vlm": _transformer_api,
+    "ssm": _mamba_api,
+    "hybrid": _zamba_api,
+    "encdec": _whisper_api,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    return _FAMILIES[cfg.family]()
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """Returns a skip-reason string, or None if the (arch, shape) cell runs.
+
+    Per the assignment: ``long_500k`` needs sub-quadratic attention — run for
+    SSM/hybrid, skip for pure full-attention archs (the dense 500k KV cache
+    per layer is the blow-up the skip rule exists for).
+    """
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return ("full-attention arch: 500k-token dense KV cache per layer "
+                "(see DESIGN.md §6)")
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, f32, bf16 = jnp.int32, jnp.float32, jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model), bf16)
+        if cfg.family == "encdec":
+            batch["frame_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model), bf16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.d_model), bf16)
+        if cfg.family == "encdec":
+            batch["frame_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model), bf16)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"token": sds((B, 1), i32), "pos": sds((), i32)}

@@ -1,0 +1,194 @@
+"""Dense / MoE / VLM decoder-only transformer (qwen2, qwen3, command-r,
+granite-moe, phi-3-vision backbones).
+
+Functional model: `init` builds a param pytree with layer params stacked on
+a leading L axis; `loss`/`prefill`/`decode_step` run a `lax.scan` over that
+axis (one compiled layer body — keeps HLO small and lets XLA prefetch the
+next layer's FSDP all-gather during the current layer's compute).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from . import layers as L
+from .moe import moe_apply, moe_params
+
+__all__ = ["init", "init_cache", "loss", "prefill", "decode_step"]
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ka, km, k1, k2 = jax.random.split(key, 4)
+    p = {
+        "ln1": L.norm_params(cfg.d_model, cfg.norm),
+        "attn": L.attention_params(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.hd, bias=cfg.qkv_bias, qk_norm=cfg.qk_norm),
+        "ln2": L.norm_params(cfg.d_model, cfg.norm),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_params(km, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                              pad_to=cfg.expert_pad_to)
+    else:
+        p["mlp"] = L.mlp_params(km, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ke, ku, kl = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    params = {
+        "embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model),
+        "final_norm": L.norm_params(cfg.d_model, cfg.norm),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(lkeys),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(ku, cfg.d_model, cfg.vocab_padded)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_apply(lp, h, cfg: ModelConfig, run: RunConfig, *, positions=None,
+                 cache=None, cache_len=None, constrain=None):
+    a, new_cache = L.attention_apply(
+        lp["attn"], L.norm_apply(lp["ln1"], h, cfg.norm),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+        positions=positions, rope_theta=cfg.rope_theta,
+        cache=cache, cache_len=cache_len, q_chunk=run.q_chunk,
+        kv_chunk=run.kv_chunk, unroll=run.unroll_attn, constrain=constrain)
+    h = h + a
+    hn = L.norm_apply(lp["ln2"], h, cfg.norm)
+    if cfg.family == "moe":
+        m = moe_apply(lp["moe"], hn, top_k=cfg.top_k,
+                      capacity_factor=cfg.capacity_factor, constrain=constrain)
+    else:
+        m = L.mlp_apply(lp["mlp"], hn, cfg.act, constrain=constrain)
+    h = h + m
+    if constrain is not None:
+        h = constrain(h, "act")   # keep the residual stream SP-sharded
+    return h, new_cache
+
+
+def _embed(params, tokens, cfg: ModelConfig, dtype,
+           image_embeds: Optional[jnp.ndarray] = None):
+    h = params["embed"][tokens].astype(dtype)
+    if cfg.n_image_tokens and image_embeds is not None:
+        # VLM stub: precomputed patch embeddings occupy the first positions
+        n = cfg.n_image_tokens
+        h = jnp.concatenate([image_embeds.astype(dtype), h[:, n:]], axis=1)
+    return h
+
+
+def _stack_forward(params, h, cfg: ModelConfig, run: RunConfig, *,
+                   positions=None, caches=None, cache_len=None,
+                   constrain=None, fill_cache: bool = False):
+    """Scan over stacked layers. Returns (h, new_caches)."""
+
+    if caches is not None:
+        # decode: caches ride the carry and are updated in place per layer —
+        # XLA aliases the (donated) buffer instead of double-buffering ys.
+        def body(carry, xs):
+            h, kc, vc = carry
+            lp, i = xs
+            kc_l = jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False)
+            vc_l = jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False)
+            h, (nk, nv) = _layer_apply(lp, h, cfg, run, positions=positions,
+                                       cache=(kc_l, vc_l), cache_len=cache_len,
+                                       constrain=constrain)
+            kc = jax.lax.dynamic_update_index_in_dim(kc, nk, i, 0)
+            vc = jax.lax.dynamic_update_index_in_dim(vc, nv, i, 0)
+            return (h, kc, vc), None
+
+        nl = jax.tree.leaves(params["layers"])[0].shape[0]
+        (h, kc, vc), _ = L.scan_or_unroll(
+            body, (h, caches["k"], caches["v"]),
+            (params["layers"], jnp.arange(nl)),
+            scan=run.scan_layers, remat="none")
+        return h, {"k": kc, "v": vc}
+
+    def body(h, lp):
+        h, kv = _layer_apply(lp, h, cfg, run, positions=positions,
+                             cache_len=cache_len if fill_cache else None,
+                             constrain=constrain)
+        return h, kv
+
+    h, ys = L.scan_or_unroll(body, h, params["layers"],
+                             scan=run.scan_layers, remat=run.remat)
+    new_caches = None
+    if fill_cache and ys is not None:
+        new_caches = {"k": ys[0], "v": ys[1]}
+    return h, new_caches
+
+
+def _logits(params, h, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w.astype(h.dtype))
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def loss(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+         run: RunConfig, constrain=None) -> jnp.ndarray:
+    """Mean next-token cross-entropy.  batch: tokens (B,S) int32,
+    labels (B,S) int32 (-1 = masked), optional image_embeds."""
+    dtype = jnp.dtype(run.compute_dtype)
+    tokens, labels = batch["tokens"], batch["labels"]
+    h = _embed(params, tokens, cfg, dtype, batch.get("image_embeds"))
+    if constrain is not None:
+        h = constrain(h, "act")
+    h, _ = _stack_forward(params, h, cfg, run, constrain=constrain)
+    h = L.norm_apply(params["final_norm"], h, cfg.norm)
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.chunked_cross_entropy(h, w, labels, softcap=cfg.logit_softcap,
+                                   chunk=run.loss_chunk,
+                                   transpose_w=cfg.tie_embeddings)
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig, run: RunConfig,
+            image_embeds: Optional[jnp.ndarray] = None,
+            constrain=None) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Process a full prompt; returns (last-position logits, filled caches)."""
+    dtype = jnp.dtype(run.compute_dtype)
+    S = tokens.shape[1]
+    h = _embed(params, tokens, cfg, dtype, image_embeds)
+    h, caches = _stack_forward(params, h, cfg, run, cache_len=S,
+                               fill_cache=True, constrain=constrain)
+    h = L.norm_apply(params["final_norm"], h[:, -1:], cfg.norm)
+    logits = _logits(params, h, cfg)
+    return logits[:, 0].astype(jnp.float32), caches
+
+
+def decode_step(params, caches: Dict[str, Any], token: jnp.ndarray,
+                pos: jnp.ndarray, cfg: ModelConfig, run: RunConfig,
+                constrain=None) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One autoregressive step. token: (B, 1) int32; pos: scalar cache length."""
+    dtype = jnp.dtype(run.compute_dtype)
+    h = _embed(params, token, cfg, dtype)
+    if constrain is not None:
+        h = constrain(h, "act")
+    h, new_caches = _stack_forward(params, h, cfg, run, caches=caches,
+                                   cache_len=pos, constrain=constrain)
+    h = L.norm_apply(params["final_norm"], h, cfg.norm)
+    logits = _logits(params, h, cfg)
+    return logits[:, 0].astype(jnp.float32), new_caches

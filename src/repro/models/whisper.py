@@ -1,0 +1,213 @@
+"""Whisper-medium-style encoder-decoder backbone (arXiv:2212.04356).
+
+The audio conv frontend is a STUB per the assignment: `input_specs` provides
+precomputed frame embeddings (B, enc_seq, d) in place of the two mel
+convolutions.  Everything downstream is faithful: learned positions,
+pre-LayerNorm blocks with biases, GELU MLPs, decoder with causal self-attn +
+cross-attn to the encoder output.  Decode shapes exercise the decoder
+(whisper is enc-dec, not encoder-only, so decode applies).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from . import layers as L
+
+__all__ = ["init", "init_cache", "loss", "prefill", "decode_step", "encode"]
+
+_F32 = jnp.float32
+
+
+def _enc_layer_init(key, cfg: ModelConfig):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": L.norm_params(cfg.d_model, "layernorm"),
+        "attn": L.attention_params(ka, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.hd, bias=True),
+        "ln2": L.norm_params(cfg.d_model, "layernorm"),
+        "mlp": L.mlp_params(km, cfg.d_model, cfg.d_ff, "gelu", bias=True),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig):
+    ka, kc, km = jax.random.split(key, 3)
+    p = _enc_layer_init(key, cfg)
+    p["ln_cross"] = L.norm_params(cfg.d_model, "layernorm")
+    p["cross"] = L.attention_params(kc, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.hd, bias=True)
+    return p
+
+
+def init(key, cfg: ModelConfig, max_seq: int = 4096) -> Dict[str, Any]:
+    ke, kd, kp, ku, kep, kdp = jax.random.split(key, 6)
+    enc_keys = jax.random.split(kep, cfg.encoder_layers)
+    dec_keys = jax.random.split(kdp, cfg.n_layers)
+    return {
+        "enc_pos": jax.random.normal(kp, (cfg.encoder_seq, cfg.d_model), _F32) * 0.01,
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "enc_norm": L.norm_params(cfg.d_model, "layernorm"),
+        "embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model),
+        "dec_pos": jax.random.normal(kd, (max_seq, cfg.d_model), _F32) * 0.01,
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "dec_norm": L.norm_params(cfg.d_model, "layernorm"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kv = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    xkv = (cfg.n_layers, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "xk": jnp.zeros(xkv, dtype), "xv": jnp.zeros(xkv, dtype)}
+
+
+def encode(params, frame_embeds: jnp.ndarray, cfg: ModelConfig,
+           run: RunConfig, constrain=None) -> jnp.ndarray:
+    dtype = jnp.dtype(run.compute_dtype)
+    h = frame_embeds.astype(dtype) + params["enc_pos"][None].astype(dtype)
+
+    def body(h, lp):
+        a, _ = L.attention_apply(
+            lp["attn"], L.norm_apply(lp["ln1"], h, "layernorm"),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+            use_rope=False, causal=False, q_chunk=run.q_chunk,
+            kv_chunk=run.kv_chunk, unroll=run.unroll_attn, constrain=constrain)
+        h = h + a
+        h = h + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], h, "layernorm"),
+                            "gelu", constrain=constrain)
+        return h, None
+
+    h, _ = L.scan_or_unroll(body, h, params["enc_layers"],
+                            scan=run.scan_layers, remat=run.remat)
+    return L.norm_apply(params["enc_norm"], h, "layernorm")
+
+
+def _dec_layer(lp, h, enc_out, cfg, run, *, positions=None, cache=None,
+               cache_len=None, xcache=None, constrain=None):
+    """One decoder layer: self-attn (+cache), cross-attn, MLP."""
+    a, new_cache = L.attention_apply(
+        lp["attn"], L.norm_apply(lp["ln1"], h, "layernorm"),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+        use_rope=False, positions=positions, cache=cache, cache_len=cache_len,
+        q_chunk=run.q_chunk, kv_chunk=run.kv_chunk, unroll=run.unroll_attn,
+        constrain=constrain)
+    h = h + a
+    hn = L.norm_apply(lp["ln_cross"], h, "layernorm")
+    if xcache is not None:
+        # decode: cross k/v precomputed
+        q, _, _ = h, None, None
+        dtype = h.dtype
+        B, S, _ = h.shape
+        qv = jnp.einsum("bsd,dh->bsh", hn, lp["cross"]["wq"].astype(dtype))
+        qv = (qv + lp["cross"]["bq"].astype(dtype)).reshape(
+            B, S, cfg.n_heads, cfg.hd)
+        xk, xv = xcache
+        out = L.decode_attention(qv, xk.astype(dtype), xv.astype(dtype),
+                                 jnp.asarray(xk.shape[1] - 1))
+        out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+        x = jnp.einsum("bsh,hd->bsd", out, lp["cross"]["wo"].astype(dtype))
+    else:
+        x, _ = L.attention_apply(
+            lp["cross"], hn, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.hd, use_rope=False, causal=False, kv_x=enc_out,
+            q_chunk=run.q_chunk, kv_chunk=run.kv_chunk,
+            unroll=run.unroll_attn, constrain=constrain)
+    h = h + x
+    h = h + L.mlp_apply(lp["mlp"], L.norm_apply(lp["ln2"], h, "layernorm"),
+                        "gelu", constrain=constrain)
+    return h, new_cache
+
+
+def _decoder(params, tokens, enc_out, cfg, run, *, pos_offset=0,
+             caches=None, cache_len=None, fill_cache=False, constrain=None):
+    dtype = jnp.dtype(run.compute_dtype)
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(dtype)
+    pos = jax.lax.dynamic_slice(params["dec_pos"],
+                                (jnp.asarray(pos_offset), 0),
+                                (S, cfg.d_model)) if caches is not None else \
+        params["dec_pos"][:S]
+    h = h + pos[None].astype(dtype)
+
+    if caches is not None:
+        def body(carry, xs):
+            h, kc, vc = carry
+            lp, xk, xv, i = xs
+            kc_l = jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False)
+            vc_l = jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False)
+            h, (nk, nv) = _dec_layer(lp, h, None, cfg, run,
+                                     cache=(kc_l, vc_l), cache_len=cache_len,
+                                     xcache=(xk, xv), constrain=constrain)
+            kc = jax.lax.dynamic_update_index_in_dim(kc, nk, i, 0)
+            vc = jax.lax.dynamic_update_index_in_dim(vc, nv, i, 0)
+            return (h, kc, vc), None
+
+        nl = jax.tree.leaves(params["dec_layers"])[0].shape[0]
+        (h, kc, vc), _ = L.scan_or_unroll(
+            body, (h, caches["k"], caches["v"]),
+            (params["dec_layers"], caches["xk"], caches["xv"], jnp.arange(nl)),
+            scan=run.scan_layers, remat="none")
+        h = L.norm_apply(params["dec_norm"], h, "layernorm")
+        return h, (kc, vc)
+
+    def body(h, lp):
+        h, kv = _dec_layer(lp, h, enc_out, cfg, run,
+                           cache_len=cache_len if fill_cache else None,
+                           constrain=constrain)
+        return h, kv
+
+    h, ys = L.scan_or_unroll(body, h, params["dec_layers"],
+                             scan=run.scan_layers, remat=run.remat)
+    h = L.norm_apply(params["dec_norm"], h, "layernorm")
+    return h, ys
+
+
+def loss(params, batch, cfg: ModelConfig, run: RunConfig, constrain=None):
+    enc_out = encode(params, batch["frame_embeds"], cfg, run, constrain)
+    h, _ = _decoder(params, batch["tokens"], enc_out, cfg, run,
+                    constrain=constrain)
+    return L.chunked_cross_entropy(h, params["embed"], batch["labels"],
+                                   chunk=run.loss_chunk, transpose_w=True)
+
+
+def _cross_kv(params, enc_out, cfg, run):
+    """Precompute per-layer cross-attention K/V from the encoder output."""
+
+    def body(_, lp):
+        dtype = enc_out.dtype
+        B, S, _ = enc_out.shape
+        k = (jnp.einsum("bsd,dh->bsh", enc_out, lp["cross"]["wk"].astype(dtype))
+             + lp["cross"]["bk"].astype(dtype)).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        v = (jnp.einsum("bsd,dh->bsh", enc_out, lp["cross"]["wv"].astype(dtype))
+             + lp["cross"]["bv"].astype(dtype)).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+        return None, (k, v)
+
+    _, (xk, xv) = L.scan_or_unroll(body, None, params["dec_layers"],
+                                   scan=run.scan_layers, remat="none")
+    return xk, xv
+
+
+def prefill(params, batch, cfg: ModelConfig, run: RunConfig, constrain=None):
+    """batch: dict(tokens, frame_embeds). Returns (last logits, caches)."""
+    tokens = batch["tokens"] if isinstance(batch, dict) else batch
+    frames = batch["frame_embeds"]
+    enc_out = encode(params, frames, cfg, run, constrain)
+    S = tokens.shape[1]
+    h, kv = _decoder(params, tokens, enc_out, cfg, run, cache_len=S,
+                     fill_cache=True, constrain=constrain)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], params["embed"].astype(h.dtype))
+    xk, xv = _cross_kv(params, enc_out, cfg, run)
+    caches = {"k": kv[0], "v": kv[1], "xk": xk, "xv": xv}
+    return logits.astype(_F32), caches
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig, run: RunConfig,
+                constrain=None):
+    h, ys = _decoder(params, token, None, cfg, run, pos_offset=pos,
+                     caches=caches, cache_len=pos, constrain=constrain)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"].astype(h.dtype))
+    new_caches = {"k": ys[0], "v": ys[1], "xk": caches["xk"], "xv": caches["xv"]}
+    return logits[:, 0].astype(_F32), new_caches

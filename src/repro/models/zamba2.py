@@ -1,0 +1,205 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention/MLP block
+applied every k SSM layers (arXiv:2411.15242).
+
+Faithful structure, with one recorded simplification (DESIGN.md §6): the
+shared block consumes concat([hidden, initial_embedding]) (the Zamba "global
+residual" trick, width 2d), runs full attention + gated MLP on 2d, and
+projects back to d; per-application LoRA adapters are omitted.
+
+Layers are scanned as superblocks of ``shared_attn_every`` Mamba2 layers,
+each preceded by one application of the shared block (weights closed over —
+the scan sees them as loop constants, exactly the weight-sharing semantics).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from . import layers as L
+from .mamba2 import (init_mamba_cache, mamba_apply, mamba_decode, mamba_params)
+
+__all__ = ["init", "init_cache", "loss", "prefill", "decode_step"]
+
+_F32 = jnp.float32
+
+
+def _shared_block_init(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d2 = 2 * cfg.d_model
+    ka, km, kp = jax.random.split(key, 3)
+    return {
+        "ln1": L.norm_params(d2, "rms"),
+        "attn": L.attention_params(ka, d2, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "ln2": L.norm_params(d2, "rms"),
+        "mlp": L.mlp_params(km, d2, cfg.d_ff, "silu"),
+        "proj_out": L.dense_init(kp, d2, cfg.d_model),
+    }
+
+
+def _n_super(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.shared_attn_every == 0
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def init(key, cfg: ModelConfig, max_seq: int = 0) -> Dict[str, Any]:
+    ke, ku, kl, ks = jax.random.split(key, 4)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    per = cfg.shared_attn_every
+    mamba = jax.vmap(lambda k: mamba_params(k, cfg))(lkeys)
+    # reshape stacked layers into (n_super, per, ...)
+    mamba = jax.tree.map(
+        lambda x: x.reshape((_n_super(cfg), per) + x.shape[1:]), mamba)
+    return {
+        "embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model),
+        "shared": _shared_block_init(ks, cfg),
+        "mamba": mamba,
+        "final_norm": L.norm_params(cfg.d_model, "rms"),
+        "unembed": L.dense_init(ku, cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    ns = _n_super(cfg)
+    ssm = init_mamba_cache(cfg, batch, n_layers=cfg.n_layers, dtype=dtype)
+    kv_shape = (ns, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"ssm": ssm, "k": jnp.zeros(kv_shape, dtype),
+            "v": jnp.zeros(kv_shape, dtype)}
+
+
+def _shared_apply(sp, h, h0, cfg: ModelConfig, run: RunConfig, *,
+                  cache=None, cache_len=None, constrain=None):
+    x = jnp.concatenate([h, h0], axis=-1)
+    a, new_cache = L.attention_apply(
+        sp["attn"], L.norm_apply(sp["ln1"], x, "rms"),
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta, cache=cache, cache_len=cache_len,
+        q_chunk=run.q_chunk, kv_chunk=run.kv_chunk, unroll=run.unroll_attn,
+        constrain=constrain)
+    x = x + a
+    m = L.mlp_apply(sp["mlp"], L.norm_apply(sp["ln2"], x, "rms"), "silu",
+                    constrain=constrain)
+    x = x + m
+    out = jnp.einsum("bsd,dk->bsk", x, sp["proj_out"].astype(h.dtype))
+    return h + out, new_cache
+
+
+def _forward(params, h, cfg, run, *, caches=None, cache_len=None,
+             fill_cache=False, constrain=None, decode=False):
+    h0 = h
+
+    def super_body(h, xs):
+        mp = xs
+        h, kv = _shared_apply(params["shared"], h, h0, cfg, run,
+                              cache_len=cache_len if fill_cache else None,
+                              constrain=constrain)
+
+        def mamba_body(h, lp):
+            h, st = mamba_apply(lp, h, cfg, chunk=run.ssd_chunk,
+                                constrain=constrain, return_state=fill_cache)
+            if constrain is not None:
+                h = constrain(h, "act")
+            return h, st
+
+        # per-layer remat INSIDE the superblock: bounds the recompute window
+        # to one mamba layer's intra-chunk tensors instead of six
+        h, states = L.scan_or_unroll(mamba_body, h, mp,
+                                     scan=run.scan_layers,
+                                     remat=run.remat if not fill_cache else "none")
+        return h, (states, kv)
+
+    if decode:
+        ns = _n_super(cfg)
+        per = cfg.shared_attn_every
+        states = caches["ssm"]["state"].reshape(
+            (ns, per) + caches["ssm"]["state"].shape[1:])
+        convs = caches["ssm"]["conv"].reshape(
+            (ns, per) + caches["ssm"]["conv"].shape[1:])
+
+        def dec_super(carry, xs):
+            h, states, convs, kc, vc = carry
+            mp, i = xs
+            kc_i = jax.lax.dynamic_index_in_dim(kc, i, 0, keepdims=False)
+            vc_i = jax.lax.dynamic_index_in_dim(vc, i, 0, keepdims=False)
+            h, (nk, nv) = _shared_apply(params["shared"], h, h0, cfg, run,
+                                        cache=(kc_i, vc_i),
+                                        cache_len=cache_len,
+                                        constrain=constrain)
+            kc = jax.lax.dynamic_update_index_in_dim(kc, nk, i, 0)
+            vc = jax.lax.dynamic_update_index_in_dim(vc, nv, i, 0)
+            st_i = jax.lax.dynamic_index_in_dim(states, i, 0, keepdims=False)
+            cv_i = jax.lax.dynamic_index_in_dim(convs, i, 0, keepdims=False)
+
+            def mamba_body(h, mxs):
+                lp, st, cv = mxs
+                h, nc = mamba_decode(lp, h, {"state": st, "conv": cv}, cfg)
+                return h, (nc["state"], nc["conv"])
+
+            h, (nst, ncv) = L.scan_or_unroll(mamba_body, h, (mp, st_i, cv_i),
+                                             scan=run.scan_layers, remat="none")
+            states = jax.lax.dynamic_update_index_in_dim(states, nst, i, 0)
+            convs = jax.lax.dynamic_update_index_in_dim(convs, ncv, i, 0)
+            return (h, states, convs, kc, vc), None
+
+        (h, states, convs, kc, vc), _ = L.scan_or_unroll(
+            dec_super, (h, states, convs, caches["k"], caches["v"]),
+            (params["mamba"], jnp.arange(ns)),
+            scan=run.scan_layers, remat="none")
+        flat = lambda x: x.reshape((cfg.n_layers,) + x.shape[2:])
+        new_caches = {"ssm": {"state": flat(states), "conv": flat(convs)},
+                      "k": kc, "v": vc}
+        return h, new_caches
+
+    h, ys = L.scan_or_unroll(super_body, h, params["mamba"],
+                             scan=run.scan_layers, remat=run.remat)
+    if fill_cache:
+        states, kv = ys
+        ssm_state, conv_tail = states
+        flat = lambda x: x.reshape((cfg.n_layers,) + x.shape[2:])
+        new_caches = {"ssm": {"state": flat(ssm_state),
+                              "conv": flat(conv_tail)},
+                      "k": kv[0], "v": kv[1]}
+        return h, new_caches
+    return h, None
+
+
+def _lm_head(params, h, cfg, dtype):
+    h = L.rms_norm(h, params["final_norm"]["scale"])
+    return jnp.einsum("bsd,dv->bsv", h, params["unembed"].astype(dtype))
+
+
+def loss(params, batch, cfg: ModelConfig, run: RunConfig, constrain=None):
+    dtype = jnp.dtype(run.compute_dtype)
+    tokens, labels = batch["tokens"], batch["labels"]
+    h = params["embed"][tokens].astype(dtype)
+    if constrain is not None:
+        h = constrain(h, "act")
+    h, _ = _forward(params, h, cfg, run, constrain=constrain)
+    h = L.rms_norm(h, params["final_norm"]["scale"])
+    return L.chunked_cross_entropy(h, params["unembed"], labels,
+                                   chunk=run.loss_chunk)
+
+
+def prefill(params, tokens, cfg: ModelConfig, run: RunConfig,
+            image_embeds=None, constrain=None):
+    dtype = jnp.dtype(run.compute_dtype)
+    S = tokens.shape[1]
+    h = params["embed"][tokens].astype(dtype)
+    h, caches = _forward(params, h, cfg, run, cache_len=S, fill_cache=True,
+                         constrain=constrain)
+    logits = _lm_head(params, h[:, -1:], cfg, dtype)
+    caches["ssm"]["conv"] = caches["ssm"]["conv"].astype(dtype)
+    caches["k"] = caches["k"].astype(dtype)
+    caches["v"] = caches["v"].astype(dtype)
+    return logits[:, 0].astype(_F32), caches
+
+
+def decode_step(params, caches, token, pos, cfg: ModelConfig, run: RunConfig,
+                constrain=None):
+    dtype = jnp.dtype(run.compute_dtype)
+    h = params["embed"][token].astype(dtype)
+    h, new_caches = _forward(params, h, cfg, run, caches=caches,
+                             cache_len=pos, decode=True, constrain=constrain)
+    logits = _lm_head(params, h, cfg, dtype)
+    return logits[:, 0].astype(_F32), new_caches

@@ -1,0 +1,255 @@
+"""sTiles-powered banded-arrowhead curvature preconditioner.
+
+This is the framework's first-class integration of the paper's solver into
+LM training (DESIGN.md §5).  The idea: the curvature of a deep transformer,
+restricted to a sketched per-layer subspace, is dominated by within-layer
+and adjacent-layer terms, plus coupling of every layer to the shared
+embedding/unembedding block — i.e. it is a **banded arrowhead matrix** over
+layer blocks, exactly the paper's Fig. 1 pattern:
+
+  * one r-dim sketch per layer (fixed random coordinate sample of the layer's
+    gradient) -> "diagonal blocks";
+  * EMA of cross-layer sketch outer products within a band -> "band";
+  * EMA against the embedding-group sketch -> "arrowhead";
+
+Every ``precond_every`` steps the (L+1)·r banded-arrowhead matrix is
+factorized by the sTiles **window backend** (the tile size *is* the sketch
+dim), and each step preconditions the gradient by two band solves:
+
+    d = g  +  Pᵀ (A⁻¹ ĝ − ĝ)        (identity on the unsketched complement)
+
+so with A = I the update reduces exactly to the raw gradient.  Factorizing a
+few-thousand-dim structured matrix every few steps is the same workload INLA
+generates (hundreds of factorizations per inference) — sTiles' target regime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cholesky import _factorize_window_impl, CholeskyFactor
+from repro.core.ctsf import BandedCTSF
+from repro.core.solve import _backward_impl, _forward_impl
+from repro.core.structure import ArrowheadStructure, TileGrid
+
+__all__ = ["ArrowheadPrecond", "build_precond"]
+
+
+def _group_leaves(params) -> Tuple[List[Tuple[str, Any]], List[Tuple[str, Any]]]:
+    """Split params into stacked layer leaves and global ('arrow') leaves."""
+    layer_leaves, arrow_leaves = [], []
+    for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
+        if any(seg in keys for seg in ("layers", "mamba", "enc_layers",
+                                       "dec_layers")):
+            layer_leaves.append((keys, leaf))
+        else:
+            arrow_leaves.append((keys, leaf))
+    return layer_leaves, arrow_leaves
+
+
+@dataclasses.dataclass
+class ArrowheadPrecond:
+    """Static description + jax state of the preconditioner."""
+    r: int                    # sketch dim = sTiles tile size
+    band: int                 # band width in layer blocks
+    n_layers: int
+    ema: float
+    damping: float
+    grid: TileGrid
+    # host-side index plans: per layer-leaf (name, per-layer size, idx array)
+    layer_plan: List[Tuple[str, np.ndarray]]
+    arrow_plan: List[Tuple[str, np.ndarray]]
+
+    def init_state(self) -> Dict[str, jnp.ndarray]:
+        g = self.grid
+        t, ndt, nat, bt = g.t, g.n_diag_tiles, g.n_arrow_tiles, g.band_tiles
+        return {
+            "Dr": jnp.zeros((ndt, bt + 1, t, t), jnp.float32),
+            "R": jnp.zeros((ndt, nat, t, t), jnp.float32),
+            "C": jnp.zeros((nat, nat, t, t), jnp.float32),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    # ---- sketching ---------------------------------------------------------
+
+    def sketch(self, grads) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Project grads to per-layer sketches.
+
+        Returns (layer_sketch (L, r), arrow_sketch (r,)).
+        """
+        layer_leaves, arrow_leaves = _group_leaves(grads)
+        by_name = dict(layer_leaves)
+        parts = []
+        for name, idx in self.layer_plan:
+            leaf = by_name[name]
+            flat = leaf.reshape(self._stack_dim(leaf), -1).astype(jnp.float32)
+            parts.append(flat[:, idx])                   # (L, r_leaf)
+        lsk = jnp.concatenate(parts, axis=1)[:, : self.r]
+        by_name_a = dict(arrow_leaves)
+        aparts = []
+        for name, idx in self.arrow_plan:
+            leaf = by_name_a[name]
+            aparts.append(leaf.reshape(-1).astype(jnp.float32)[idx])
+        ask = jnp.concatenate(aparts)[: self.r]
+        return lsk, ask
+
+    def _stack_dim(self, leaf) -> int:
+        return self.n_layers
+
+    # ---- statistics --------------------------------------------------------
+
+    def update_stats(self, state, grads):
+        lsk, ask = self.sketch(grads)                    # (L, r), (r,)
+        g = self.grid
+        bt = g.band_tiles
+        e = self.ema
+        # band blocks: Dr[m, d] += lsk_m lsk_{m-d}^T
+        lpad = jnp.pad(lsk, ((bt, 0), (0, 0)))
+        wins = jnp.stack([lpad[bt - d: bt - d + self.n_layers] for d in range(bt + 1)],
+                         axis=1)                          # (L, bt+1, r)
+        dr_new = jnp.einsum("la,ldb->ldab", lsk, wins)
+        r_new = jnp.einsum("la,b->lab", lsk, ask)[:, None]
+        c_new = jnp.einsum("a,b->ab", ask, ask)[None, None]
+        return {
+            "Dr": e * state["Dr"] + (1 - e) * dr_new,
+            "R": e * state["R"] + (1 - e) * r_new,
+            "C": e * state["C"] + (1 - e) * c_new,
+            "count": state["count"] + 1,
+        }
+
+    # ---- factorize + solve -------------------------------------------------
+
+    def factorize(self, state) -> Dict[str, jnp.ndarray]:
+        """Assemble A = stats + adaptive damping, factorize with sTiles.
+
+        The band+arrow *truncation* of the PSD gradient-moment EMA is not
+        itself PSD, so the diagonal damping is lifted per block row by the
+        Frobenius mass of that row's off-diagonal blocks — block-Gershgorin
+        diagonal dominance guarantees λ_min(A) ≥ damping > 0 (‖·‖₂ ≤ ‖·‖_F).
+        """
+        g = self.grid
+        t, ndt, bt = g.t, g.n_diag_tiles, g.band_tiles
+        eye = jnp.eye(t, dtype=jnp.float32)
+        Dr0, R0, C0 = state["Dr"], state["R"], state["C"]
+
+        def fro(x):
+            return jnp.sqrt(jnp.sum(jnp.square(x), axis=(-2, -1)) + 1e-30)
+
+        band_mass = fro(Dr0[:, 1:]) if bt else jnp.zeros((ndt, 0))
+        upper = band_mass.sum(axis=1) if bt else jnp.zeros(ndt)
+        lower = jnp.zeros(ndt)
+        for d in range(1, bt + 1):
+            if d < ndt:
+                lower = lower.at[:ndt - d].add(band_mass[d:, d - 1])
+        arrow_mass = fro(R0).sum(axis=1)
+        row_damp = self.damping + upper + lower + arrow_mass
+        corner_damp = self.damping + fro(R0).sum()
+        dr = Dr0.at[:, 0].add(row_damp[:, None, None] * eye)
+        c = C0.at[0, 0].add(corner_damp * eye)
+        Dr, R, C = _factorize_window_impl(dr, R0, c, g, None, 4)
+        return {"Dr": Dr, "R": R, "C": C}
+
+    def precondition(self, factor, grads):
+        """d = g + lift(A^{-1} ĝ − ĝ)."""
+        lsk, ask = self.sketch(grads)
+        rhs = jnp.concatenate([lsk.reshape(-1), ask])    # ((L+1)·r,)
+        g = self.grid
+        bd = rhs[: g.n_diag_tiles * g.t].reshape(g.n_diag_tiles, g.t)
+        ba = rhs[g.n_diag_tiles * g.t:].reshape(g.n_arrow_tiles, g.t)
+        yd, ya = _forward_impl(factor["Dr"], factor["R"], factor["C"], bd, ba, g)
+        xd, xa = _backward_impl(factor["Dr"], factor["R"], factor["C"], yd, ya, g)
+        sol_l = xd.reshape(self.n_layers, self.r)
+        sol_a = xa.reshape(-1)[: self.r]
+        # scale correction so magnitudes stay gradient-like
+        dl, da = sol_l - lsk, sol_a - ask
+        return self._lift(grads, dl, da)
+
+    def _lift(self, grads, dl, da):
+        layer_leaves, arrow_leaves = _group_leaves(grads)
+        by_name = dict(layer_leaves)
+        by_name_a = dict(arrow_leaves)
+        off = 0
+        for name, idx in self.layer_plan:
+            width = min(len(idx), self.r - off) if off < self.r else 0
+            if width <= 0:
+                continue
+            leaf = by_name[name]
+            flat = leaf.reshape(self.n_layers, -1)
+            upd = dl[:, off: off + width].astype(flat.dtype)
+            by_name[name] = flat.at[:, idx[:width]].add(upd).reshape(leaf.shape)
+            off += width
+        off = 0
+        for name, idx in self.arrow_plan:
+            width = min(len(idx), self.r - off) if off < self.r else 0
+            if width <= 0:
+                continue
+            leaf = by_name_a[name]
+            flat = leaf.reshape(-1)
+            by_name_a[name] = flat.at[idx[:width]].add(
+                da[off: off + width].astype(flat.dtype)).reshape(leaf.shape)
+            off += width
+        out = {**by_name, **by_name_a}
+        # rebuild pytree in original structure
+        paths = [("/".join(str(getattr(p, "key", getattr(p, "idx", "")))
+                           for p in path))
+                 for path, _ in jax.tree_util.tree_leaves_with_path(grads)]
+        leaves = [out[p] for p in paths]
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(grads), leaves)
+
+
+def build_precond(params, r: int = 32, band: int = 2, ema: float = 0.95,
+                  damping: float = 1e-3, seed: int = 0) -> ArrowheadPrecond:
+    """Host-side construction: sampling plans + the sTiles grid."""
+    layer_leaves, arrow_leaves = _group_leaves(params)
+    if not layer_leaves:
+        raise ValueError("no stacked layer params found")
+    n_layers = layer_leaves[0][1].shape[0]
+    # normalize leaves stacked with >1 leading dims (zamba: (ns, per, ...))
+    norm_layers = []
+    for name, leaf in layer_leaves:
+        if leaf.shape[0] != n_layers:
+            pass
+        norm_layers.append((name, leaf))
+    rng = np.random.default_rng(seed)
+    sizes = [(name, int(np.prod(leaf.shape)) // leaf.shape[0])
+             for name, leaf in norm_layers]
+    total = sum(s for _, s in sizes)
+    layer_plan, acc = [], 0
+    for name, s in sizes:
+        k = max(1, round(r * s / total))
+        k = min(k, s, r - acc)
+        if k <= 0:
+            continue
+        layer_plan.append((name, rng.choice(s, size=k, replace=False)))
+        acc += k
+    # top up to exactly r from the largest leaf not yet in the plan order
+    if acc < r:
+        name, s = max(sizes, key=lambda x: x[1])
+        extra = rng.choice(s, size=r - acc, replace=False)
+        layer_plan.append((name, extra))
+    asizes = [(name, int(np.prod(leaf.shape))) for name, leaf in arrow_leaves]
+    atotal = sum(s for _, s in asizes)
+    arrow_plan, acc = [], 0
+    for name, s in asizes:
+        k = max(1, round(r * s / atotal))
+        k = min(k, s, r - acc)
+        if k <= 0:
+            continue
+        arrow_plan.append((name, rng.choice(s, size=k, replace=False)))
+        acc += k
+    if acc < r and asizes:
+        name, s = max(asizes, key=lambda x: x[1])
+        arrow_plan.append((name, rng.choice(s, size=r - acc, replace=False)))
+
+    struct = ArrowheadStructure(n=(n_layers + 1) * r, bandwidth=band * r - 1,
+                                arrow=r)
+    grid = TileGrid(struct, t=r)
+    return ArrowheadPrecond(r=r, band=band, n_layers=n_layers, ema=ema,
+                            damping=damping, grid=grid,
+                            layer_plan=layer_plan, arrow_plan=arrow_plan)

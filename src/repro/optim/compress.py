@@ -1,0 +1,49 @@
+"""Error-feedback int8 gradient compression for the cross-pod (DCN) axis.
+
+At multi-pod scale the `pod` all-reduce crosses the slow fabric; int8
+quantization cuts wire bytes 4× vs f32.  Error feedback (Seide et al. /
+EF-SGD) keeps the compression unbiased over time: the residual of each
+quantization is added back into the next step's gradient, so the training
+trajectory converges to the uncompressed one.
+
+Used by the explicit-collective trainer (`runtime.pod_parallel_train_step`),
+which computes per-pod gradients under `shard_map` and reduces them with
+``quantized_allreduce``.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.collectives import quantized_allreduce
+
+__all__ = ["ef_init", "ef_compress_allreduce"]
+
+
+def ef_init(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_allreduce(grads, ef_state, axis_name: str, bits: int = 8
+                          ) -> Tuple[Any, Any]:
+    """Quantize (grad + residual), all-reduce int8 over ``axis_name``,
+    return (mean_grads, new_residuals).  Call inside shard_map."""
+    n = jax.lax.axis_size(axis_name)
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        qmax = float(2 ** (bits - 1) - 1)
+        scale = jnp.max(jnp.abs(x)) / qmax + 1e-30
+        q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+        sent = q * scale                      # what the wire carries (dequant)
+        new_e = x - sent                      # local quantization residual
+        total = quantized_allreduce(x, axis_name, bits=bits) / n
+        return total.astype(g.dtype), new_e
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (td.unflatten([o[0] for o in outs]),
+            td.unflatten([o[1] for o in outs]))

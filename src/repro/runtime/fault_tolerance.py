@@ -1,0 +1,124 @@
+"""Fault-tolerant training loop: retry, checkpoint-restart, straggler watch,
+elastic re-meshing.
+
+Failure model for thousands of nodes (DESIGN.md §7):
+
+* **transient step failure** (preempted host, flaky ICI link, data glitch):
+  retry the step up to ``max_step_retries`` times — the deterministic
+  step-keyed data pipeline makes a retry bit-identical;
+* **hard failure**: restore the latest atomic checkpoint and replay — with
+  step-keyed data, replay is exact (no data skew across restarts);
+* **stragglers**: per-step wall times tracked against a running median; a
+  step slower than ``straggler_factor``× median is recorded and surfaced —
+  at fleet scale this feeds the scheduler that drains slow hosts (SPMD can't
+  locally outrun its slowest chip — mitigation is *detect and replace*,
+  plus the static-schedule load balance sTiles itself exemplifies);
+* **elastic re-scale**: checkpoints restore onto a different mesh via
+  target shardings (Checkpointer.restore), so a pod can drop out between
+  runs without invalidating state.
+
+`FailureInjector` drives the tests: deterministic exceptions at chosen steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["FailureInjector", "StragglerMonitor", "TrainLoop"]
+
+
+class FailureInjector:
+    """Raises RuntimeError at listed (step, attempt) pairs — test hook."""
+
+    def __init__(self, fail_at: Optional[Dict[int, int]] = None):
+        self.fail_at = dict(fail_at or {})   # step -> #failures to inject
+        self.injected: List[int] = []
+
+    def maybe_fail(self, step: int):
+        if self.fail_at.get(step, 0) > 0:
+            self.fail_at[step] -= 1
+            self.injected.append(step)
+            raise RuntimeError(f"injected failure at step {step}")
+
+
+class StragglerMonitor:
+    def __init__(self, factor: float = 3.0, window: int = 50):
+        self.factor = factor
+        self.window = window
+        self.times: List[float] = []
+        self.flagged: List[tuple] = []
+
+    def record(self, step: int, dt: float):
+        if len(self.times) >= 5:
+            med = float(np.median(self.times[-self.window:]))
+            if dt > self.factor * med:
+                self.flagged.append((step, dt, med))
+        self.times.append(dt)
+
+    @property
+    def median(self) -> float:
+        return float(np.median(self.times)) if self.times else 0.0
+
+
+@dataclasses.dataclass
+class TrainLoop:
+    """Drives (state, batch) -> (state, metrics) with fault tolerance."""
+    step_fn: Callable
+    batch_fn: Callable                       # step -> host batch
+    checkpointer: Checkpointer
+    checkpoint_every: int = 50
+    max_step_retries: int = 2
+    injector: Optional[FailureInjector] = None
+    straggler: StragglerMonitor = dataclasses.field(default_factory=StragglerMonitor)
+    state_shardings: Optional[Any] = None
+    log_every: int = 10
+    log_fn: Callable = print
+
+    def run(self, state: Any, start_step: int, num_steps: int) -> Any:
+        step = start_step
+        history = []
+        while step < start_step + num_steps:
+            batch = self.batch_fn(step)
+            t0 = time.perf_counter()
+            try:
+                new_state, metrics = self._try_step(state, batch, step)
+            except Exception as exc:  # hard failure -> restore & replay
+                self.log_fn(f"[ft] step {step}: hard failure ({exc}); "
+                            f"restoring latest checkpoint")
+                restored = self.checkpointer.latest_step()
+                if restored is None:
+                    raise
+                state = self.checkpointer.restore(
+                    state, shardings=self.state_shardings)
+                step = restored
+                continue
+            dt = time.perf_counter() - t0
+            self.straggler.record(step, dt)
+            state = new_state
+            history.append(metrics)
+            if self.log_every and step % self.log_every == 0:
+                self.log_fn(f"step {step}: " + ", ".join(
+                    f"{k}={float(v):.4f}" for k, v in metrics.items()))
+            step += 1
+            if step % self.checkpoint_every == 0:
+                self.checkpointer.save(step, state)
+        self.checkpointer.save(step, state, block=True)
+        self.history = history
+        return state
+
+    def _try_step(self, state, batch, step):
+        last = None
+        for attempt in range(self.max_step_retries + 1):
+            try:
+                if self.injector:
+                    self.injector.maybe_fail(step)
+                return self.step_fn(state, batch)
+            except Exception as exc:
+                last = exc
+                self.log_fn(f"[ft] step {step} attempt {attempt} failed: {exc}")
+        raise last

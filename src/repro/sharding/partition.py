@@ -1,0 +1,216 @@
+"""Parallelism rules: DP / FSDP / TP / EP / SP partition specs.
+
+Mesh axes (launch/mesh.py): single-pod ``(data, model)``, multi-pod
+``(pod, data, model)``.  Policy (DESIGN.md §7):
+
+* batch            -> (pod, data)                      [DP]
+* weights          -> input dim on `data` (FSDP/ZeRO-3), output/TP dim on
+                      `model` (Megatron column/row)    [FSDP × TP]
+* MoE experts      -> expert dim on `model` when divisible (EP), else
+                      per-expert d_ff on `model`       [EP]
+* activations      -> sequence dim on `model` when run.activation_sharding
+                      == "sequence" (Megatron-SP)      [SP]
+* decode KV caches -> batch on (pod, data) when divisible, else sequence on
+                      `model` (flash-decoding style — sidesteps GQA
+                      head-divisibility entirely)
+
+Param specs are derived from leaf *names* (path patterns) + dimensionality,
+so every architecture family shares one rule set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+
+__all__ = ["MeshAxes", "Rules", "make_rules"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: Tuple[str, ...]        # ("pod", "data") or ("data",)
+    fsdp: str = "data"
+    tp: str = "model"
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        dp = tuple(n for n in names if n in ("pod", "data"))
+        return cls(dp=dp)
+
+
+# --- param-name pattern -> (base_ndim, base_spec builder) -------------------
+
+def _param_base_spec(path: str, ndim: int, ax: MeshAxes, cfg: ModelConfig):
+    tp, fsdp = ax.tp, ax.fsdp
+    name = path.split("/")[-1]
+    under_moe = "/moe/" in path or path.endswith("/moe")
+    if under_moe and name in ("wi", "wg", "wo"):
+        # experts (E, d_in, d_out)
+        ep = cfg.n_experts > 0
+        # EP if expert count divides the tp axis (checked at mesh-apply time
+        # via divisibility of the actual axis; here optimistic — granite-1b
+        # E=32 % 16 == 0; granite-3b E=40 -> fallback TP-in-expert)
+        if name == "wo":
+            return 3, (("E",), (None,), (fsdp,))
+        return 3, (("E",), (fsdp,), ("F",))
+    if name in ("embed",):
+        return 2, ((tp,), (fsdp,))
+    if name in ("unembed",):
+        return 2, ((fsdp,), (tp,))
+    if name in ("wq", "wk", "wv", "wi", "wg", "w_in"):
+        return 2, ((fsdp,), (tp,))
+    if name in ("wo", "w_out", "proj_out"):
+        return 2, ((tp,), (fsdp,))
+    if name in ("router",):
+        return 2, ((fsdp,), (None,))
+    if name in ("enc_pos", "dec_pos"):
+        return 2, ((None,), (fsdp,))
+    if name in ("conv",):
+        return 2, ((None,), (tp,))
+    return 1, ((None,),)
+
+
+class Rules:
+    """Bound to a mesh: produces NamedShardings / applies constraints."""
+
+    def __init__(self, mesh: Mesh, cfg: ModelConfig, run: RunConfig,
+                 shape: Optional[ShapeConfig] = None):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.run = run
+        self.shape = shape
+        self.ax = MeshAxes.from_mesh(mesh)
+        self.dp_total = 1
+        for a in self.ax.dp:
+            self.dp_total *= mesh.shape[a]
+        self.tp_size = mesh.shape[self.ax.tp]
+        self.ep = (cfg.n_experts > 0
+                   and cfg.n_experts_padded % self.tp_size == 0)
+        # Sequence sharding measured best for ALL families, ssm/hybrid
+        # included (EXPERIMENTS.md §Perf zamba track: a DP-only variant
+        # tripled the HLO-bytes memory term; forced seq-sharding restored
+        # it).  "dp_only" remains as an ablation knob.
+        self.seq_sharded = run.activation_sharding in ("sequence",
+                                                       "sequence_all")
+
+    # ---- parameters --------------------------------------------------------
+
+    def _resolve(self, entry):
+        """Map symbolic axis tags to mesh axes for this config/mesh."""
+        out = []
+        for dims in entry:
+            d = dims[0]
+            if d == "E":
+                out.append(self.ax.tp if self.ep else None)
+            elif d == "F":
+                out.append(None if self.ep else self.ax.tp)
+            else:
+                out.append(d)
+        return out
+
+    def param_pspec(self, path: str, leaf) -> P:
+        base_ndim, entry = _param_base_spec(path, leaf.ndim, self.ax, self.cfg)
+        base = self._resolve(entry)
+        extra = leaf.ndim - base_ndim
+        if extra < 0:   # e.g. unstacked scalar params
+            return P()
+        spec = [None] * extra + base
+        # drop sharding on axes that don't divide
+        for i, s in enumerate(spec):
+            if s is None:
+                continue
+            size = self.mesh.shape[s]
+            if leaf.shape[i] % size:
+                spec[i] = None
+        return P(*spec)
+
+    def param_specs(self, params) -> Any:
+        def walk(path, leaf):
+            keys = [getattr(p, "key", getattr(p, "idx", "")) for p in path]
+            return self.param_pspec("/".join(str(k) for k in keys), leaf)
+        return jax.tree_util.tree_map_with_path(walk, params)
+
+    def param_shardings(self, params) -> Any:
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.param_specs(params))
+
+    # ---- activations -------------------------------------------------------
+
+    def constrain(self, x, kind: str):
+        spec = self.act_pspec(kind, x.ndim)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def act_pspec(self, kind: str, ndim: int) -> Optional[P]:
+        dp = self.ax.dp
+        tp = self.ax.tp
+        sp = tp if self.seq_sharded else None
+        if kind == "act" and ndim == 3:          # (B, S, D)
+            return P(dp, sp, None)
+        if kind == "ff" and ndim == 3:           # (B, S, F)
+            return P(dp, None, tp)
+        if kind == "experts" and ndim == 4:      # (B, E, C, D)
+            return P(dp, tp if self.ep else None, None, None)
+        if kind == "experts_ff" and ndim == 4:   # (B, E, C, F)
+            return P(dp, tp, None, None) if self.ep else P(dp, None, None, tp)
+        if kind == "ssm_x" and ndim == 4:        # (B, S, H, P)
+            if self.run.ssm_head_shard:
+                return P(dp, None, tp, None)     # head-parallel SSD
+            return P(dp, sp, None, None)
+        return None
+
+    # ---- run inputs --------------------------------------------------------
+
+    def batch_specs(self, batch) -> Any:
+        dp = self.ax.dp
+
+        def spec(leaf):
+            if leaf.ndim >= 1 and leaf.shape[0] % self.dp_total == 0 \
+                    and leaf.shape[0] >= self.dp_total:
+                return NamedSharding(self.mesh, P(dp, *(None,) * (leaf.ndim - 1)))
+            return NamedSharding(self.mesh, P(*(None,) * leaf.ndim))
+        return jax.tree.map(spec, batch)
+
+    def cache_pspec(self, path: str, leaf) -> P:
+        """KV / SSM cache sharding for decode: batch over DP when it divides,
+        *and* sequence (KV caches) / heads (SSM state) over the model axis —
+        flash-decoding style, which sidesteps GQA head divisibility."""
+        dp, tp = self.ax.dp, self.ax.tp
+        name = path.split("/")[-1]
+        if leaf.ndim >= 2:
+            batch = leaf.shape[1]   # (L, B, ...)
+            bspec = dp if (batch % self.dp_total == 0) else None
+            if name in ("k", "v", "xk", "xv") and leaf.ndim == 5 \
+                    and leaf.shape[2] % self.tp_size == 0:
+                # (L, B, T, KV, hd): sequence-shard the cache
+                return P(None, bspec, tp, None, None)
+            if name == "state" and leaf.ndim == 6 \
+                    and leaf.shape[3] % self.tp_size == 0:
+                # (L, B, G, HG, P, N): shard SSD heads
+                return P(None, bspec, None, tp, None, None)
+            if name == "conv" and leaf.ndim == 4 \
+                    and leaf.shape[3] % self.tp_size == 0:
+                return P(None, bspec, None, tp)
+            return P(None, bspec, *(None,) * (leaf.ndim - 2))
+        return P(*(None,) * leaf.ndim)
+
+    def cache_shardings(self, caches) -> Any:
+        def walk(path, leaf):
+            keys = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+            return NamedSharding(self.mesh, self.cache_pspec("/".join(keys), leaf))
+        return jax.tree_util.tree_map_with_path(walk, caches)
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+
+def make_rules(mesh: Mesh, cfg: ModelConfig, run: RunConfig,
+               shape: Optional[ShapeConfig] = None) -> Rules:
+    return Rules(mesh, cfg, run, shape)

@@ -1,0 +1,15 @@
+"""Shared fixtures.  NOTE: no XLA device-count forcing here — smoke tests
+and benches must see the single real CPU device; multi-device tests spawn
+subprocesses with their own XLA_FLAGS (see _mdev.py)."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ArrowheadStructure, BandedCTSF, TileGrid,
+                        chunked_tree_sum, factorize_window, logdet, solve,
+                        symbolic_factorize, tile_pattern_from_coo)
+from repro.core.ordering import rcm_ordering, apply_permutation
+from repro.data import make_arrowhead
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+@st.composite
+def arrowhead_problem(draw):
+    t = draw(st.sampled_from([8, 16]))
+    ndt = draw(st.integers(3, 8))
+    bw = draw(st.integers(1, 2 * t))
+    arrow = draw(st.sampled_from([0, t // 2, t]))
+    rho = draw(st.sampled_from([0.0, 0.5, 0.9]))
+    n = ndt * t + arrow
+    seed = draw(st.integers(0, 2 ** 16))
+    return n, bw, arrow, t, rho, seed
+
+
+@given(arrowhead_problem())
+@settings(**SETTINGS)
+def test_factorization_reconstructs_matrix(problem):
+    """L L^T == A (the defining property), for random structures."""
+    n, bw, arrow, t, rho, seed = problem
+    A, stc = make_arrowhead(n, bw, arrow, rho=rho, seed=seed)
+    g = TileGrid(stc, t=t)
+    bm = BandedCTSF.from_sparse(A, g)
+    dense = bm.to_dense(lower_only=False)
+    f = factorize_window(bm)
+    L = np.tril(f.ctsf.to_dense())
+    recon = L @ L.T
+    scale = max(1.0, np.abs(dense).max())
+    assert np.abs(recon - dense).max() < 5e-3 * scale
+
+
+@given(arrowhead_problem())
+@settings(**SETTINGS)
+def test_solve_inverts(problem):
+    n, bw, arrow, t, rho, seed = problem
+    A, stc = make_arrowhead(n, bw, arrow, rho=rho, seed=seed)
+    g = TileGrid(stc, t=t)
+    bm = BandedCTSF.from_sparse(A, g)
+    dense = bm.to_dense(lower_only=False)
+    f = factorize_window(bm)
+    rng = np.random.default_rng(seed)
+    b = rng.standard_normal(g.padded_n).astype(np.float32)
+    x = np.asarray(solve(f, jnp.asarray(b)))
+    resid = np.abs(dense @ x - b).max()
+    assert resid < 1e-2 * max(1.0, np.abs(b).max(), np.abs(dense).max())
+
+
+@given(arrowhead_problem())
+@settings(**SETTINGS)
+def test_logdet_matches_slogdet(problem):
+    n, bw, arrow, t, rho, seed = problem
+    A, stc = make_arrowhead(n, bw, arrow, rho=rho, seed=seed)
+    g = TileGrid(stc, t=t)
+    bm = BandedCTSF.from_sparse(A, g)
+    f = factorize_window(bm)
+    sign, ld = np.linalg.slogdet(bm.to_dense(lower_only=False))
+    assert sign > 0
+    assert abs(float(logdet(f)) - ld) < 1e-2 * max(1.0, abs(ld))
+
+
+@given(st.integers(1, 64), st.integers(1, 16), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_tree_reduction_is_reassociation(k, chunks, seed):
+    """chunked_tree_sum == plain sum for any (K, chunk) combination."""
+    rng = np.random.default_rng(seed)
+    terms = jnp.asarray(rng.standard_normal((k, 5, 5)), jnp.float32)
+    got = np.asarray(chunked_tree_sum(terms, chunks))
+    np.testing.assert_allclose(got, np.asarray(terms.sum(0)),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(arrowhead_problem())
+@settings(**SETTINGS)
+def test_symbolic_pattern_contains_input(problem):
+    """L pattern ⊇ A pattern; tasks only touch allocated tiles."""
+    n, bw, arrow, t, rho, seed = problem
+    A, stc = make_arrowhead(n, bw, arrow, rho=rho, seed=seed)
+    g = TileGrid(stc, t=t)
+    a_tiles = tile_pattern_from_coo(A, g)
+    s = symbolic_factorize(a_tiles)
+    assert not (a_tiles & ~s.l_pattern).any()
+    for task in s.tasks:
+        if task.m >= 0 and task.type.name in ("TRSM", "GEMM"):
+            assert s.l_pattern[task.m, task.k]
+
+
+@given(st.integers(30, 200), st.integers(1, 20), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_rcm_permutation_bijective(n, bw, seed):
+    A, stc = make_arrowhead(n, bw, 0, seed=seed)
+    perm = rcm_ordering(A, stc, partial=False)
+    assert sorted(perm.tolist()) == list(range(n))
+    # symmetric permutation preserves symmetry + diagonal positivity
+    P = apply_permutation(A, perm)
+    assert (np.abs(P.toarray() - P.toarray().T) < 1e-9).all()

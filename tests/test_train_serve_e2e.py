@@ -1,0 +1,105 @@
+"""End-to-end behaviour: training loop drives loss down; serving generates;
+fault injection mid-training recovers; dry-run machinery works on a small
+cell (subprocess with 512 fake devices)."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from _mdev import REPO, run_multidevice
+from repro.launch.train import train
+from repro.runtime.fault_tolerance import FailureInjector
+
+
+@pytest.mark.slow
+def test_training_reduces_loss():
+    out = train("qwen2-7b", steps=40, batch=8, seq=64, log_every=0,
+                checkpoint_dir="/tmp/repro_test_ckpt_a")
+    losses = out["losses"]
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.1, (first, last)
+
+
+@pytest.mark.slow
+def test_training_with_arrowhead_optimizer_reduces_loss():
+    out = train("qwen2-7b", steps=40, batch=8, seq=64, log_every=0,
+                optimizer="arrowhead", checkpoint_dir="/tmp/repro_test_ckpt_b")
+    losses = out["losses"]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+    assert np.isfinite(losses).all()
+
+
+@pytest.mark.slow
+def test_training_survives_injected_failures():
+    inj = FailureInjector({7: 1, 13: 5})   # transient at 7; hard at 13
+    out = train("granite-moe-1b-a400m", steps=20, batch=4, seq=32,
+                log_every=0, injector=inj,
+                checkpoint_dir="/tmp/repro_test_ckpt_c")
+    assert int(out["state"].step) == 20    # finished despite failures
+    assert 7 in inj.injected and 13 in inj.injected
+
+
+@pytest.mark.slow
+def test_serve_generates_tokens():
+    from repro.configs import get
+    from repro.configs.base import RunConfig
+    from repro.launch.serve import Server
+    from repro.launch.train import reduce_config
+    cfg = reduce_config(get("qwen2-7b"), layers=2, d_model=64)
+    server = Server(cfg, RunConfig(remat="none", loss_chunk=64), max_len=48)
+    batch = {"tokens": np.random.default_rng(0).integers(
+        0, cfg.vocab, (2, 16)).astype(np.int32)}
+    out = server.generate(batch, gen_len=8)
+    assert out["tokens"].shape == (2, 8)
+    assert (out["tokens"] >= 0).all() and (out["tokens"] < cfg.vocab_padded).all()
+
+
+@pytest.mark.slow
+def test_dryrun_cell_small():
+    """Full dry-run machinery on the cheapest real cell, 512 fake devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-1.3b",
+         "--shape", "long_500k", "--no-extrapolate", "--out",
+         "/tmp/repro_test_dryrun"],
+        env=env, capture_output=True, text=True, timeout=560, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    with open("/tmp/repro_test_dryrun/mamba2-1.3b_long_500k_single.json") as f:
+        rec = json.load(f)
+    assert rec["status"] == "ok"
+    assert rec["memory"]["total_per_device_gib"] < 16.0   # fits v5e
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ar = f32[1024,16]{1,0} all-reduce(%x), channel_id=1, replica_groups=[4,4]<=[16]
+  %ag = bf16[512]{0} all-gather(%y), dimensions={0}, replica_groups=[8,2]<=[16]
+  %rs = f32[8]{0} reduce-scatter(%z), dimensions={0}, replica_groups=[2,8]<=[16]
+  %ags = (f32[64]{0}) all-gather-start(%q), replica_groups=[1,4]<=[4]
+  %agd = f32[64]{0} all-gather-done(%ags)
+  %cp = f32[4]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %other = f32[999]{0} add(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 1024 * 16 * 4
+    assert out["all-gather"] == 512 * 2 / 2 + 64 * 4 / 4
+    assert out["reduce-scatter"] == 8 * 4 * 8
+    assert out["collective-permute"] == 4 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_mesh_functions_do_not_touch_devices():
+    """Importing mesh.py must not initialize jax device state."""
+    code = ("import repro.launch.mesh as m; import sys; "
+            "assert 'jax' in sys.modules; print('OK')")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
