@@ -10,6 +10,8 @@ matrices (long on CPU); the default is structure-preserving scaled versions.
   Fig. 13     -> bench_libraries (dense crossover column)
   Table III   -> bench_tile_size      (+ accelerator tile-size terms)
   App. A      -> bench_concurrent     (concurrent factorizations, precond)
+  Serving     -> bench_solve          (multi-RHS sweeps, batched factorize;
+                                       writes BENCH_solve.json)
   §Roofline   -> roofline             (from dry-run artifacts)
 """
 from __future__ import annotations
@@ -27,8 +29,8 @@ def main() -> None:
     quick = not args.full
 
     from . import (bench_accumulation, bench_concurrent, bench_libraries,
-                   bench_scalability, bench_tile_size, bench_tree_reduction,
-                   roofline)
+                   bench_scalability, bench_solve, bench_tile_size,
+                   bench_tree_reduction, roofline)
     suites = {
         "accumulation": bench_accumulation,
         "libraries": bench_libraries,
@@ -36,6 +38,7 @@ def main() -> None:
         "tree_reduction": bench_tree_reduction,
         "tile_size": bench_tile_size,
         "concurrent": bench_concurrent,
+        "solve": bench_solve,
         "roofline": roofline,
     }
     failed = False

@@ -3,10 +3,12 @@ from .structure import (ArrowheadStructure, TileGrid, measure_arrowhead,
                         tile_pattern_from_coo, banded_arrowhead_tile_pattern)
 from .symbolic import SymbolicFactorization, Task, TaskType, symbolic_factorize
 from .ctsf import BandedCTSF, TileMatrix
-from .cholesky import CholeskyFactor, factorize_tasklist, factorize_window
+from .cholesky import (CholeskyFactor, factorize_tasklist, factorize_window,
+                       factorize_window_batched)
 from .tree_reduction import chunked_tree_sum, should_use_tree, tree_combine
-from .solve import (backward_solve, forward_solve, logdet,
-                    marginal_variances, sample_gmrf, solve)
+from .solve import (backward_solve, backward_solve_many, forward_solve,
+                    forward_solve_many, logdet, marginal_variances,
+                    sample_gmrf, sample_gmrf_many, solve, solve_many)
 
 __all__ = [
     "ArrowheadStructure", "TileGrid", "measure_arrowhead",
@@ -14,7 +16,9 @@ __all__ = [
     "SymbolicFactorization", "Task", "TaskType", "symbolic_factorize",
     "BandedCTSF", "TileMatrix",
     "CholeskyFactor", "factorize_tasklist", "factorize_window",
+    "factorize_window_batched",
     "chunked_tree_sum", "should_use_tree", "tree_combine",
-    "backward_solve", "forward_solve", "logdet", "marginal_variances",
-    "sample_gmrf", "solve",
+    "backward_solve", "backward_solve_many", "forward_solve",
+    "forward_solve_many", "logdet", "marginal_variances",
+    "sample_gmrf", "sample_gmrf_many", "solve", "solve_many",
 ]

@@ -33,7 +33,8 @@ from .ctsf import BandedCTSF, TileMatrix
 from .symbolic import Task, TaskType
 from .tree_reduction import chunked_tree_sum, should_use_tree
 
-__all__ = ["factorize_tasklist", "factorize_window", "CholeskyFactor"]
+__all__ = ["factorize_tasklist", "factorize_window",
+           "factorize_window_batched", "CholeskyFactor"]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -162,18 +163,36 @@ class CholeskyFactor:
 
 
 def _corner_dense_cholesky(c: jnp.ndarray, impl: Optional[str]) -> jnp.ndarray:
-    """Blocked dense Cholesky of the (nat, nat, t, t) corner (nat is tiny:
-    the paper's arrow thickness <= 200 elements = 1–2 tiles)."""
-    nat = c.shape[0]
-    for k in range(nat):
-        for n in range(k):
-            c = c.at[k, k].set(ops.syrk(c[k, k], c[k, n], impl=impl))
-        c = c.at[k, k].set(ops.potrf(c[k, k], impl=impl))
-        for m in range(k + 1, nat):
-            for n in range(k):
-                c = c.at[m, k].set(ops.gemm(c[m, k], c[m, n], c[k, n], impl=impl))
-            c = c.at[m, k].set(ops.trsm(c[k, k], c[m, k], impl=impl))
-    return c
+    """Blocked dense Cholesky of the (nat, nat, t, t) corner.
+
+    Left-looking over columns as a single ``lax.fori_loop``: each step does
+    one masked batched SYRK/GEMM contraction over the finalized columns plus
+    a batched TRSM of the whole sub-diagonal panel.  Trace/compile size is
+    O(nat) instead of the O(nat²) of the previous Python-unrolled tile
+    loops — the difference between seconds and minutes of XLA compile for
+    thick arrows — while tiny corners lower to the same handful of kernels.
+    """
+    nat, t = c.shape[0], c.shape[-1]
+    rows = jnp.arange(nat)
+
+    def col_step(k, c):
+        done = (rows < k)[:, None, None]                # finalized columns j<k
+        row_k = jax.lax.dynamic_slice(c, (k, 0, 0, 0), (1, nat, t, t))[0]
+        rk = jnp.where(done, row_k, 0.0)                # L[k, :k], zero-padded
+        ckk = jax.lax.dynamic_slice(c, (k, k, 0, 0), (1, 1, t, t))[0, 0]
+        syrk_acc = jnp.einsum("jab,jcb->ac", rk, rk, precision=_HI)
+        lkk = ops.potrf(ckk - syrk_acc, impl=impl)
+        col_k = jax.lax.dynamic_slice(c, (0, k, 0, 0), (nat, 1, t, t))[:, 0]
+        # masked rk zeroes the j>=k terms, so unfactorized columns of c
+        # contribute nothing to the GEMM accumulation
+        gemm_acc = jnp.einsum("mjab,jcb->mac", c, rk, precision=_HI)
+        panel = ops.trsm(lkk, col_k - gemm_acc, impl=impl)
+        new_col = jnp.where((rows > k)[:, None, None], panel,
+                            jnp.where((rows == k)[:, None, None],
+                                      lkk[None], col_k))
+        return jax.lax.dynamic_update_slice(c, new_col[:, None], (0, k, 0, 0))
+
+    return jax.lax.fori_loop(0, nat, col_step, c)
 
 
 def _band_arrow_sweep_ring(Dr, R, grid, impl):
@@ -310,3 +329,69 @@ def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
     """Banded-arrowhead factorization (window backend)."""
     Dr, R, C = _factorize_window_impl(m.Dr, m.R, m.C, m.grid, impl, tree_chunks)
     return CholeskyFactor(BandedCTSF(m.grid, Dr, R, C))
+
+
+# ---------------------------------------------------------------------------
+# Batched window factorization (INLA θ-sweep serving path)
+# ---------------------------------------------------------------------------
+
+_BATCHED_WINDOW_CACHE: Dict[Tuple, object] = {}
+
+
+def _next_pow2(b: int) -> int:
+    return 1 << max(b - 1, 0).bit_length()
+
+
+def _batched_window_fn(grid, impl, tree_chunks, sweep="ring"):
+    """One vmapped+jitted window factorization per (grid, impl, chunks,
+    sweep) — cached on the Python side so repeated θ-sweeps reuse the same
+    traced function object (and therefore XLA's compile cache)."""
+    key = (grid, impl, tree_chunks, sweep)
+    fn = _BATCHED_WINDOW_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(jax.vmap(
+            lambda dr, r, c: _factorize_window_impl(dr, r, c, grid, impl,
+                                                    tree_chunks, sweep)))
+        _BATCHED_WINDOW_CACHE[key] = fn
+    return fn
+
+
+def factorize_window_batched(batch, impl: Optional[str] = None,
+                             tree_chunks: int = 8,
+                             bucket: bool = True) -> CholeskyFactor:
+    """Factorize a batch of same-grid matrices in one vmapped dispatch.
+
+    ``batch`` is either a list of :class:`BandedCTSF` or one whose arrays
+    carry a leading batch axis (cf. ``concurrent.stack_ctsf``).  This is the
+    INLA θ-sweep primitive: every hyperparameter candidate's arrowhead
+    matrix rides the same ring sweep + corner Schur, so a sweep of B
+    candidates costs one kernel launch sequence instead of B.
+
+    With ``bucket=True`` the batch is padded (by repeating the last matrix)
+    to the next power of two before dispatch and the padding results are
+    dropped — bounding XLA compiles per grid at log2(max batch) instead of
+    one per distinct sweep size.  The vmapped callable itself is cached per
+    (grid, impl, tree_chunks), so factorizing a new batch of a known shape
+    costs zero retracing.
+    """
+    if isinstance(batch, (list, tuple)):
+        grid = batch[0].grid
+        for m in batch:
+            assert m.grid == grid, "batched factorization needs equal structure"
+        Dr = jnp.stack([m.Dr for m in batch])
+        R = jnp.stack([m.R for m in batch])
+        C = jnp.stack([m.C for m in batch])
+    else:
+        grid = batch.grid
+        Dr, R, C = batch.Dr, batch.R, batch.C
+        assert Dr.ndim == 5, "batched CTSF needs a leading batch axis"
+    b = Dr.shape[0]
+    nb = _next_pow2(b) if bucket else b
+    if nb != b:
+        pad = nb - b
+        Dr, R, C = (jnp.concatenate([a, jnp.broadcast_to(
+            a[-1:], (pad,) + a.shape[1:])]) for a in (Dr, R, C))
+    dr, r, c = _batched_window_fn(grid, impl, tree_chunks)(Dr, R, C)
+    if nb != b:
+        dr, r, c = dr[:b], r[:b], c[:b]
+    return CholeskyFactor(BandedCTSF(grid, dr, r, c))

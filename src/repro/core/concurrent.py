@@ -16,11 +16,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .cholesky import CholeskyFactor, _factorize_window_impl
+from .cholesky import (CholeskyFactor, _factorize_window_impl,
+                       factorize_window_batched)
 from .ctsf import BandedCTSF
 from .structure import TileGrid
 
-__all__ = ["stack_ctsf", "concurrent_factorize", "concurrent_logdet"]
+__all__ = ["stack_ctsf", "concurrent_factorize", "concurrent_logdet",
+           "concurrent_quadratic_forms", "concurrent_solve"]
 
 
 def stack_ctsf(mats: list) -> BandedCTSF:
@@ -42,17 +44,61 @@ def concurrent_factorize(batch: BandedCTSF, mesh: Optional[Mesh] = None,
     """Factorize a batch of matrices concurrently.
 
     With ``mesh``, the batch axis is sharded over ``axis`` — one factorization
-    never spans devices (App. A's within-NUMA binding); without, it is a
-    plain vmap batch.
+    never spans devices (App. A's within-NUMA binding); without, it delegates
+    to the cached batched serving path (``factorize_window_batched``) so
+    repeated same-structure sweeps never retrace.
     """
+    if mesh is None:
+        return factorize_window_batched(batch, impl=impl,
+                                        tree_chunks=tree_chunks, bucket=False)
     fn = jax.vmap(
         lambda dr, r, c: _factorize_window_impl(dr, r, c, batch.grid, impl,
                                                 tree_chunks))
-    if mesh is not None:
-        spec = (NamedSharding(mesh, P(axis)),) * 3
-        fn = jax.jit(fn, in_shardings=spec, out_shardings=spec)
+    spec = (NamedSharding(mesh, P(axis)),) * 3
+    fn = jax.jit(fn, in_shardings=spec, out_shardings=spec)
     dr, r, c = fn(batch.Dr, batch.R, batch.C)
     return CholeskyFactor(BandedCTSF(batch.grid, dr, r, c))
+
+
+def concurrent_solve(factor: CholeskyFactor, B: jnp.ndarray,
+                     impl: Optional[str] = None) -> jnp.ndarray:
+    """Solve ``A_i X_i = B`` for every factor in the batch, one vmapped
+    multi-RHS sweep.
+
+    ``B`` is shared across the batch: shape (padded_n,) or (padded_n, k).
+    Returns (batch, padded_n) or (batch, padded_n, k).  Combined with
+    :func:`concurrent_factorize` this is the full batched serving path —
+    a θ-sweep of factorizations amortized over a panel of RHS without ever
+    leaving the device.
+    """
+    from .solve import _merge_panels, _solve_panels, _split_rhs
+    ctsf = factor.ctsf
+    g = ctsf.grid
+    panel = B[:, None] if B.ndim == 1 else B
+    bd, ba = _split_rhs(g, panel)
+    xd, xa = jax.vmap(
+        lambda dr, r, c: _solve_panels(dr, r, c, bd, ba, g, impl))(
+        ctsf.Dr, ctsf.R, ctsf.C)
+    out = jax.vmap(_merge_panels)(xd, xa)
+    return out[..., 0] if B.ndim == 1 else out
+
+
+def concurrent_quadratic_forms(factor: CholeskyFactor, y: jnp.ndarray,
+                               impl: Optional[str] = None) -> jnp.ndarray:
+    """``y^T A_i^{-1} y`` for each factor in the batch.
+
+    Uses ``‖L_i^{-1} y‖²`` — only the *forward* sweep, vmapped over the
+    batch — which is half the work of a full solve and exactly the
+    quadratic-form term INLA's objective needs per θ candidate.
+    """
+    from .solve import _forward_impl, _split_rhs
+    ctsf = factor.ctsf
+    g = ctsf.grid
+    bd, ba = _split_rhs(g, y.reshape(-1, 1))
+    fn = jax.vmap(lambda dr, r, c: _forward_impl(dr, r, c, bd, ba, g, impl))
+    yd, ya = fn(ctsf.Dr, ctsf.R, ctsf.C)
+    return (jnp.sum(yd * yd, axis=(1, 2, 3))
+            + jnp.sum(ya * ya, axis=(1, 2, 3)))
 
 
 def concurrent_logdet(factor: CholeskyFactor) -> jnp.ndarray:

@@ -4,129 +4,212 @@ INLA (the paper's driving application) needs, per factorization: solves
 ``A x = b`` (posterior means), ``log det A`` (Laplace approximations) and
 samples ``L^{-T} z`` (GMRF realizations).  All operate directly on the
 banded-arrowhead CTSF factor without densification.
+
+Batched serving path
+--------------------
+Every sweep here is a *multi-RHS panel* sweep: right-hand sides are shaped
+``(padded_n, k)`` and the band step applies each ``(t, t)`` factor tile to a
+``(t, k)`` panel — one matmul instead of k matvecs (cf. Ruipeng Li's
+observation that sparse triangular solves only escape the latency/bandwidth
+bound when RHS are blocked into panels).  The single-RHS API
+(:func:`solve`, :func:`forward_solve`, ...) is the k=1 specialization of the
+same code path; :func:`solve_many` exposes the panel form, and
+:func:`marginal_variances` / :func:`sample_gmrf` ride one blocked sweep for
+all selected indices / samples.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from .cholesky import CholeskyFactor
 from .ctsf import BandedCTSF
 
 __all__ = ["forward_solve", "backward_solve", "solve", "logdet",
-           "sample_gmrf", "marginal_variances"]
+           "forward_solve_many", "backward_solve_many", "solve_many",
+           "sample_gmrf", "sample_gmrf_many", "marginal_variances"]
 
 _HI = jax.lax.Precision.HIGHEST
 
 
-def _split_rhs(ctsf: BandedCTSF, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    g = ctsf.grid
+def _split_rhs(g, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split an (padded_n, k) RHS panel into band (ndt, t, k) and arrow
+    (nat, t, k) tile panels."""
     t, ndt, nat = g.t, g.n_diag_tiles, g.n_arrow_tiles
-    b = b.reshape(-1)
-    assert b.shape[0] == g.padded_n, f"rhs must be padded to {g.padded_n}"
-    bd = b[: ndt * t].reshape(ndt, t)
-    ba = b[ndt * t:].reshape(nat, t) if nat else jnp.zeros((0, t), b.dtype)
+    assert b.ndim == 2 and b.shape[0] == g.padded_n, \
+        f"rhs panel must be (padded_n={g.padded_n}, k), got {b.shape}"
+    k = b.shape[1]
+    bd = b[: ndt * t].reshape(ndt, t, k)
+    ba = b[ndt * t:].reshape(nat, t, k) if nat else jnp.zeros((0, t, k), b.dtype)
     return bd, ba
 
 
-@functools.partial(jax.jit, static_argnames=("grid",))
-def _forward_impl(Dr, R, C, bd, ba, grid):
-    """Solve L y = b."""
+@functools.partial(jax.jit, static_argnames=("grid", "impl"))
+def _forward_impl(Dr, R, C, bd, ba, grid, impl=None):
+    """Solve L Y = B for an RHS panel: bd (ndt, t, k), ba (nat, t, k)."""
     t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
-    yp = jnp.zeros((ndt + bt, t), bd.dtype)  # bt leading zeros
+    k = bd.shape[-1]
+    yp = jnp.zeros((ndt + bt, t, k), bd.dtype)  # bt leading zeros
 
-    def step(k, yp):
-        # y_k = Lkk^{-1} (b_k - sum_{j=1..bt} L[k,k-j] y_{k-j})
-        ywin = jax.lax.dynamic_slice(yp, (k, 0), (bt, t)) if bt else yp[:0]
-        # ywin[bt - j] = y_{k-j}; Dr[k, j] = L[k, k-j]
-        drk = jax.lax.dynamic_slice(Dr, (k, 0, 0, 0), (1, bt + 1, t, t))[0]
-        acc = jnp.einsum("jab,jb->a", jnp.flip(drk[1:], axis=0), ywin,
+    def step(m, yp):
+        # Y_m = Lmm^{-1} (B_m - sum_{j=1..bt} L[m,m-j] Y_{m-j})
+        ywin = jax.lax.dynamic_slice(yp, (m, 0, 0), (bt, t, k)) if bt else yp[:0]
+        # ywin[bt - j] = Y_{m-j}; Dr[m, j] = L[m, m-j]
+        drm = jax.lax.dynamic_slice(Dr, (m, 0, 0, 0), (1, bt + 1, t, t))[0]
+        acc = jnp.einsum("jab,jbk->ak", jnp.flip(drm[1:], axis=0), ywin,
                          precision=_HI) if bt else 0.0
-        bk = jax.lax.dynamic_slice(bd, (k, 0), (1, t))[0]
-        yk = jax.scipy.linalg.solve_triangular(drk[0], bk - acc, lower=True)
-        return jax.lax.dynamic_update_slice(yp, yk[None], (k + bt, 0))
+        bm = jax.lax.dynamic_slice(bd, (m, 0, 0), (1, t, k))[0]
+        ym = ops.solve_panel(drm[0], bm - acc, impl=impl)
+        return jax.lax.dynamic_update_slice(yp, ym[None], (m + bt, 0, 0))
 
-    yp = jax.lax.fori_loop(0, ndt, step, yp)
+    yp = jax.lax.fori_loop(0, ndt, step, yp) if ndt else yp
     yd = yp[bt:]
 
     if nat:
-        # arrow rows: y_a = Lc^{-1} (b_a - sum_n R[n] y_n), block forward
-        acc = jnp.einsum("niab,nb->ia", R, yd, precision=_HI)
-        ya = jnp.zeros((nat, t), bd.dtype)
-        for i in range(nat):
-            rhs = ba[i] - acc[i]
-            for j in range(i):
-                rhs = rhs - jnp.dot(C[i, j], ya[j], precision=_HI)
-            ya = ya.at[i].set(
-                jax.scipy.linalg.solve_triangular(C[i, i], rhs, lower=True))
+        # arrow rows: Y_a = Lc^{-1} (B_a - sum_n R[n] Y_n), block forward
+        acc = jnp.einsum("niab,nbk->iak", R, yd, precision=_HI)
+        rhs0 = ba - acc
+        iota = jnp.arange(nat)
+
+        def corner_step(i, ya):
+            # rhs_i = rhs0_i - sum_{j<i} C[i,j] Y_j  (masked full-row matmul)
+            crow = jax.lax.dynamic_slice(C, (i, 0, 0, 0), (1, nat, t, t))[0]
+            crow = jnp.where((iota < i)[:, None, None], crow, 0.0)
+            contrib = jnp.einsum("jab,jbk->ak", crow, ya, precision=_HI)
+            cii = jax.lax.dynamic_slice(C, (i, i, 0, 0), (1, 1, t, t))[0, 0]
+            rhs = jax.lax.dynamic_slice(rhs0, (i, 0, 0), (1, t, k))[0] - contrib
+            yi = ops.solve_panel(cii, rhs, impl=impl)
+            return jax.lax.dynamic_update_slice(ya, yi[None], (i, 0, 0))
+
+        ya = jax.lax.fori_loop(0, nat, corner_step,
+                               jnp.zeros((nat, t, k), bd.dtype))
     else:
         ya = ba
     return yd, ya
 
 
-@functools.partial(jax.jit, static_argnames=("grid",))
-def _backward_impl(Dr, R, C, yd, ya, grid):
-    """Solve L^T x = y."""
+@functools.partial(jax.jit, static_argnames=("grid", "impl"))
+def _backward_impl(Dr, R, C, yd, ya, grid, impl=None):
+    """Solve L^T X = Y for an RHS panel: yd (ndt, t, k), ya (nat, t, k)."""
     t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
+    k = yd.shape[-1]
 
     if nat:
-        xa = jnp.zeros((nat, t), yd.dtype)
-        for i in range(nat - 1, -1, -1):
-            rhs = ya[i]
-            for j in range(i + 1, nat):
-                rhs = rhs - jnp.dot(C[j, i].T, xa[j], precision=_HI)
-            xa = xa.at[i].set(jax.scipy.linalg.solve_triangular(
-                C[i, i], rhs, lower=True, trans=1))
+        iota = jnp.arange(nat)
+
+        def corner_step(s, xa):
+            i = nat - 1 - s
+            # rhs_i = Y_i - sum_{j>i} C[j,i]^T X_j  (masked full-column matmul)
+            ccol = jax.lax.dynamic_slice(C, (0, i, 0, 0), (nat, 1, t, t))[:, 0]
+            ccol = jnp.where((iota > i)[:, None, None], ccol, 0.0)
+            contrib = jnp.einsum("jba,jbk->ak", ccol, xa, precision=_HI)
+            cii = jax.lax.dynamic_slice(C, (i, i, 0, 0), (1, 1, t, t))[0, 0]
+            rhs = jax.lax.dynamic_slice(ya, (i, 0, 0), (1, t, k))[0] - contrib
+            xi = ops.solve_panel(cii, rhs, trans=True, impl=impl)
+            return jax.lax.dynamic_update_slice(xa, xi[None], (i, 0, 0))
+
+        xa = jax.lax.fori_loop(0, nat, corner_step,
+                               jnp.zeros((nat, t, k), yd.dtype))
     else:
         xa = ya
 
     # band rows, reverse sweep:
-    # x_k = Lkk^{-T}(y_k - sum_{j=1..bt} L[k+j,k]^T x_{k+j} - sum_i R[k,i]^T xa_i)
-    Drp = jnp.pad(Dr, ((0, bt), (0, 0), (0, 0), (0, 0)))  # slack for k+j reads
-    xp = jnp.zeros((ndt + bt, t), yd.dtype)
+    # X_m = Lmm^{-T}(Y_m - sum_{j=1..bt} L[m+j,m]^T X_{m+j} - sum_i R[m,i]^T Xa_i)
+    Drp = jnp.pad(Dr, ((0, bt), (0, 0), (0, 0), (0, 0)))  # slack for m+j reads
+    xp = jnp.zeros((ndt + bt, t, k), yd.dtype)
 
     jr = jnp.arange(bt)
 
     def step(i, xp):
-        k = ndt - 1 - i
-        wb = jax.lax.dynamic_slice(Drp, (k + 1, 0, 0, 0), (bt, bt + 1, t, t)) \
+        m = ndt - 1 - i
+        wb = jax.lax.dynamic_slice(Drp, (m + 1, 0, 0, 0), (bt, bt + 1, t, t)) \
             if bt else Drp[:0]
-        # L[k+j, k] = Drp[k+j, j]  -> wb[j-1, j]
+        # L[m+j, m] = Drp[m+j, j]  -> wb[j-1, j]
         sub = wb[jr, jr + 1] if bt else wb[:, 0]
-        xwin = jax.lax.dynamic_slice(xp, (k + 1, 0), (bt, t)) if bt else xp[:0]
-        acc = jnp.einsum("jab,ja->b", sub, xwin, precision=_HI) if bt else 0.0
+        xwin = jax.lax.dynamic_slice(xp, (m + 1, 0, 0), (bt, t, k)) if bt else xp[:0]
+        acc = jnp.einsum("jab,jak->bk", sub, xwin, precision=_HI) if bt else 0.0
         if nat:
-            rk = jax.lax.dynamic_slice(R, (k, 0, 0, 0), (1, nat, t, t))[0]
-            acc = acc + jnp.einsum("iab,ia->b", rk, xa, precision=_HI)
-        yk = jax.lax.dynamic_slice(yd, (k, 0), (1, t))[0]
-        lkk = jax.lax.dynamic_slice(Dr, (k, 0, 0, 0), (1, 1, t, t))[0, 0]
-        xk = jax.scipy.linalg.solve_triangular(lkk, yk - acc, lower=True, trans=1)
-        return jax.lax.dynamic_update_slice(xp, xk[None], (k, 0))
+            rm = jax.lax.dynamic_slice(R, (m, 0, 0, 0), (1, nat, t, t))[0]
+            acc = acc + jnp.einsum("iab,iak->bk", rm, xa, precision=_HI)
+        ym = jax.lax.dynamic_slice(yd, (m, 0, 0), (1, t, k))[0]
+        lmm = jax.lax.dynamic_slice(Dr, (m, 0, 0, 0), (1, 1, t, t))[0, 0]
+        xm = ops.solve_panel(lmm, ym - acc, trans=True, impl=impl)
+        return jax.lax.dynamic_update_slice(xp, xm[None], (m, 0, 0))
 
-    xp = jax.lax.fori_loop(0, ndt, step, xp)
+    xp = jax.lax.fori_loop(0, ndt, step, xp) if ndt else xp
     return xp[:ndt], xa
 
 
-def forward_solve(factor: CholeskyFactor, b: jnp.ndarray) -> jnp.ndarray:
+def _solve_panels(Dr, R, C, bd, ba, grid, impl=None):
+    """Full ``A X = B`` on split panels: forward then backward sweep.  The
+    single source of truth shared by :func:`solve_many` and the vmapped
+    ``concurrent_solve`` — layout changes (e.g. a fused Pallas band-solve)
+    land here once."""
+    yd, ya = _forward_impl(Dr, R, C, bd, ba, grid, impl)
+    return _backward_impl(Dr, R, C, yd, ya, grid, impl)
+
+
+def _merge_panels(xd: jnp.ndarray, xa: jnp.ndarray) -> jnp.ndarray:
+    """Rejoin band (ndt, t, k) and arrow (nat, t, k) tile panels into one
+    (padded_n, k) RHS panel — the inverse of :func:`_split_rhs`."""
+    k = xd.shape[-1]
+    return jnp.concatenate([xd.reshape(-1, k), xa.reshape(-1, k)])
+
+
+def forward_solve_many(factor: CholeskyFactor, B: jnp.ndarray,
+                       impl: Optional[str] = None) -> jnp.ndarray:
+    """Solve ``L Y = B`` for an (padded_n, k) panel of right-hand sides in
+    one blocked sweep."""
     ctsf = factor.ctsf
-    bd, ba = _split_rhs(ctsf, b)
-    yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, ctsf.grid)
-    return jnp.concatenate([yd.reshape(-1), ya.reshape(-1)])
+    bd, ba = _split_rhs(ctsf.grid, B)
+    yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, ctsf.grid, impl)
+    return _merge_panels(yd, ya)
 
 
-def backward_solve(factor: CholeskyFactor, y: jnp.ndarray) -> jnp.ndarray:
+def backward_solve_many(factor: CholeskyFactor, Y: jnp.ndarray,
+                        impl: Optional[str] = None) -> jnp.ndarray:
+    """Solve ``L^T X = Y`` for an (padded_n, k) panel of right-hand sides in
+    one blocked sweep."""
     ctsf = factor.ctsf
-    yd, ya = _split_rhs(ctsf, y)
-    xd, xa = _backward_impl(ctsf.Dr, ctsf.R, ctsf.C, yd, ya, ctsf.grid)
-    return jnp.concatenate([xd.reshape(-1), xa.reshape(-1)])
+    yd, ya = _split_rhs(ctsf.grid, Y)
+    xd, xa = _backward_impl(ctsf.Dr, ctsf.R, ctsf.C, yd, ya, ctsf.grid, impl)
+    return _merge_panels(xd, xa)
 
 
-def solve(factor: CholeskyFactor, b: jnp.ndarray) -> jnp.ndarray:
+def solve_many(factor: CholeskyFactor, B: jnp.ndarray,
+               impl: Optional[str] = None) -> jnp.ndarray:
+    """``A X = B`` for an (padded_n, k) RHS panel via ``L L^T``.
+
+    Equivalent to stacking k :func:`solve` calls but swept once: each band
+    step is a ``(t, t) @ (t, k)`` matmul, so post-factorization serving cost
+    is matmul-bound instead of k latency-bound substitution sweeps.
+    """
+    ctsf = factor.ctsf
+    bd, ba = _split_rhs(ctsf.grid, B)
+    xd, xa = _solve_panels(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, ctsf.grid, impl)
+    return _merge_panels(xd, xa)
+
+
+def forward_solve(factor: CholeskyFactor, b: jnp.ndarray,
+                  impl: Optional[str] = None) -> jnp.ndarray:
+    """Solve ``L y = b`` (k=1 specialization of the panel sweep)."""
+    return forward_solve_many(factor, b.reshape(-1, 1), impl)[:, 0]
+
+
+def backward_solve(factor: CholeskyFactor, y: jnp.ndarray,
+                   impl: Optional[str] = None) -> jnp.ndarray:
+    """Solve ``L^T x = y`` (k=1 specialization of the panel sweep)."""
+    return backward_solve_many(factor, y.reshape(-1, 1), impl)[:, 0]
+
+
+def solve(factor: CholeskyFactor, b: jnp.ndarray,
+          impl: Optional[str] = None) -> jnp.ndarray:
     """A x = b via L L^T."""
-    return backward_solve(factor, forward_solve(factor, b))
+    return backward_solve(factor, forward_solve(factor, b, impl), impl)
 
 
 def logdet(factor: CholeskyFactor) -> jnp.ndarray:
@@ -139,14 +222,43 @@ def sample_gmrf(factor: CholeskyFactor, key: jax.Array) -> jnp.ndarray:
     return backward_solve(factor, z)
 
 
+def sample_gmrf_many(factor: CholeskyFactor, key: jax.Array,
+                     num: int) -> jnp.ndarray:
+    """Draw ``num`` samples x ~ N(0, A^{-1}) as one (padded_n, num) panel.
+
+    All samples share a single blocked backward sweep — the serving-path
+    analogue of :func:`sample_gmrf`, amortizing the factor over the whole
+    batch of posterior realizations.
+    """
+    z = jax.random.normal(key, (factor.ctsf.grid.padded_n, num),
+                          dtype=jnp.float32)
+    return backward_solve_many(factor, z)
+
+
 def marginal_variances(factor: CholeskyFactor,
                        indices: jnp.ndarray) -> jnp.ndarray:
     """Selected diagonal of A^{-1} — INLA's posterior marginal variances.
 
-    (A^{-1})_{ii} = ‖L^{-1} e_i‖²; each selected index costs one forward
-    band solve (O(n·b) — the factor is reused across all of INLA's
-    per-latent marginals, which is why factorize-once matters there).
+    (A^{-1})_{ii} = ‖L^{-1} e_i‖².  All k selected unit vectors ride a
+    *single* multi-RHS forward sweep: the band step applies each factor tile
+    to the whole (t, k) panel at once, versus the k independent O(n·b)
+    substitution sweeps of the per-index path (kept as
+    :func:`_marginal_variances_map` for reference/benchmarking).
     """
+    g = factor.ctsf.grid
+    indices = jnp.asarray(indices)
+    k = indices.shape[0]
+    E = jnp.zeros((g.padded_n, k), jnp.float32)
+    E = E.at[indices, jnp.arange(k)].set(1.0)
+    Y = forward_solve_many(factor, E)
+    return jnp.sum(Y * Y, axis=0)
+
+
+def _marginal_variances_map(factor: CholeskyFactor,
+                            indices: jnp.ndarray) -> jnp.ndarray:
+    """Pre-batching reference: one forward sweep per selected index via
+    ``lax.map`` (k sequential O(n·b) solves).  Used by tests and
+    ``benchmarks/bench_solve.py`` as the comparison baseline."""
     g = factor.ctsf.grid
 
     def one(i):

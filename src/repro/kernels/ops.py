@@ -16,12 +16,12 @@ import jax.numpy as jnp
 
 from . import ref
 from .potrf import potrf_pallas
-from .trsm import trsm_pallas
+from .trsm import solve_panel_pallas, trsm_pallas
 from .gemm import gemm_pallas, syrk_pallas, geadd_pallas
 from .band_update import band_update_pallas
 
-__all__ = ["potrf", "trsm", "syrk", "gemm", "geadd", "band_update",
-           "default_impl"]
+__all__ = ["potrf", "trsm", "solve_panel", "syrk", "gemm", "geadd",
+           "band_update", "default_impl"]
 
 Impl = Literal["ref", "pallas", "unrolled"]
 
@@ -55,6 +55,17 @@ def trsm(l_kk: jnp.ndarray, a_mk: jnp.ndarray, impl: Impl | None = None) -> jnp.
         return ref.trsm_ref(l_kk, a_mk)
     flat = a_mk.reshape((-1,) + a_mk.shape[-2:])
     return jax.vmap(lambda x: ref.trsm_ref(l_kk, x))(flat).reshape(a_mk.shape)
+
+
+def solve_panel(l_kk: jnp.ndarray, b_panel: jnp.ndarray, trans: bool = False,
+                impl: Impl | None = None) -> jnp.ndarray:
+    """Multi-RHS triangular solve ``L X = B`` (``trans`` -> ``L^T X = B``)
+    for a (t, k) RHS panel — the tile primitive of the batched serving path
+    (`core.solve.solve_many` / one-sweep marginal variances)."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return solve_panel_pallas(l_kk, b_panel, trans=trans, interpret=_interp())
+    return ref.solve_panel_ref(l_kk, b_panel, trans=trans)
 
 
 def syrk(c_kk: jnp.ndarray, a_kn: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:

@@ -10,8 +10,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["potrf_ref", "trsm_ref", "syrk_ref", "gemm_ref", "geadd_ref",
-           "band_update_ref"]
+__all__ = ["potrf_ref", "trsm_ref", "solve_panel_ref", "syrk_ref",
+           "gemm_ref", "geadd_ref", "band_update_ref"]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -28,6 +28,18 @@ def trsm_ref(l_kk: jnp.ndarray, a_mk: jnp.ndarray) -> jnp.ndarray:
     """
     xt = jax.scipy.linalg.solve_triangular(l_kk, a_mk.T, lower=True, trans=0)
     return xt.T
+
+
+def solve_panel_ref(l_kk: jnp.ndarray, b_panel: jnp.ndarray,
+                    trans: bool = False) -> jnp.ndarray:
+    """Multi-RHS triangular panel solve: ``L X = B`` (or ``L^T X = B``).
+
+    ``B`` is a (t, k) panel of k right-hand sides — one (t, t) @ (t, k)
+    substitution sweep instead of k matvec sweeps, which is what makes the
+    batched serving path matmul-bound.
+    """
+    return jax.scipy.linalg.solve_triangular(
+        l_kk, b_panel, lower=True, trans=1 if trans else 0)
 
 
 def syrk_ref(c_kk: jnp.ndarray, a_kn: jnp.ndarray) -> jnp.ndarray:

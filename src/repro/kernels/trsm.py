@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["trsm_pallas"]
+__all__ = ["trsm_pallas", "solve_panel_pallas"]
 
 
 def _trsm_kernel(l_ref, a_ref, o_ref):
@@ -54,3 +54,57 @@ def trsm_pallas(l_kk: jnp.ndarray, a_mk: jnp.ndarray, interpret: bool = True) ->
         interpret=interpret,
     )(l3, a3)
     return out.reshape(batch_shape + (t, t))
+
+
+def _solve_panel_kernel(l_ref, b_ref, o_ref, *, trans):
+    """Multi-RHS substitution: solve L X = B (or L^T X = B) for one (t, k)
+    panel.  Each step updates a whole row of X — a (t,) x (t, k) contraction
+    — so the k right-hand sides ride one sweep instead of k."""
+    t = l_ref.shape[-2]
+    k = b_ref.shape[-1]
+    l = l_ref[0].astype(jnp.float32)
+    b = b_ref[0].astype(jnp.float32)
+    lrows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    lcols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    prows = jax.lax.broadcasted_iota(jnp.int32, (t, k), 0)
+    rvec = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+
+    def step(s, x):
+        j = (t - 1 - s) if trans else s
+        if trans:
+            # row j of U = L^T is column j of L; only i > j contribute
+            lj = jnp.sum(jnp.where(lcols == j, l, 0.0), axis=1)
+            lj_m = jnp.where(rvec > j, lj, 0.0)
+        else:
+            lj = jnp.sum(jnp.where(lrows == j, l, 0.0), axis=0)
+            lj_m = jnp.where(rvec < j, lj, 0.0)
+        ljj = jnp.sum(jnp.where(rvec == j, lj, 0.0))
+        bj = jnp.sum(jnp.where(prows == j, b, 0.0), axis=0)         # B[j, :]
+        xrow = (bj - jnp.dot(lj_m, x, precision=jax.lax.Precision.HIGHEST)) / ljj
+        return jnp.where(prows == j, xrow[None, :], x)
+
+    x = jax.lax.fori_loop(0, t, step, jnp.zeros((t, k), jnp.float32))
+    o_ref[0] = x.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("trans", "interpret"))
+def solve_panel_pallas(l_kk: jnp.ndarray, b_panel: jnp.ndarray,
+                       trans: bool = False,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Batched multi-RHS panel solve, broadcasting L over leading dims of B."""
+    t, k = b_panel.shape[-2], b_panel.shape[-1]
+    batch_shape = b_panel.shape[:-2]
+    b3 = b_panel.reshape((-1, t, k))
+    nb = b3.shape[0]
+    l3 = jnp.broadcast_to(l_kk, (nb, t, t)) if l_kk.ndim == 2 \
+        else l_kk.reshape((-1, t, t))
+    out = pl.pallas_call(
+        functools.partial(_solve_panel_kernel, trans=trans),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, t, t), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, t, k), lambda b: (b, 0, 0))],
+        out_specs=pl.BlockSpec((1, t, k), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, t, k), b_panel.dtype),
+        interpret=interpret,
+    )(l3, b3)
+    return out.reshape(batch_shape + (t, k))

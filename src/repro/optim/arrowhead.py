@@ -159,10 +159,12 @@ class ArrowheadPrecond:
         lsk, ask = self.sketch(grads)
         rhs = jnp.concatenate([lsk.reshape(-1), ask])    # ((L+1)·r,)
         g = self.grid
-        bd = rhs[: g.n_diag_tiles * g.t].reshape(g.n_diag_tiles, g.t)
-        ba = rhs[g.n_diag_tiles * g.t:].reshape(g.n_arrow_tiles, g.t)
+        # the solve sweeps take (tiles, t, k) RHS panels; this is the k=1 case
+        bd = rhs[: g.n_diag_tiles * g.t].reshape(g.n_diag_tiles, g.t, 1)
+        ba = rhs[g.n_diag_tiles * g.t:].reshape(g.n_arrow_tiles, g.t, 1)
         yd, ya = _forward_impl(factor["Dr"], factor["R"], factor["C"], bd, ba, g)
         xd, xa = _backward_impl(factor["Dr"], factor["R"], factor["C"], yd, ya, g)
+        xd, xa = xd[..., 0], xa[..., 0]
         sol_l = xd.reshape(self.n_layers, self.r)
         sol_a = xa.reshape(-1)[: self.r]
         # scale correction so magnitudes stay gradient-like

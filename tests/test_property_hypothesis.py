@@ -1,7 +1,11 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 import scipy.sparse as sp
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ArrowheadStructure, BandedCTSF, TileGrid,

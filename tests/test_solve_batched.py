@@ -1,0 +1,134 @@
+"""Batched serving path: multi-RHS sweeps, one-sweep marginal variances,
+vmapped window factorization (all vs their per-vector/per-matrix references)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BandedCTSF, TileGrid, backward_solve_many,
+                        factorize_window, factorize_window_batched,
+                        forward_solve_many, marginal_variances, sample_gmrf,
+                        sample_gmrf_many, solve, solve_many)
+from repro.core.concurrent import (concurrent_quadratic_forms,
+                                   concurrent_solve, stack_ctsf)
+from repro.core.solve import _marginal_variances_map, backward_solve
+from repro.data import make_arrowhead
+
+
+def _factored_problem(n=320, bw=24, ar=32, t=16, seed=0):
+    A, struct = make_arrowhead(n, bw, ar, rho=0.6, seed=seed)
+    grid = TileGrid(struct, t=t)
+    bm = BandedCTSF.from_sparse(A, grid)
+    return bm, factorize_window(bm), grid
+
+
+def test_solve_many_matches_columnwise_solve():
+    bm, f, grid = _factored_problem()
+    rng = np.random.default_rng(1)
+    B = jnp.asarray(rng.standard_normal((grid.padded_n, 9)).astype(np.float32))
+    X = np.asarray(solve_many(f, B))
+    for i in range(B.shape[1]):
+        xi = np.asarray(solve(f, B[:, i]))
+        np.testing.assert_allclose(X[:, i], xi, atol=1e-5, rtol=1e-5)
+
+
+def test_solve_many_matches_dense():
+    bm, f, grid = _factored_problem()
+    rng = np.random.default_rng(2)
+    B = rng.standard_normal((grid.padded_n, 5)).astype(np.float32)
+    X = np.asarray(solve_many(f, jnp.asarray(B)))
+    want = np.linalg.solve(bm.to_dense(lower_only=False), B)
+    np.testing.assert_allclose(X, want, rtol=2e-3, atol=2e-4)
+
+
+def test_forward_backward_many_roundtrip():
+    bm, f, grid = _factored_problem()
+    rng = np.random.default_rng(3)
+    B = jnp.asarray(rng.standard_normal((grid.padded_n, 4)).astype(np.float32))
+    Y = forward_solve_many(f, B)
+    X = backward_solve_many(f, Y)
+    # L L^T X = B  =>  A X = B
+    dense = bm.to_dense(lower_only=False)
+    np.testing.assert_allclose(np.asarray(dense @ np.asarray(X)),
+                               np.asarray(B), atol=5e-3)
+
+
+def test_marginal_variances_batched_vs_per_index():
+    bm, f, grid = _factored_problem()
+    idx = jnp.asarray([0, 7, 63, 150, 250, 319])
+    got = np.asarray(marginal_variances(f, idx))
+    ref = np.asarray(_marginal_variances_map(f, idx))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-6)
+
+
+def test_marginal_variances_match_dense_inverse():
+    bm, f, grid = _factored_problem(n=160, bw=16, ar=16, seed=0)
+    idx = jnp.asarray([0, 7, 63, 150, 159])
+    got = np.asarray(marginal_variances(f, idx))
+    inv = np.linalg.inv(bm.to_dense(lower_only=False))
+    want = np.diag(inv)[np.asarray(idx)]
+    np.testing.assert_allclose(got, want, rtol=2e-3)
+
+
+def test_factorize_window_batched_matches_loop():
+    mats = []
+    for s in range(3):
+        A, struct = make_arrowhead(320, 24, 32, rho=0.6, seed=s)
+        mats.append(BandedCTSF.from_sparse(A, TileGrid(struct, t=16)))
+    fb = factorize_window_batched(mats)          # bucket pads 3 -> 4
+    assert fb.ctsf.Dr.shape[0] == 3
+    for i, m in enumerate(mats):
+        fi = factorize_window(m)
+        np.testing.assert_allclose(np.asarray(fb.ctsf.Dr[i]),
+                                   np.asarray(fi.ctsf.Dr), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(fb.ctsf.R[i]),
+                                   np.asarray(fi.ctsf.R), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(fb.ctsf.C[i]),
+                                   np.asarray(fi.ctsf.C), atol=1e-5)
+
+
+def test_factorize_window_batched_stacked_input():
+    mats = []
+    for s in range(2):
+        A, struct = make_arrowhead(160, 16, 16, rho=0.5, seed=s)
+        mats.append(BandedCTSF.from_sparse(A, TileGrid(struct, t=16)))
+    batch = stack_ctsf(mats)
+    fb = factorize_window_batched(batch, bucket=False)
+    fl = factorize_window_batched(mats)
+    np.testing.assert_allclose(np.asarray(fb.ctsf.Dr), np.asarray(fl.ctsf.Dr),
+                               atol=1e-6)
+
+
+def test_concurrent_solve_and_quadratic_forms():
+    mats = []
+    for s in range(3):
+        A, struct = make_arrowhead(160, 16, 16, rho=0.5, seed=10 + s)
+        mats.append(BandedCTSF.from_sparse(A, TileGrid(struct, t=16)))
+    fb = factorize_window_batched(mats)
+    g = mats[0].grid
+    y = jnp.asarray(np.random.default_rng(4).standard_normal(
+        g.padded_n).astype(np.float32))
+    quads = np.asarray(concurrent_quadratic_forms(fb, y))
+    xs = np.asarray(concurrent_solve(fb, y))
+    for i, m in enumerate(mats):
+        dense = m.to_dense(lower_only=False)
+        want_x = np.linalg.solve(dense, np.asarray(y))
+        np.testing.assert_allclose(xs[i], want_x, rtol=2e-3, atol=2e-4)
+        np.testing.assert_allclose(quads[i], float(np.asarray(y) @ want_x),
+                                   rtol=1e-4)
+
+
+def test_sample_gmrf_many_matches_columnwise_backward():
+    bm, f, grid = _factored_problem(n=160, bw=16, ar=16)
+    rng = np.random.default_rng(5)
+    Z = jnp.asarray(rng.standard_normal((grid.padded_n, 3)).astype(np.float32))
+    many = np.asarray(backward_solve_many(f, Z))
+    for i in range(3):
+        np.testing.assert_allclose(many[:, i],
+                                   np.asarray(backward_solve(f, Z[:, i])),
+                                   atol=1e-5, rtol=1e-5)
+    s1 = sample_gmrf(f, jax.random.PRNGKey(0))
+    sm = sample_gmrf_many(f, jax.random.PRNGKey(0), num=4)
+    assert s1.shape == (grid.padded_n,)
+    assert sm.shape == (grid.padded_n, 4)
+    assert np.isfinite(np.asarray(sm)).all()
