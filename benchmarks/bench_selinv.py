@@ -1,0 +1,113 @@
+"""Selected inversion: Takahashi recurrence vs dense-panel marginals vs
+np.linalg.inv.
+
+Three ways to get posterior marginal variances from one banded-arrowhead
+factor, timed at full-diagonal selection (k = n, the INLA serving case):
+
+* :func:`selected_inverse` — one backward tile sweep, cost independent of k
+  (and it yields the whole band + arrow block of Σ, not just the diagonal).
+* ``marginal_variances(method="panels")`` — k unit-vector RHS riding one
+  blocked forward sweep; cost grows with k (the (t, t) @ (t, k) band steps).
+* ``np.linalg.inv`` of the densified matrix — the O(n³) strawman.
+
+A small-k panels point is also timed to show the crossover: panels win when
+k is tiny, the recurrence wins long before the full diagonal.  Emits a
+``BENCH_selinv.json`` trajectory point (speedups + thresholds) at the repo
+root in addition to the harness CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (BandedCTSF, TileGrid, factorize_window,
+                        marginal_variances, selected_inverse)
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _time(fn, reps=3):
+    """Min over reps — robust to transient host contention."""
+    fn()  # warmup / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = True):
+    from repro.data import make_arrowhead
+
+    n, bw, ar, t = (1024, 32, 16, 16) if quick else (4096, 64, 32, 32)
+    k_small = 32
+    A, struct = make_arrowhead(n, bw, ar, rho=0.6, seed=0)
+    grid = TileGrid(struct, t=t)
+    bm = BandedCTSF.from_sparse(A, grid)
+    factor = factorize_window(bm)
+    full_idx = np.arange(n)
+    small_idx = np.linspace(0, n - 1, k_small).astype(np.int64)
+
+    # --- Takahashi recurrence (cost independent of k) ----------------------
+    def selinv():
+        jax.block_until_ready(selected_inverse(factor).Dr)
+
+    # --- dense unit-vector panels at full-diagonal selection ---------------
+    def panels_full():
+        jax.block_until_ready(
+            marginal_variances(factor, full_idx, method="panels"))
+
+    def panels_small():
+        jax.block_until_ready(
+            marginal_variances(factor, small_idx, method="panels"))
+
+    t_selinv = _time(selinv)
+    t_panels_full = _time(panels_full)
+    t_panels_small = _time(panels_small)
+
+    # --- dense inverse strawman (timed once; O(n³)) ------------------------
+    dense = bm.to_dense(lower_only=False)
+    t0 = time.perf_counter()
+    np.linalg.inv(dense)
+    t_npinv = time.perf_counter() - t0
+
+    speedup_full = t_panels_full / t_selinv
+    rows = [
+        (f"selinv_recurrence_n{n}", t_selinv * 1e6,
+         f"full_diag;k_independent"),
+        (f"marginals_panels_k{n}", t_panels_full * 1e6,
+         f"speedup_vs_recurrence={speedup_full:.1f}x"),
+        (f"marginals_panels_k{k_small}", t_panels_small * 1e6,
+         f"small_k_point"),
+        (f"np_linalg_inv_n{n}", t_npinv * 1e6,
+         f"dense_strawman;speedup={t_npinv / t_selinv:.1f}x"),
+    ]
+
+    record = {
+        "bench": "selinv",
+        "quick": quick,
+        "problem": {"n": n, "bandwidth": bw, "arrow": ar, "t": t,
+                    "k_small": k_small},
+        "selinv_us": t_selinv * 1e6,
+        "panels_full_diag_us": t_panels_full * 1e6,
+        "panels_small_k_us": t_panels_small * 1e6,
+        "np_linalg_inv_us": t_npinv * 1e6,
+        "selinv_vs_panels_full_speedup": speedup_full,
+        "selinv_vs_np_inv_speedup": t_npinv / t_selinv,
+        "thresholds": {"selinv_vs_panels_full_speedup_min": 1.0},
+        "pass": bool(speedup_full >= 1.0),
+    }
+    with open(os.path.join(_ROOT, "BENCH_selinv.json"), "w") as f:
+        json.dump(record, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run(quick=True):
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

@@ -76,7 +76,8 @@ def run(quick: bool = True):
     idx = jnp.asarray(np.linspace(0, struct.n_diag - 1, k).astype(np.int64))
 
     def mv_batched():
-        jax.block_until_ready(marginal_variances(factor, idx))
+        jax.block_until_ready(
+            marginal_variances(factor, idx, method="panels"))
 
     def mv_map():
         jax.block_until_ready(_marginal_variances_map(factor, idx))

@@ -12,13 +12,20 @@ matrices (long on CPU); the default is structure-preserving scaled versions.
   App. A      -> bench_concurrent     (concurrent factorizations, precond)
   Serving     -> bench_solve          (multi-RHS sweeps, batched factorize;
                                        writes BENCH_solve.json)
+  Selinv      -> bench_selinv         (Takahashi recurrence vs dense-panel
+                                       marginals vs np.linalg.inv; writes
+                                       BENCH_selinv.json)
   §Roofline   -> roofline             (from dry-run artifacts)
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main() -> None:
@@ -29,8 +36,8 @@ def main() -> None:
     quick = not args.full
 
     from . import (bench_accumulation, bench_concurrent, bench_libraries,
-                   bench_scalability, bench_solve, bench_tile_size,
-                   bench_tree_reduction, roofline)
+                   bench_scalability, bench_selinv, bench_solve,
+                   bench_tile_size, bench_tree_reduction, roofline)
     suites = {
         "accumulation": bench_accumulation,
         "libraries": bench_libraries,
@@ -39,6 +46,7 @@ def main() -> None:
         "tile_size": bench_tile_size,
         "concurrent": bench_concurrent,
         "solve": bench_solve,
+        "selinv": bench_selinv,
         "roofline": roofline,
     }
     failed = False
@@ -54,6 +62,18 @@ def main() -> None:
             failed = True
             print(f"{name},ERROR,", flush=True)
             traceback.print_exc()
+            continue
+        # suites that emit a BENCH_<name>.json trajectory point also gate on
+        # its `pass` flag — a speedup-threshold regression fails the run (and
+        # therefore the CI benchmark step), not just the artifact.
+        record_path = os.path.join(_ROOT, f"BENCH_{name}.json")
+        if os.path.exists(record_path):
+            with open(record_path) as f:
+                record = json.load(f)
+            if record.get("pass") is False:
+                failed = True
+                print(f"{name},THRESHOLD_FAIL,{record.get('thresholds')}",
+                      flush=True)
     if failed:
         raise SystemExit(1)
 

@@ -9,6 +9,8 @@ from .tree_reduction import chunked_tree_sum, should_use_tree, tree_combine
 from .solve import (backward_solve, backward_solve_many, forward_solve,
                     forward_solve_many, logdet, marginal_variances,
                     sample_gmrf, sample_gmrf_many, solve, solve_many)
+from .selinv import SelectedInverse, selected_inverse, selinv_batched
+from .concurrent import concurrent_selinv
 
 __all__ = [
     "ArrowheadStructure", "TileGrid", "measure_arrowhead",
@@ -21,4 +23,6 @@ __all__ = [
     "backward_solve", "backward_solve_many", "forward_solve",
     "forward_solve_many", "logdet", "marginal_variances",
     "sample_gmrf", "sample_gmrf_many", "solve", "solve_many",
+    "SelectedInverse", "selected_inverse", "selinv_batched",
+    "concurrent_selinv",
 ]

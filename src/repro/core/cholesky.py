@@ -342,6 +342,24 @@ def _next_pow2(b: int) -> int:
     return 1 << max(b - 1, 0).bit_length()
 
 
+def _bucketed_batched_call(fn, arrays, bucket: bool):
+    """Dispatch a vmapped per-batch function with pow2 bucketing: pad the
+    leading batch axis (repeating the last element) up to the next power of
+    two, call, and drop the padding results — bounding XLA compiles per grid
+    at log2(max batch).  Shared by the batched factorization and the batched
+    selected inversion."""
+    b = arrays[0].shape[0]
+    nb = _next_pow2(b) if bucket else b
+    if nb != b:
+        pad = nb - b
+        arrays = tuple(jnp.concatenate([a, jnp.broadcast_to(
+            a[-1:], (pad,) + a.shape[1:])]) for a in arrays)
+    outs = fn(*arrays)
+    if nb != b:
+        outs = tuple(o[:b] for o in outs)
+    return outs
+
+
 def _batched_window_fn(grid, impl, tree_chunks, sweep="ring"):
     """One vmapped+jitted window factorization per (grid, impl, chunks,
     sweep) — cached on the Python side so repeated θ-sweeps reuse the same
@@ -385,13 +403,6 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
         grid = batch.grid
         Dr, R, C = batch.Dr, batch.R, batch.C
         assert Dr.ndim == 5, "batched CTSF needs a leading batch axis"
-    b = Dr.shape[0]
-    nb = _next_pow2(b) if bucket else b
-    if nb != b:
-        pad = nb - b
-        Dr, R, C = (jnp.concatenate([a, jnp.broadcast_to(
-            a[-1:], (pad,) + a.shape[1:])]) for a in (Dr, R, C))
-    dr, r, c = _batched_window_fn(grid, impl, tree_chunks)(Dr, R, C)
-    if nb != b:
-        dr, r, c = dr[:b], r[:b], c[:b]
+    dr, r, c = _bucketed_batched_call(
+        _batched_window_fn(grid, impl, tree_chunks), (Dr, R, C), bucket)
     return CholeskyFactor(BandedCTSF(grid, dr, r, c))

@@ -19,10 +19,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .cholesky import (CholeskyFactor, _factorize_window_impl,
                        factorize_window_batched)
 from .ctsf import BandedCTSF
+from .selinv import SelectedInverse, _selinv_impl, selinv_batched
 from .structure import TileGrid
 
 __all__ = ["stack_ctsf", "concurrent_factorize", "concurrent_logdet",
-           "concurrent_quadratic_forms", "concurrent_solve"]
+           "concurrent_quadratic_forms", "concurrent_selinv",
+           "concurrent_solve"]
 
 
 def stack_ctsf(mats: list) -> BandedCTSF:
@@ -81,6 +83,27 @@ def concurrent_solve(factor: CholeskyFactor, B: jnp.ndarray,
         ctsf.Dr, ctsf.R, ctsf.C)
     out = jax.vmap(_merge_panels)(xd, xa)
     return out[..., 0] if B.ndim == 1 else out
+
+
+def concurrent_selinv(factor: CholeskyFactor, mesh: Optional[Mesh] = None,
+                      axis: str = "data",
+                      impl: Optional[str] = None) -> SelectedInverse:
+    """Selected inversion of a batch of factors concurrently.
+
+    With ``mesh``, the batch axis is sharded over ``axis`` — one backward
+    Takahashi sweep never spans devices, matching
+    :func:`concurrent_factorize`'s placement so a θ-sweep's factors and
+    their posterior marginals stay device-resident end to end; without, it
+    delegates to the cached batched path (:func:`selinv_batched`).
+    """
+    if mesh is None:
+        return selinv_batched(factor, impl=impl, bucket=False)
+    ctsf = factor.ctsf
+    fn = jax.vmap(lambda dr, r, c: _selinv_impl(dr, r, c, ctsf.grid, impl))
+    spec = (NamedSharding(mesh, P(axis)),) * 3
+    fn = jax.jit(fn, in_shardings=spec, out_shardings=spec)
+    sd, sr, sc = fn(ctsf.Dr, ctsf.R, ctsf.C)
+    return SelectedInverse(ctsf.grid, sd, sr, sc)
 
 
 def concurrent_quadratic_forms(factor: CholeskyFactor, y: jnp.ndarray,

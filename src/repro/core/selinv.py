@@ -1,0 +1,300 @@
+"""Selected inversion of banded-arrowhead factors — blocked Takahashi recurrence.
+
+INLA (the paper's driving application) follows every factorization with
+posterior marginal variances, i.e. selected entries of Σ = A^{-1}.  The
+unit-vector panel sweep (``solve.marginal_variances(method="panels")``)
+costs one forward solve per selected index and only yields the diagonal;
+this module computes *every* Σ entry on the factor's sparsity pattern —
+the whole band plus the arrow block — in one backward tile sweep whose cost
+is independent of how many entries are selected.
+
+Derivation (blocked Takahashi equations)
+----------------------------------------
+Let ``A = L L^T`` with block lower-triangular ``L`` and ``Σ = A^{-1}``.
+From ``Σ L = L^{-T}`` (upper triangular), taking block entry (i, j) with
+``i >= j`` and splitting the sum over ``k >= j``:
+
+    Σ_ij L_jj + Σ_{k>j} Σ_ik L_kj = (L^{-T})_ij
+
+With the *normalized* factor column ``G_kj = L_kj L_jj^{-1}``:
+
+    i > j:   Σ_ij = - Σ_{k>j} Σ_ik G_kj                         (off-diag)
+    i = j:   Σ_jj = L_jj^{-T} L_jj^{-1} - Σ_{k>j} Σ_jk G_kj
+                  = (L_jj L_jj^T)^{-1} - Σ_{k>j} Σ_kj^T G_kj    (diag)
+
+so column j of Σ needs only Σ entries from trailing columns ``k > j`` — a
+*backward* sweep — and, by symmetry ``Σ_jk = Σ_kj^T``, the diagonal needs
+only the off-diagonals of column j computed the same step.
+
+For the banded-arrowhead layout, ``L_kj != 0`` only for band rows
+``k = j+1 .. j+b`` and arrow rows, so the sum touches Σ tiles with tile
+offset ``<= b`` plus arrow/corner tiles: the recurrence *closes* on the
+factor's own sparsity pattern and the computed entries are exact entries of
+the dense A^{-1}.  The sweep is the mirror image of the factorization's ring
+sweep: a ``lax.scan`` walks columns ``j = ndt-1 .. 0`` carrying a
+``(b, b+1, t, t)`` ring of the last b computed Σ columns (plus the arrow
+ring), each step one ``kernels.ops.selinv_step`` block-row x block-column
+contraction of dense (t, t) MXU matmuls.  The trailing corner seeds the
+recurrence: the last block columns see no later columns, hence
+``Σ_corner = L_c^{-T} L_c^{-1}`` — one small dense triangular solve.
+
+Cost: O(ndt · (b + nat)²) tile matmuls — same order as the factorization
+itself and independent of the number of selected entries, versus
+O(k · ndt · b) for k unit-vector panels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from .cholesky import CholeskyFactor, _bucketed_batched_call
+from .ctsf import BandedCTSF
+from .structure import TileGrid
+
+__all__ = ["SelectedInverse", "selected_inverse", "selinv_batched"]
+
+_HI = jax.lax.Precision.HIGHEST
+
+
+# ---------------------------------------------------------------------------
+# Result container (mirrors BandedCTSF's layout)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SelectedInverse:
+    """Band + arrow block of Σ = A^{-1} in banded-arrowhead tile layout.
+
+    Dr: (ndt, bt+1, t, t)  band rows   — Dr[m, d] = Σ_tile[m, m-d]
+    R:  (ndt, nat, t, t)   arrow rows  — R[k, i]  = Σ_tile[ndt+i, k]
+    C:  (nat, nat, t, t)   corner      — C[i, j]  = Σ_tile[ndt+i, ndt+j] (lower)
+
+    Leading batch axes (from :func:`selinv_batched`) are carried transparently
+    by :meth:`diagonal`; the elementwise accessors assume an unbatched layout
+    but broadcast over leading axes as well.
+    """
+
+    grid: TileGrid
+    Dr: jnp.ndarray
+    R: jnp.ndarray
+    C: jnp.ndarray
+
+    def diagonal(self, padded: bool = False) -> jnp.ndarray:
+        """diag(Σ) — INLA's posterior marginal variances, every latent at
+        once.  Returns the unpadded (n,) diagonal unless ``padded``."""
+        g = self.grid
+        d0 = jnp.take(self.Dr, 0, axis=-3)               # (..., ndt, t, t)
+        db = jnp.diagonal(d0, axis1=-2, axis2=-1)        # (..., ndt, t)
+        db = db.reshape(db.shape[:-2] + (-1,))
+        if g.n_arrow_tiles:
+            ct = jnp.diagonal(self.C, axis1=-4, axis2=-3)   # (..., t, t, nat)
+            dc = jnp.diagonal(ct, axis1=-3, axis2=-2)       # (..., nat, t)
+            dc = dc.reshape(dc.shape[:-2] + (-1,))
+            full = jnp.concatenate([db, dc], axis=-1)
+        else:
+            full = db
+        if padded:
+            return full
+        idx = np.vectorize(g.padded_index, otypes=[np.int64])(
+            np.arange(g.structure.n))
+        return jnp.take(full, jnp.asarray(idx), axis=-1)
+
+    def covariance(self, i: int, j: int) -> jnp.ndarray:
+        """Σ_ij for element indices of the *original* matrix.  Defined
+        whenever the entry lies on the stored pattern: |i-j| within the tile
+        band, or at least one index in the arrow block."""
+        g = self.grid
+        s = g.structure
+        for v in (i, j):
+            if not 0 <= int(v) < s.n:
+                raise ValueError(f"index {v} out of range [0, {s.n})")
+        pi, pj = g.padded_index(int(i)), g.padded_index(int(j))
+        if pi < pj:
+            pi, pj = pj, pi                              # Σ is symmetric
+        bi, ri = divmod(pi, g.t)
+        bj, rj = divmod(pj, g.t)
+        ndt = g.n_diag_tiles
+        if bi < ndt:                                     # band x band
+            d = bi - bj
+            if d > g.band_tiles:
+                raise ValueError(
+                    f"covariance({i}, {j}) lies outside the stored band "
+                    f"(tile offset {d} > {g.band_tiles})")
+            return self.Dr[..., bi, d, ri, rj]
+        if bj < ndt:                                     # arrow row x band col
+            return self.R[..., bj, bi - ndt, ri, rj]
+        ia, ja = bi - ndt, bj - ndt                      # corner (lower stored)
+        return self.C[..., ia, ja, ri, rj]
+
+    def to_dense_band(self, lower_only: bool = False) -> np.ndarray:
+        """Materialize the stored band + arrow entries as a dense
+        (padded_n, padded_n) array (zeros off-pattern); symmetrized unless
+        ``lower_only``."""
+        return BandedCTSF(self.grid, self.Dr, self.R,
+                          self.C).to_dense(lower_only=lower_only)
+
+    def arrays(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        return self.Dr, self.R, self.C
+
+    def nbytes(self) -> int:
+        return int((self.Dr.size + self.R.size + self.C.size) * 4)
+
+
+# ---------------------------------------------------------------------------
+# The backward tile recurrence
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("grid", "impl"))
+def _selinv_impl(Dr, R, C, grid, impl=None):
+    """Blocked Takahashi sweep over one factor.  Returns (Sd, Sr, Sc) in the
+    row-band / arrow-row / lower-corner layout of :class:`SelectedInverse`."""
+    t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
+    b1 = bt + 1
+    eye = jnp.eye(t, dtype=Dr.dtype)
+
+    # --- corner seed: Σ_cc = L_c^{-T} L_c^{-1} (dense, small) --------------
+    if nat:
+        nc = nat * t
+        cd = C.transpose(0, 2, 1, 3).reshape(nc, nc)
+        winv_c = jax.scipy.linalg.solve_triangular(
+            cd, jnp.eye(nc, dtype=C.dtype), lower=True)
+        sc_dense = jnp.dot(winv_c.T, winv_c, precision=_HI)
+        sc_full = sc_dense.reshape(nat, t, nat, t).transpose(0, 2, 1, 3)
+    else:
+        sc_full = jnp.zeros((0, 0, t, t), Dr.dtype)
+
+    if ndt == 0:
+        sd = jnp.zeros((0, b1, t, t), Dr.dtype)
+        sr = jnp.zeros((0, nat, t, t), Dr.dtype)
+        return sd, sr, _tril_tiles(sc_full, nat)
+
+    # column view of the factor: lcol[j, d] = L_tile[j+d, j] = Dr[j+d, d]
+    drp = jnp.pad(Dr, ((0, bt), (0, 0), (0, 0), (0, 0)))
+    jj, dd = jnp.meshgrid(jnp.arange(ndt), jnp.arange(b1), indexing="ij")
+    lcol = drp[jj + dd, dd]                               # (ndt, b1, t, t)
+
+    e_i = jnp.arange(1, bt + 1)[:, None]
+    d_i = jnp.arange(1, bt + 1)[None, :]
+
+    def body(carry, xs):
+        # ring[s, e'] = Σ_{(j+1+s)+e', j+1+s}; ring_a[s, i] = Σ_{ndt+i, j+1+s}
+        ring, ring_a = carry
+        lc, rc = xs                                       # (b1,t,t), (nat,t,t)
+        ljj = lc[0]
+        winv = ops.solve_panel(ljj, eye, impl=impl)       # L_jj^{-1}
+        s0 = jnp.dot(winv.T, winv, precision=_HI)         # (L_jj L_jj^T)^{-1}
+        # normalized column: G_d = L_{j+d,j} L_jj^{-1}; arrow Ga_i = R[j,i] L_jj^{-1}
+        g = jnp.einsum("dab,bc->dac", lc[1:], winv, precision=_HI)
+        ga = jnp.einsum("iab,bc->iac", rc, winv, precision=_HI) if nat \
+            else rc
+        gcat = jnp.concatenate([g, ga], axis=0)           # (bt+nat, t, t)
+
+        # Σ block row visible from column j, rows (j+1..j+bt, arrow):
+        #   band e, band d:  e>=d -> ring[d-1, e-d]; e<d -> ring[e-1, d-e]^T
+        #   band e, arrow i: ring_a[e-1, i]^T
+        #   arrow i, band d: ring_a[d-1, i];  arrow i, arrow i': Σ_cc[i, i']
+        if bt:
+            lower = ring[d_i - 1, jnp.clip(e_i - d_i, 0, bt)]
+            upper = jnp.swapaxes(ring[e_i - 1, jnp.clip(d_i - e_i, 0, bt)],
+                                 -1, -2)
+            swin = jnp.where((e_i >= d_i)[:, :, None, None], lower, upper)
+            row_band = jnp.concatenate(
+                [swin, jnp.swapaxes(ring_a, -1, -2)], axis=1) if nat else swin
+        else:
+            row_band = jnp.zeros((0, bt + nat, t, t), Dr.dtype)
+        if nat:
+            row_arr = jnp.concatenate(
+                [ring_a.transpose(1, 0, 2, 3), sc_full], axis=1)
+            srow = jnp.concatenate([row_band, row_arr], axis=0)
+        else:
+            srow = row_band
+
+        off = -ops.selinv_step(srow, gcat, impl=impl)     # (bt+nat, t, t)
+        # diagonal: Σ_jj = s0 - Σ_{k>j} Σ_kj^T G_kj  (off = the fresh Σ_kj)
+        corr = jnp.einsum("kba,kbc->ac", off, gcat, precision=_HI)
+        sjj = s0 - corr
+        sjj = 0.5 * (sjj + sjj.T)
+        panel = jnp.concatenate([sjj[None], off[:bt]], axis=0)   # (b1, t, t)
+        acol = off[bt:]                                          # (nat, t, t)
+        if bt:
+            ring = jnp.concatenate([panel[None], ring[:-1]], axis=0)
+            if nat:
+                ring_a = jnp.concatenate([acol[None], ring_a[:-1]], axis=0)
+        return (ring, ring_a), (panel, acol)
+
+    ring0 = jnp.zeros((bt, b1, t, t), Dr.dtype)
+    ring_a0 = jnp.zeros((bt, nat, t, t), Dr.dtype)
+    xs = (jnp.flip(lcol, 0), jnp.flip(R, 0))
+    _, (panels_rev, acols_rev) = jax.lax.scan(body, (ring0, ring_a0), xs)
+    panels = jnp.flip(panels_rev, 0)                      # panels[j, e] = Σ_{j+e, j}
+    sr = jnp.flip(acols_rev, 0)                           # sr[j, i] = Σ_{ndt+i, j}
+
+    # back to row-band layout: Sd[m, d] = Σ_{m, m-d} = panels[m-d, d]
+    mm, d2 = jnp.meshgrid(jnp.arange(ndt), jnp.arange(b1), indexing="ij")
+    sd = jnp.where(((mm - d2) >= 0)[:, :, None, None],
+                   panels[jnp.clip(mm - d2, 0, ndt - 1), d2], 0.0)
+    return sd, sr, _tril_tiles(sc_full, nat)
+
+
+def _tril_tiles(sc_full: jnp.ndarray, nat: int) -> jnp.ndarray:
+    """Keep the lower tile triangle of the (nat, nat, t, t) corner block
+    (the storage convention shared with BandedCTSF)."""
+    if not nat:
+        return sc_full
+    ii = jnp.arange(nat)
+    return jnp.where((ii[:, None] >= ii[None, :])[:, :, None, None],
+                     sc_full, 0.0)
+
+
+def selected_inverse(factor: CholeskyFactor,
+                     impl: Optional[str] = None) -> SelectedInverse:
+    """Band + arrow block of Σ = A^{-1} from a banded-arrowhead Cholesky
+    factor, via the blocked Takahashi recurrence (one backward tile sweep,
+    cost independent of how many entries are selected)."""
+    ctsf = factor.ctsf
+    sd, sr, sc = _selinv_impl(ctsf.Dr, ctsf.R, ctsf.C, ctsf.grid, impl)
+    return SelectedInverse(ctsf.grid, sd, sr, sc)
+
+
+# ---------------------------------------------------------------------------
+# Batched serving path (INLA θ-sweep posterior marginals)
+# ---------------------------------------------------------------------------
+
+_BATCHED_SELINV_CACHE: Dict[Tuple, object] = {}
+
+
+def _batched_selinv_fn(grid, impl):
+    """One vmapped+jitted recurrence per (grid, impl) — cached on the Python
+    side so repeated same-structure sweeps reuse the traced function object
+    (and XLA's compile cache), mirroring ``cholesky._batched_window_fn``."""
+    key = (grid, impl)
+    fn = _BATCHED_SELINV_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(jax.vmap(
+            lambda dr, r, c: _selinv_impl(dr, r, c, grid, impl)))
+        _BATCHED_SELINV_CACHE[key] = fn
+    return fn
+
+
+def selinv_batched(factor: CholeskyFactor, impl: Optional[str] = None,
+                   bucket: bool = True) -> SelectedInverse:
+    """Selected inversion of a batch of same-grid factors (leading batch
+    axis on the CTSF arrays, as returned by ``factorize_window_batched``) in
+    one vmapped dispatch.
+
+    With ``bucket=True`` the batch is padded (by repeating the last factor)
+    to the next power of two before dispatch and the padding results are
+    dropped — the same pow2 bucketing compile cache as the batched
+    factorization, bounding XLA compiles per grid at log2(max batch).
+    """
+    ctsf = factor.ctsf
+    assert ctsf.Dr.ndim == 5, "selinv_batched needs a leading batch axis"
+    sd, sr, sc = _bucketed_batched_call(
+        _batched_selinv_fn(ctsf.grid, impl), (ctsf.Dr, ctsf.R, ctsf.C),
+        bucket)
+    return SelectedInverse(ctsf.grid, sd, sr, sc)

@@ -24,6 +24,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
 from .cholesky import CholeskyFactor
@@ -49,8 +50,16 @@ def _split_rhs(g, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 @functools.partial(jax.jit, static_argnames=("grid", "impl"))
-def _forward_impl(Dr, R, C, bd, ba, grid, impl=None):
-    """Solve L Y = B for an RHS panel: bd (ndt, t, k), ba (nat, t, k)."""
+def _forward_impl(Dr, R, C, bd, ba, grid, impl=None, start_tile=0):
+    """Solve L Y = B for an RHS panel: bd (ndt, t, k), ba (nat, t, k).
+
+    ``start_tile`` exploits RHS sparsity: when every column of the panel is
+    zero above band tile ``start_tile`` (e.g. the unit-vector panels of
+    selected marginals), the band sweep may begin there — Y is provably zero
+    above the first nonzero tile, which the all-zero ``yp`` initialization
+    already encodes.  It is a *traced* loop bound, so varying selections
+    never retrace/recompile the sweep.
+    """
     t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
     k = bd.shape[-1]
     yp = jnp.zeros((ndt + bt, t, k), bd.dtype)  # bt leading zeros
@@ -66,7 +75,7 @@ def _forward_impl(Dr, R, C, bd, ba, grid, impl=None):
         ym = ops.solve_panel(drm[0], bm - acc, impl=impl)
         return jax.lax.dynamic_update_slice(yp, ym[None], (m + bt, 0, 0))
 
-    yp = jax.lax.fori_loop(0, ndt, step, yp) if ndt else yp
+    yp = jax.lax.fori_loop(start_tile, ndt, step, yp) if ndt else yp
     yd = yp[bt:]
 
     if nat:
@@ -155,18 +164,31 @@ def _solve_panels(Dr, R, C, bd, ba, grid, impl=None):
 
 def _merge_panels(xd: jnp.ndarray, xa: jnp.ndarray) -> jnp.ndarray:
     """Rejoin band (ndt, t, k) and arrow (nat, t, k) tile panels into one
-    (padded_n, k) RHS panel — the inverse of :func:`_split_rhs`."""
+    (padded_n, k) RHS panel — the inverse of :func:`_split_rhs`.  Shapes are
+    spelled out (no -1) so a k=0 panel round-trips."""
     k = xd.shape[-1]
-    return jnp.concatenate([xd.reshape(-1, k), xa.reshape(-1, k)])
+    return jnp.concatenate([xd.reshape(xd.shape[0] * xd.shape[1], k),
+                            xa.reshape(xa.shape[0] * xa.shape[1], k)])
 
 
 def forward_solve_many(factor: CholeskyFactor, B: jnp.ndarray,
-                       impl: Optional[str] = None) -> jnp.ndarray:
+                       impl: Optional[str] = None,
+                       start_tile: int = 0) -> jnp.ndarray:
     """Solve ``L Y = B`` for an (padded_n, k) panel of right-hand sides in
-    one blocked sweep."""
+    one blocked sweep.  ``start_tile`` skips band steps above the first
+    nonzero band tile of the panel (caller guarantees the rows above it are
+    zero — see :func:`_forward_impl`)."""
     ctsf = factor.ctsf
     bd, ba = _split_rhs(ctsf.grid, B)
-    yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, ctsf.grid, impl)
+    if start_tile:
+        # traced loop bound: no recompile per distinct start, but the sweep
+        # becomes a dynamic-bound while_loop (not reverse-differentiable) —
+        # so the common start_tile=0 path keeps its static bounds below.
+        yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, ctsf.grid,
+                               impl, start_tile)
+    else:
+        yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, ctsf.grid,
+                               impl)
     return _merge_panels(yd, ya)
 
 
@@ -235,23 +257,59 @@ def sample_gmrf_many(factor: CholeskyFactor, key: jax.Array,
     return backward_solve_many(factor, z)
 
 
-def marginal_variances(factor: CholeskyFactor,
-                       indices: jnp.ndarray) -> jnp.ndarray:
+def _validate_indices(grid, indices) -> np.ndarray:
+    """Validate selected indices against the *original* matrix dimension and
+    map them into the padded layout (arrow indices shift past the band
+    padding).  Out-of-range indices raise instead of silently gathering
+    garbage from padded rows; indices must therefore be concrete."""
+    s = grid.structure
+    idx = np.asarray(indices)
+    if idx.ndim != 1:
+        raise ValueError(f"indices must be 1-D, got shape {idx.shape}")
+    if idx.size and (idx.min() < 0 or idx.max() >= s.n):
+        bad = idx[(idx < 0) | (idx >= s.n)]
+        raise ValueError(f"indices {bad.tolist()} out of range [0, {s.n})")
+    return np.vectorize(grid.padded_index, otypes=[np.int64])(idx)
+
+
+def marginal_variances(factor: CholeskyFactor, indices: jnp.ndarray,
+                       method: str = "selinv",
+                       impl: Optional[str] = None) -> jnp.ndarray:
     """Selected diagonal of A^{-1} — INLA's posterior marginal variances.
 
-    (A^{-1})_{ii} = ‖L^{-1} e_i‖².  All k selected unit vectors ride a
-    *single* multi-RHS forward sweep: the band step applies each factor tile
-    to the whole (t, k) panel at once, versus the k independent O(n·b)
-    substitution sweeps of the per-index path (kept as
-    :func:`_marginal_variances_map` for reference/benchmarking).
+    Two paths over the same factor:
+
+    * ``method="selinv"`` (default) — the blocked Takahashi recurrence
+      (:func:`repro.core.selinv.selected_inverse`): one backward tile sweep
+      computes the whole band + arrow block of Σ, cost independent of k,
+      then the k selected diagonal entries are gathered.
+    * ``method="panels"`` — (A^{-1})_{ii} = ‖L^{-1} e_i‖² with all k unit
+      vectors riding a single multi-RHS forward sweep, started at the first
+      nonzero band tile of the panel (the rows above the smallest selected
+      index are identically zero).  Kept for validation/benchmarking, and
+      cheaper when k is tiny relative to the bandwidth.
+
+    Indices are element indices of the *original* matrix; out-of-range
+    values raise (arrow indices are remapped past the band padding rather
+    than reading padded rows).
     """
     g = factor.ctsf.grid
-    indices = jnp.asarray(indices)
-    k = indices.shape[0]
-    E = jnp.zeros((g.padded_n, k), jnp.float32)
-    E = E.at[indices, jnp.arange(k)].set(1.0)
-    Y = forward_solve_many(factor, E)
-    return jnp.sum(Y * Y, axis=0)
+    padded = _validate_indices(g, indices)
+    if method == "selinv":
+        from .selinv import selected_inverse
+        sigma = selected_inverse(factor, impl=impl)
+        return jnp.take(sigma.diagonal(padded=True), jnp.asarray(padded),
+                        axis=-1)
+    if method == "panels":
+        k = padded.shape[0]
+        E = jnp.zeros((g.padded_n, k), jnp.float32)
+        E = E.at[jnp.asarray(padded), jnp.arange(k)].set(1.0)
+        # RHS sparsity: unit-vector panels are zero above the selected row,
+        # so the band sweep starts at the first tile holding a nonzero.
+        start = min(int(padded.min()) // g.t, g.n_diag_tiles) if k else 0
+        Y = forward_solve_many(factor, E, impl=impl, start_tile=start)
+        return jnp.sum(Y * Y, axis=0)
+    raise ValueError(f"unknown method {method!r} (want 'selinv' or 'panels')")
 
 
 def _marginal_variances_map(factor: CholeskyFactor,
@@ -266,4 +324,4 @@ def _marginal_variances_map(factor: CholeskyFactor,
         y = forward_solve(factor, e)
         return jnp.sum(y * y)
 
-    return jax.lax.map(one, jnp.asarray(indices))
+    return jax.lax.map(one, jnp.asarray(_validate_indices(g, indices)))

@@ -1,5 +1,6 @@
 """Pallas TPU tile kernels for the sTiles hot spots (POTRF/TRSM/SYRK/GEMM/
-GEADD and the fused band-panel update), with pure-jnp oracles in ref.py."""
+GEADD, the fused band-panel update, and the Takahashi selected-inversion
+step), with pure-jnp oracles in ref.py."""
 from . import ops, ref
 
 __all__ = ["ops", "ref"]

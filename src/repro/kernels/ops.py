@@ -19,9 +19,10 @@ from .potrf import potrf_pallas
 from .trsm import solve_panel_pallas, trsm_pallas
 from .gemm import gemm_pallas, syrk_pallas, geadd_pallas
 from .band_update import band_update_pallas
+from .selinv import selinv_step_pallas
 
 __all__ = ["potrf", "trsm", "solve_panel", "syrk", "gemm", "geadd",
-           "band_update", "default_impl"]
+           "band_update", "selinv_step", "default_impl"]
 
 Impl = Literal["ref", "pallas", "unrolled"]
 
@@ -88,6 +89,18 @@ def geadd(a: jnp.ndarray, b: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarr
     if impl == "pallas":
         return geadd_pallas(a, b, interpret=_interp())
     return ref.geadd_ref(a, b)
+
+
+def selinv_step(s_row: jnp.ndarray, g_col: jnp.ndarray,
+                impl: Impl | None = None) -> jnp.ndarray:
+    """One Takahashi selected-inversion tile step: ``u[e] = sum_j
+    s_row[e, j] @ g_col[j]`` — the accumulation chain feeding one column of
+    Σ = A^{-1} in ``core.selinv``'s backward recurrence (registered alongside
+    :func:`solve_panel` as a serving-path tile primitive)."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return selinv_step_pallas(s_row, g_col, interpret=_interp())
+    return ref.selinv_step_ref(s_row, g_col)
 
 
 def band_update(w: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["potrf_ref", "trsm_ref", "solve_panel_ref", "syrk_ref",
-           "gemm_ref", "geadd_ref", "band_update_ref"]
+           "gemm_ref", "geadd_ref", "band_update_ref", "selinv_step_ref"]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -55,6 +55,23 @@ def gemm_ref(c_mk: jnp.ndarray, a_mn: jnp.ndarray, b_kn: jnp.ndarray) -> jnp.nda
 def geadd_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Generalized addition (tree-reduction combine step, paper Fig. 6)."""
     return a + b
+
+
+def selinv_step_ref(s_row: jnp.ndarray, g_col: jnp.ndarray) -> jnp.ndarray:
+    """One Takahashi tile step: block row of Σ times normalized factor column.
+
+    Input:  s_row (e_n, j_n, t, t) — already-computed Σ tiles Σ[i_e, k_j]
+            g_col (j_n, t, t)      — normalized column G[k_j] = L[k_j, j] L[j,j]^{-1}
+    Output: u (e_n, t, t) with
+
+        u[e] = sum_j  s_row[e, j] @ g_col[j]
+
+    so that Σ[i_e, j] = -u[e] (core/selinv.py's backward recurrence).  Every
+    accumulation feeding one selected-inverse column rides this single
+    batched contraction — the selected-inversion analogue of
+    :func:`band_update_ref`.
+    """
+    return jnp.einsum("ejab,jbc->eac", s_row, g_col, precision=_HI)
 
 
 def band_update_unrolled_ref(w: jnp.ndarray) -> jnp.ndarray:

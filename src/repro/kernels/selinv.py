@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: fused Takahashi selected-inversion tile step.
+
+One backward-recurrence step of the blocked Takahashi equations
+(core/selinv.py) computes a whole column of the selected inverse as
+
+    u[e] = sum_j  S[e, j] @ G[j]        e = 0..e_n-1
+
+where ``S`` is the block row of already-computed Σ tiles visible from column
+j (band window + arrow rows + corner) and ``G`` is the normalized factor
+column ``G[k] = L[k, j] L[j, j]^{-1}``.  Like ``band_update``, the entire
+accumulation chain feeding one output tile runs inside a single kernel whose
+accumulator never leaves VMEM: grid = (e_n target tiles, j-blocks); each
+target revisits its VMEM accumulator across j-blocks (the grid iterates the
+last axis fastest) and emits one HBM write per output tile.
+
+VMEM budget per step: (2·jb + 1)·t²·4B (S-row block, G block, accumulator)
+— e.g. jb=8, t=128: ~1.1 MB, far under the ~16 MB/core of v5e.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["selinv_step_pallas"]
+
+
+def _selinv_step_kernel(s_ref, g_ref, o_ref, acc_ref, *, jb: int, njb: int):
+    jblk = pl.program_id(1)
+
+    @pl.when(jblk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # s_ref: (1, jb, t, t) slice of Σ row e; g_ref: (jb, t, t) slice of G.
+    # The wrapper zero-pads both inputs up to njb*jb, so padded-j terms
+    # vanish on their own — no in-kernel masking needed.
+    def jstep(jj, acc):
+        s = s_ref[0, jj].astype(jnp.float32)
+        g = g_ref[jj].astype(jnp.float32)
+        return acc + jax.lax.dot_general(s, g, (((1,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32)
+
+    acc_ref[...] = jax.lax.fori_loop(0, jb, jstep, acc_ref[...])
+
+    @pl.when(jblk == njb - 1)
+    def _emit():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("jblock", "interpret"))
+def selinv_step_pallas(s_row: jnp.ndarray, g_col: jnp.ndarray,
+                       jblock: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """Fused Takahashi tile step.  s_row: (e_n, j_n, t, t), g_col:
+    (j_n, t, t) -> u: (e_n, t, t).
+
+    Matches ``ref.selinv_step_ref`` bit-for-bit in float32.
+    """
+    e_n, j_n, t, _ = s_row.shape
+    if e_n == 0 or j_n == 0:
+        return jnp.zeros((e_n, t, t), s_row.dtype)
+    jb = min(jblock, j_n)
+    njb = pl.cdiv(j_n, jb)
+    jpad = njb * jb
+    sp = jnp.pad(s_row, ((0, 0), (0, jpad - j_n), (0, 0), (0, 0)))
+    gp = jnp.pad(g_col, ((0, jpad - j_n), (0, 0), (0, 0)))
+    return pl.pallas_call(
+        functools.partial(_selinv_step_kernel, jb=jb, njb=njb),
+        grid=(e_n, njb),
+        in_specs=[
+            pl.BlockSpec((1, jb, t, t), lambda e, j: (e, j, 0, 0)),
+            pl.BlockSpec((jb, t, t), lambda e, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, t), lambda e, j: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e_n, t, t), s_row.dtype),
+        scratch_shapes=[pltpu.VMEM((t, t), jnp.float32)],
+        interpret=interpret,
+    )(sp, gp)

@@ -9,6 +9,7 @@ from repro.kernels import ref
 from repro.kernels.band_update import band_update_pallas
 from repro.kernels.gemm import gemm_pallas, geadd_pallas, syrk_pallas
 from repro.kernels.potrf import potrf_pallas
+from repro.kernels.selinv import selinv_step_pallas
 from repro.kernels.trsm import trsm_pallas
 
 TILES = [8, 16, 32, 64]
@@ -90,6 +91,27 @@ def test_band_update(rng, b1, t, jblock):
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.band_update_ref(w)),
                                rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("e_n,j_n", [(1, 1), (3, 5), (4, 9), (2, 17)])
+@pytest.mark.parametrize("t", [8, 16, 32])
+@pytest.mark.parametrize("jblock", [2, 8])
+def test_selinv_step(rng, e_n, j_n, t, jblock):
+    s = jnp.asarray(rng.standard_normal((e_n, j_n, t, t)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((j_n, t, t)), jnp.float32)
+    out = selinv_step_pallas(s, g, jblock=jblock)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.selinv_step_ref(s, g)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_selinv_step_empty():
+    s = jnp.zeros((0, 3, 8, 8), jnp.float32)
+    g = jnp.zeros((3, 8, 8), jnp.float32)
+    assert selinv_step_pallas(s, g).shape == (0, 8, 8)
+    s2 = jnp.zeros((2, 0, 8, 8), jnp.float32)
+    g2 = jnp.zeros((0, 8, 8), jnp.float32)
+    assert np.abs(np.asarray(selinv_step_pallas(s2, g2))).max() == 0.0
 
 
 def test_band_update_ref_semantics(rng):

@@ -118,6 +118,17 @@ def test_concurrent_solve_and_quadratic_forms():
                                    rtol=1e-4)
 
 
+def test_forward_solve_stays_reverse_differentiable():
+    """The default (start_tile=0) sweep keeps static loop bounds, so
+    reverse-mode autodiff through solves must keep working (the dynamic
+    fast-start bound is only used by the panels marginals path)."""
+    bm, f, grid = _factored_problem(n=160, bw=16, ar=16)
+    b = jnp.ones((grid.padded_n,), jnp.float32)
+    grad = jax.grad(lambda x: jnp.sum(forward_solve_many(f, x.reshape(-1, 1))
+                                      ** 2))(b)
+    assert np.isfinite(np.asarray(grad)).all()
+
+
 def test_sample_gmrf_many_matches_columnwise_backward():
     bm, f, grid = _factored_problem(n=160, bw=16, ar=16)
     rng = np.random.default_rng(5)
