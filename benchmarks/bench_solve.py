@@ -9,6 +9,13 @@ Three comparisons, all on the same banded-arrowhead factor:
   forward sweep) vs the pre-batching ``lax.map`` per-index path.
 * ``factorize_window_batched`` over a θ-sweep batch vs a Python loop of
   :func:`factorize_window` — the INLA gradient workload.
+* the *fused* Pallas band-sweep kernels (``impl="pallas"``: whole sweep in
+  one launch, VMEM ring of recent panels) vs the per-tile-looped sweep
+  (``impl="ref"``: one ``solve_panel`` per band tile through a
+  ``fori_loop``).  On CPU the Pallas kernels run in *interpret mode*, so
+  the looped path wins there — the timings document the dispatch-count
+  contrast; the fusion pays off on real TPU hardware, and correctness
+  parity is asserted by tier-1 tests either way.
 
 Emits a ``BENCH_solve.json`` trajectory point (speedups + thresholds) at
 the repo root in addition to the harness CSV rows.
@@ -88,6 +95,25 @@ def run(quick: bool = True):
     rows.append((f"marginal_variances_k{k}", t_mv * 1e6,
                  f"map_us={t_mv_map*1e6:.0f};speedup={mv_speedup:.1f}x"))
 
+    # --- fused band-sweep kernels vs per-tile-looped sweep ------------------
+    # Smaller panel so CPU interpret-mode execution of the fused kernels
+    # stays in benchmark budget; both impls solve the identical problem.
+    kf = 16
+    Bf = B[:, :kf]
+
+    def sweep_fused():
+        jax.block_until_ready(solve_many(factor, Bf, impl="pallas"))
+
+    def sweep_looped():
+        jax.block_until_ready(solve_many(factor, Bf, impl="ref"))
+
+    t_fused = _time(sweep_fused, reps=2)
+    t_looped = _time(sweep_looped, reps=2)
+    backend = jax.default_backend()
+    rows.append((f"solve_sweep_fused_k{kf}", t_fused * 1e6,
+                 f"looped_us={t_looped*1e6:.0f};backend={backend}"
+                 f"{';interpret' if backend != 'tpu' else ''}"))
+
     # --- batched vs looped window factorization ----------------------------
     # Stacking happens once outside the timed region (serving keeps the
     # θ-sweep batch resident); on single-core CPU the vmapped sweep has no
@@ -128,6 +154,15 @@ def run(quick: bool = True):
         "factorize_batched_us": t_fb * 1e6,
         "factorize_loop_us": t_fl * 1e6,
         "factorize_batched_speedup": fac_speedup,
+        # fused (single-launch Pallas) vs per-tile-looped sweep; on non-TPU
+        # backends the fused kernel executes in interpret mode, so this
+        # ratio is only meaningful on TPU — not part of the pass criteria.
+        "sweep_k": kf,
+        "sweep_fused_us": t_fused * 1e6,
+        "sweep_looped_us": t_looped * 1e6,
+        "sweep_fused_speedup": t_looped / t_fused,
+        "sweep_backend": backend,
+        "sweep_fused_interpret_mode": backend != "tpu",
         "thresholds": {"solve_many_speedup_min": 3.0,
                        "marginal_variances_speedup_min": 5.0},
         "pass": bool(solve_speedup >= 3.0 and mv_speedup >= 5.0),

@@ -23,9 +23,24 @@ import argparse
 import json
 import os
 import sys
+import time
 import traceback
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _regressed_thresholds(record: dict) -> list:
+    """Spell out *which* thresholds a BENCH_*.json record missed.
+
+    Threshold keys follow the ``<metric>_min`` convention (e.g.
+    ``solve_many_speedup_min`` gates ``solve_many_speedup``)."""
+    out = []
+    for name, lo in (record.get("thresholds") or {}).items():
+        metric = name[: -len("_min")] if name.endswith("_min") else name
+        val = record.get(metric)
+        if isinstance(val, (int, float)) and val < lo:
+            out.append(f"{metric}={val:.3g} (min {lo:.3g})")
+    return out
 
 
 def main() -> None:
@@ -49,17 +64,18 @@ def main() -> None:
         "selinv": bench_selinv,
         "roofline": roofline,
     }
-    failed = False
+    failures = []  # (suite, [reasons...])
     print("name,us_per_call,derived")
     for name, mod in suites.items():
         if args.only and args.only != name:
             continue
+        t_start = time.time()
         try:
             for row in mod.run(quick=quick):
                 print(f"{row[0]},{row[1]:.1f},{row[2]}")
                 sys.stdout.flush()
-        except Exception:
-            failed = True
+        except Exception as e:
+            failures.append((name, [f"crashed: {type(e).__name__}: {e}"]))
             print(f"{name},ERROR,", flush=True)
             traceback.print_exc()
             continue
@@ -68,13 +84,21 @@ def main() -> None:
         # therefore the CI benchmark step), not just the artifact.
         record_path = os.path.join(_ROOT, f"BENCH_{name}.json")
         if os.path.exists(record_path):
+            if os.path.getmtime(record_path) >= t_start:
+                print(f"# wrote {record_path}", flush=True)
             with open(record_path) as f:
                 record = json.load(f)
             if record.get("pass") is False:
-                failed = True
-                print(f"{name},THRESHOLD_FAIL,{record.get('thresholds')}",
+                reasons = (_regressed_thresholds(record)
+                           or ["record has pass=false"])
+                failures.append((name, reasons))
+                print(f"{name},THRESHOLD_FAIL,{';'.join(reasons)}",
                       flush=True)
-    if failed:
+    if failures:
+        print("\nFAILED benchmark suites:", file=sys.stderr)
+        for name, reasons in failures:
+            for r in reasons:
+                print(f"  {name}: {r}", file=sys.stderr)
         raise SystemExit(1)
 
 

@@ -1,0 +1,40 @@
+"""Execute the README's fenced ``python`` code blocks so the docs can't rot.
+
+Extracts every ```python block from README.md (in order, concatenated into
+one module so later blocks may reuse earlier names) and runs it in-process.
+CI's ``docs`` job invokes this with ``PYTHONPATH=src``; any exception —
+including the snippet's own asserts — fails the job.
+
+    PYTHONPATH=src python docs/check_quickstart.py [path/to/README.md]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def extract_python_blocks(markdown: str) -> list:
+    return [m.group(1) for m in _FENCE.finditer(markdown)]
+
+
+def main(argv: list) -> int:
+    readme = Path(argv[1]) if len(argv) > 1 else \
+        Path(__file__).resolve().parent.parent / "README.md"
+    blocks = extract_python_blocks(readme.read_text())
+    if not blocks:
+        print(f"error: no ```python blocks found in {readme}", file=sys.stderr)
+        return 1
+    src = "\n\n".join(blocks)
+    print(f"running {len(blocks)} python block(s) from {readme} "
+          f"({len(src.splitlines())} lines)")
+    code = compile(src, str(readme), "exec")
+    exec(code, {"__name__": "__main__"})  # noqa: S102 - that's the point
+    print("README quickstart: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

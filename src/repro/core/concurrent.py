@@ -67,11 +67,22 @@ def concurrent_solve(factor: CholeskyFactor, B: jnp.ndarray,
     """Solve ``A_i X_i = B`` for every factor in the batch, one vmapped
     multi-RHS sweep.
 
-    ``B`` is shared across the batch: shape (padded_n,) or (padded_n, k).
-    Returns (batch, padded_n) or (batch, padded_n, k).  Combined with
-    :func:`concurrent_factorize` this is the full batched serving path —
-    a θ-sweep of factorizations amortized over a panel of RHS without ever
-    leaving the device.
+    Args:
+      factor: *batched* factor (leading batch axis on the CTSF arrays, as
+        returned by ``factorize_window_batched`` / ``concurrent_factorize``).
+      B: RHS shared across the batch, shape ``(padded_n,)`` or
+        ``(padded_n, k)`` in the padded layout (zero rows in the padding
+        region).
+      impl: kernel backend for the sweeps; ``"pallas"`` vmaps the *fused*
+        band-sweep kernels (``kernels.ops.band_forward_sweep`` /
+        ``band_backward_sweep``) — the batch rides the kernel grid for free.
+
+    Returns: ``(batch, padded_n)`` or ``(batch, padded_n, k)``.
+
+    Combined with :func:`concurrent_factorize` this is the full batched
+    serving path — a θ-sweep of factorizations amortized over a panel of
+    RHS without ever leaving the device.  Recompiles once per
+    ``(grid, impl, k, batch)``.
     """
     from .solve import _merge_panels, _solve_panels, _split_rhs
     ctsf = factor.ctsf

@@ -287,10 +287,19 @@ def selinv_batched(factor: CholeskyFactor, impl: Optional[str] = None,
     axis on the CTSF arrays, as returned by ``factorize_window_batched``) in
     one vmapped dispatch.
 
-    With ``bucket=True`` the batch is padded (by repeating the last factor)
-    to the next power of two before dispatch and the padding results are
-    dropped — the same pow2 bucketing compile cache as the batched
-    factorization, bounding XLA compiles per grid at log2(max batch).
+    Args:
+      factor: batched factor — ``ctsf.Dr`` must be 5-D
+        ``(batch, ndt, bt+1, t, t)`` (with matching ``R``/``C``).
+      impl: kernel backend forwarded to the recurrence's tile primitives
+        (``solve_panel`` seeds and ``selinv_step`` contractions).
+      bucket: pad the batch (by repeating the last factor) to the next
+        power of two before dispatch and drop the padding results — the
+        same pow2 bucketing compile cache as the batched factorization,
+        bounding XLA compiles per grid at log2(max batch).  With
+        ``bucket=False`` every distinct batch size compiles once.
+
+    Returns: a :class:`SelectedInverse` whose arrays carry the leading
+    batch axis; ``diagonal()`` / ``covariance(i, j)`` broadcast over it.
     """
     ctsf = factor.ctsf
     assert ctsf.Dr.ndim == 5, "selinv_batched needs a leading batch axis"

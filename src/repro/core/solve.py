@@ -16,6 +16,12 @@ bound when RHS are blocked into panels).  The single-RHS API
 same code path; :func:`solve_many` exposes the panel form, and
 :func:`marginal_variances` / :func:`sample_gmrf` ride one blocked sweep for
 all selected indices / samples.
+
+With ``impl="pallas"`` each band sweep is one *fused* kernel launch
+(``kernels/band_solve.py``): a ring of the most recent ``band_tiles``
+solved panels stays resident in VMEM across tile rows, removing the
+per-tile HBM round-trips of the ``fori_loop``-of-``solve_panel`` reference
+path (which remains the jnp oracle and the CPU default).
 """
 from __future__ import annotations
 
@@ -53,35 +59,30 @@ def _split_rhs(g, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
 def _forward_impl(Dr, R, C, bd, ba, grid, impl=None, start_tile=0):
     """Solve L Y = B for an RHS panel: bd (ndt, t, k), ba (nat, t, k).
 
+    The band part is one :func:`repro.kernels.ops.band_forward_sweep` —
+    with ``impl="pallas"`` the whole sweep (and the arrow-RHS accumulation)
+    is a single fused kernel launch; otherwise it is the per-tile
+    ``fori_loop`` of ``solve_panel`` reference.
+
     ``start_tile`` exploits RHS sparsity: when every column of the panel is
     zero above band tile ``start_tile`` (e.g. the unit-vector panels of
     selected marginals), the band sweep may begin there — Y is provably zero
-    above the first nonzero tile, which the all-zero ``yp`` initialization
-    already encodes.  It is a *traced* loop bound, so varying selections
-    never retrace/recompile the sweep.
+    above the first nonzero tile, which both backends encode by leaving
+    those rows zero.  It is a *traced* scalar, so varying selections never
+    retrace/recompile the sweep.
     """
     t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
     k = bd.shape[-1]
-    yp = jnp.zeros((ndt + bt, t, k), bd.dtype)  # bt leading zeros
-
-    def step(m, yp):
-        # Y_m = Lmm^{-1} (B_m - sum_{j=1..bt} L[m,m-j] Y_{m-j})
-        ywin = jax.lax.dynamic_slice(yp, (m, 0, 0), (bt, t, k)) if bt else yp[:0]
-        # ywin[bt - j] = Y_{m-j}; Dr[m, j] = L[m, m-j]
-        drm = jax.lax.dynamic_slice(Dr, (m, 0, 0, 0), (1, bt + 1, t, t))[0]
-        acc = jnp.einsum("jab,jbk->ak", jnp.flip(drm[1:], axis=0), ywin,
-                         precision=_HI) if bt else 0.0
-        bm = jax.lax.dynamic_slice(bd, (m, 0, 0), (1, t, k))[0]
-        ym = ops.solve_panel(drm[0], bm - acc, impl=impl)
-        return jax.lax.dynamic_update_slice(yp, ym[None], (m + bt, 0, 0))
-
-    yp = jax.lax.fori_loop(start_tile, ndt, step, yp) if ndt else yp
-    yd = yp[bt:]
+    if ndt:
+        yd, acc_a = ops.band_forward_sweep(Dr, R, bd, start_tile=start_tile,
+                                           impl=impl)
+    else:
+        yd = jnp.zeros((0, t, k), bd.dtype)
+        acc_a = jnp.zeros((nat, t, k), bd.dtype)
 
     if nat:
         # arrow rows: Y_a = Lc^{-1} (B_a - sum_n R[n] Y_n), block forward
-        acc = jnp.einsum("niab,nbk->iak", R, yd, precision=_HI)
-        rhs0 = ba - acc
+        rhs0 = ba - acc_a
         iota = jnp.arange(nat)
 
         def corner_step(i, ya):
@@ -103,7 +104,11 @@ def _forward_impl(Dr, R, C, bd, ba, grid, impl=None, start_tile=0):
 
 @functools.partial(jax.jit, static_argnames=("grid", "impl"))
 def _backward_impl(Dr, R, C, yd, ya, grid, impl=None):
-    """Solve L^T X = Y for an RHS panel: yd (ndt, t, k), ya (nat, t, k)."""
+    """Solve L^T X = Y for an RHS panel: yd (ndt, t, k), ya (nat, t, k).
+
+    Corner first (the arrow panel seeds the band rows), then the band part
+    runs as one :func:`repro.kernels.ops.band_backward_sweep` — fused into
+    a single kernel launch under ``impl="pallas"``."""
     t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
     k = yd.shape[-1]
 
@@ -128,29 +133,11 @@ def _backward_impl(Dr, R, C, yd, ya, grid, impl=None):
 
     # band rows, reverse sweep:
     # X_m = Lmm^{-T}(Y_m - sum_{j=1..bt} L[m+j,m]^T X_{m+j} - sum_i R[m,i]^T Xa_i)
-    Drp = jnp.pad(Dr, ((0, bt), (0, 0), (0, 0), (0, 0)))  # slack for m+j reads
-    xp = jnp.zeros((ndt + bt, t, k), yd.dtype)
-
-    jr = jnp.arange(bt)
-
-    def step(i, xp):
-        m = ndt - 1 - i
-        wb = jax.lax.dynamic_slice(Drp, (m + 1, 0, 0, 0), (bt, bt + 1, t, t)) \
-            if bt else Drp[:0]
-        # L[m+j, m] = Drp[m+j, j]  -> wb[j-1, j]
-        sub = wb[jr, jr + 1] if bt else wb[:, 0]
-        xwin = jax.lax.dynamic_slice(xp, (m + 1, 0, 0), (bt, t, k)) if bt else xp[:0]
-        acc = jnp.einsum("jab,jak->bk", sub, xwin, precision=_HI) if bt else 0.0
-        if nat:
-            rm = jax.lax.dynamic_slice(R, (m, 0, 0, 0), (1, nat, t, t))[0]
-            acc = acc + jnp.einsum("iab,iak->bk", rm, xa, precision=_HI)
-        ym = jax.lax.dynamic_slice(yd, (m, 0, 0), (1, t, k))[0]
-        lmm = jax.lax.dynamic_slice(Dr, (m, 0, 0, 0), (1, 1, t, t))[0, 0]
-        xm = ops.solve_panel(lmm, ym - acc, trans=True, impl=impl)
-        return jax.lax.dynamic_update_slice(xp, xm[None], (m, 0, 0))
-
-    xp = jax.lax.fori_loop(0, ndt, step, xp) if ndt else xp
-    return xp[:ndt], xa
+    if ndt:
+        xd = ops.band_backward_sweep(Dr, R, yd, xa, impl=impl)
+    else:
+        xd = jnp.zeros((0, t, k), yd.dtype)
+    return xd, xa
 
 
 def _solve_panels(Dr, R, C, bd, ba, grid, impl=None):
@@ -174,10 +161,30 @@ def _merge_panels(xd: jnp.ndarray, xa: jnp.ndarray) -> jnp.ndarray:
 def forward_solve_many(factor: CholeskyFactor, B: jnp.ndarray,
                        impl: Optional[str] = None,
                        start_tile: int = 0) -> jnp.ndarray:
-    """Solve ``L Y = B`` for an (padded_n, k) panel of right-hand sides in
-    one blocked sweep.  ``start_tile`` skips band steps above the first
-    nonzero band tile of the panel (caller guarantees the rows above it are
-    zero — see :func:`_forward_impl`)."""
+    """Solve ``L Y = B`` for a panel of right-hand sides in one blocked sweep.
+
+    Args:
+      factor: banded-arrowhead Cholesky factor (``factorize_window``).
+      B: ``(padded_n, k)`` float32 panel in the *padded* layout of
+        ``factor.ctsf.grid`` (band rows first, then padding, then arrow
+        rows — see ``TileGrid.padded_index``).  Rows in the padding region
+        must be zero; they solve against identity diagonal tiles.
+      impl: kernel backend — ``"pallas"`` runs the whole band sweep as one
+        fused kernel (``kernels.ops.band_forward_sweep``), ``"ref"`` the
+        per-tile ``fori_loop`` reference; ``None`` picks per backend
+        (pallas on TPU, ref elsewhere).
+      start_tile: first band tile holding a nonzero (RHS-sparsity fast
+        start).  The caller guarantees all rows above ``start_tile * t``
+        are zero; the returned Y is identically zero there.
+
+    Returns: ``(padded_n, k)`` solution panel Y.
+
+    Recompilation: one compile per ``(grid, impl, k)``; ``start_tile`` is
+    traced, so varying selections reuse the compiled sweep — but any
+    nonzero ``start_tile`` uses a dynamic-bound loop variant on the ref
+    path (not reverse-differentiable), so ``start_tile=0`` keeps its own
+    static-bound compilation.
+    """
     ctsf = factor.ctsf
     bd, ba = _split_rhs(ctsf.grid, B)
     if start_tile:
@@ -204,11 +211,24 @@ def backward_solve_many(factor: CholeskyFactor, Y: jnp.ndarray,
 
 def solve_many(factor: CholeskyFactor, B: jnp.ndarray,
                impl: Optional[str] = None) -> jnp.ndarray:
-    """``A X = B`` for an (padded_n, k) RHS panel via ``L L^T``.
+    """``A X = B`` for a panel of right-hand sides via ``L L^T``.
 
     Equivalent to stacking k :func:`solve` calls but swept once: each band
     step is a ``(t, t) @ (t, k)`` matmul, so post-factorization serving cost
     is matmul-bound instead of k latency-bound substitution sweeps.
+
+    Args:
+      factor: banded-arrowhead Cholesky factor.
+      B: ``(padded_n, k)`` panel in the padded layout (zero rows in the
+        padding region; use ``grid.padded_index`` to place original-matrix
+        entries).
+      impl: ``"pallas"`` = fused forward+backward sweep kernels (one launch
+        per sweep), ``"ref"`` = per-tile loops, ``None`` = backend default.
+
+    Returns: ``(padded_n, k)`` solution panel X.
+
+    Recompiles once per ``(grid, impl, k)`` — serving with a fixed panel
+    width never retraces; pad k up to a bucket if widths vary.
     """
     ctsf = factor.ctsf
     bd, ba = _split_rhs(ctsf.grid, B)
@@ -238,23 +258,25 @@ def logdet(factor: CholeskyFactor) -> jnp.ndarray:
     return factor.logdet()
 
 
-def sample_gmrf(factor: CholeskyFactor, key: jax.Array) -> jnp.ndarray:
+def sample_gmrf(factor: CholeskyFactor, key: jax.Array,
+                impl: Optional[str] = None) -> jnp.ndarray:
     """Draw x ~ N(0, A^{-1}) via x = L^{-T} z (the INLA sampling primitive)."""
     z = jax.random.normal(key, (factor.ctsf.grid.padded_n,), dtype=jnp.float32)
-    return backward_solve(factor, z)
+    return backward_solve(factor, z, impl)
 
 
-def sample_gmrf_many(factor: CholeskyFactor, key: jax.Array,
-                     num: int) -> jnp.ndarray:
+def sample_gmrf_many(factor: CholeskyFactor, key: jax.Array, num: int,
+                     impl: Optional[str] = None) -> jnp.ndarray:
     """Draw ``num`` samples x ~ N(0, A^{-1}) as one (padded_n, num) panel.
 
-    All samples share a single blocked backward sweep — the serving-path
-    analogue of :func:`sample_gmrf`, amortizing the factor over the whole
-    batch of posterior realizations.
+    All samples share a single blocked backward sweep (fused into one
+    kernel launch under ``impl="pallas"``) — the serving-path analogue of
+    :func:`sample_gmrf`, amortizing the factor over the whole batch of
+    posterior realizations.  Recompiles once per ``(grid, impl, num)``.
     """
     z = jax.random.normal(key, (factor.ctsf.grid.padded_n, num),
                           dtype=jnp.float32)
-    return backward_solve_many(factor, z)
+    return backward_solve_many(factor, z, impl)
 
 
 def _validate_indices(grid, indices) -> np.ndarray:
@@ -289,9 +311,20 @@ def marginal_variances(factor: CholeskyFactor, indices: jnp.ndarray,
       index are identically zero).  Kept for validation/benchmarking, and
       cheaper when k is tiny relative to the bandwidth.
 
-    Indices are element indices of the *original* matrix; out-of-range
-    values raise (arrow indices are remapped past the band padding rather
-    than reading padded rows).
+    Args:
+      indices: 1-D concrete (host) array of element indices of the
+        *original* matrix; out-of-range values raise, and arrow indices are
+        remapped past the band padding rather than reading padded rows.
+      method: ``"selinv"`` or ``"panels"`` as above.
+      impl: kernel backend forwarded to the underlying sweep
+        (``"pallas"`` / ``"ref"`` / ``None`` = backend default).
+
+    Returns: ``(k,)`` variances, ordered like ``indices``.
+
+    Recompilation: the selinv path compiles once per ``(grid, impl)``; the
+    panels path once per ``(grid, impl, k)`` — the sweep's start tile is
+    traced, so *which* indices are selected never forces a retrace, only
+    how many.
     """
     g = factor.ctsf.grid
     padded = _validate_indices(g, indices)

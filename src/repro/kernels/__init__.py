@@ -1,6 +1,7 @@
-"""Pallas TPU tile kernels for the sTiles hot spots (POTRF/TRSM/SYRK/GEMM/
-GEADD, the fused band-panel update, and the Takahashi selected-inversion
-step), with pure-jnp oracles in ref.py."""
+"""Pallas TPU kernels for the sTiles hot spots: tile primitives (POTRF/
+TRSM/SYRK/GEMM/GEADD/solve_panel, the Takahashi selected-inversion step),
+the fused band-panel update, and the fused whole-band solve sweeps
+(band_solve.py), with pure-jnp oracles in ref.py."""
 from . import ops, ref
 
 __all__ = ["ops", "ref"]

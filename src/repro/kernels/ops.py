@@ -19,10 +19,12 @@ from .potrf import potrf_pallas
 from .trsm import solve_panel_pallas, trsm_pallas
 from .gemm import gemm_pallas, syrk_pallas, geadd_pallas
 from .band_update import band_update_pallas
+from .band_solve import band_backward_sweep_pallas, band_forward_sweep_pallas
 from .selinv import selinv_step_pallas
 
 __all__ = ["potrf", "trsm", "solve_panel", "syrk", "gemm", "geadd",
-           "band_update", "selinv_step", "default_impl"]
+           "band_update", "selinv_step", "band_forward_sweep",
+           "band_backward_sweep", "default_impl"]
 
 Impl = Literal["ref", "pallas", "unrolled"]
 
@@ -101,6 +103,33 @@ def selinv_step(s_row: jnp.ndarray, g_col: jnp.ndarray,
     if impl == "pallas":
         return selinv_step_pallas(s_row, g_col, interpret=_interp())
     return ref.selinv_step_ref(s_row, g_col)
+
+
+def band_forward_sweep(Dr: jnp.ndarray, R: jnp.ndarray, bd: jnp.ndarray,
+                       start_tile=0, impl: Impl | None = None):
+    """Whole-band multi-RHS forward sweep: solve ``L Y = B`` over all band
+    tile rows and accumulate the arrow-RHS correction ``sum_m R[m] @ Y_m``
+    in the same pass.  The sweep-level serving primitive: ``"pallas"`` runs
+    one fused kernel (ring of recent panels in VMEM — no per-tile HBM
+    round-trips), ``"ref"`` the per-tile ``fori_loop`` of
+    :func:`solve_panel`.  ``start_tile`` may be traced (RHS-sparsity fast
+    start; rows above it stay zero on both backends)."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return band_forward_sweep_pallas(Dr, R, bd, start_tile,
+                                         interpret=_interp())
+    return ref.band_forward_sweep_ref(Dr, R, bd, start_tile)
+
+
+def band_backward_sweep(Dr: jnp.ndarray, R: jnp.ndarray, yd: jnp.ndarray,
+                        xa: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:
+    """Whole-band multi-RHS backward sweep: solve ``L^T X = Y - R^T Xa``
+    over all band tile rows in reverse — the transpose counterpart of
+    :func:`band_forward_sweep`, with the same backend split."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return band_backward_sweep_pallas(Dr, R, yd, xa, interpret=_interp())
+    return ref.band_backward_sweep_ref(Dr, R, yd, xa)
 
 
 def band_update(w: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:

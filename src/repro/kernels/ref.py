@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["potrf_ref", "trsm_ref", "solve_panel_ref", "syrk_ref",
-           "gemm_ref", "geadd_ref", "band_update_ref", "selinv_step_ref"]
+           "gemm_ref", "geadd_ref", "band_update_ref", "selinv_step_ref",
+           "band_forward_sweep_ref", "band_backward_sweep_ref"]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -72,6 +73,84 @@ def selinv_step_ref(s_row: jnp.ndarray, g_col: jnp.ndarray) -> jnp.ndarray:
     :func:`band_update_ref`.
     """
     return jnp.einsum("ejab,jbc->eac", s_row, g_col, precision=_HI)
+
+
+def band_forward_sweep_ref(Dr: jnp.ndarray, R: jnp.ndarray, bd: jnp.ndarray,
+                           start_tile=0):
+    """Multi-RHS forward band sweep: solve ``L Y = B`` over the band rows,
+    one ``solve_panel`` per tile row through a ``lax.fori_loop`` — the
+    per-tile-looped semantics the fused Pallas sweep must match.
+
+    Input:  Dr (ndt, bt+1, t, t) row-band factor tiles, Dr[m, j] = L[m, m-j]
+            R  (ndt, nat, t, t)  arrow rows, R[m, i] = L[ndt+i, m]
+            bd (ndt, t, k)       RHS tile panel
+    Output: yd (ndt, t, k)       with L Y = B on the band
+            acc_a (nat, t, k)    = sum_m R[m, i] @ Y_m  (arrow-RHS correction)
+
+    ``start_tile`` may be a traced scalar (RHS-sparsity fast start): rows
+    above it are left identically zero, and the loop becomes a dynamic-bound
+    ``while_loop`` (not reverse-differentiable) only when it is nonzero.
+    """
+    ndt, b1, t, _ = Dr.shape
+    bt = b1 - 1
+    k = bd.shape[-1]
+    yp = jnp.zeros((ndt + bt, t, k), bd.dtype)  # bt leading zeros
+
+    def step(m, yp):
+        # Y_m = Lmm^{-1} (B_m - sum_{j=1..bt} L[m,m-j] Y_{m-j})
+        ywin = jax.lax.dynamic_slice(yp, (m, 0, 0), (bt, t, k)) if bt else yp[:0]
+        # ywin[bt - j] = Y_{m-j}; Dr[m, j] = L[m, m-j]
+        drm = jax.lax.dynamic_slice(Dr, (m, 0, 0, 0), (1, bt + 1, t, t))[0]
+        acc = jnp.einsum("jab,jbk->ak", jnp.flip(drm[1:], axis=0), ywin,
+                         precision=_HI) if bt else 0.0
+        bm = jax.lax.dynamic_slice(bd, (m, 0, 0), (1, t, k))[0]
+        ym = solve_panel_ref(drm[0], bm - acc)
+        return jax.lax.dynamic_update_slice(yp, ym[None], (m + bt, 0, 0))
+
+    yp = jax.lax.fori_loop(start_tile, ndt, step, yp) if ndt else yp
+    yd = yp[bt:]
+    acc_a = jnp.einsum("niab,nbk->iak", R, yd, precision=_HI)
+    return yd, acc_a
+
+
+def band_backward_sweep_ref(Dr: jnp.ndarray, R: jnp.ndarray, yd: jnp.ndarray,
+                            xa: jnp.ndarray) -> jnp.ndarray:
+    """Multi-RHS backward band sweep: solve ``L^T X = Y - R^T Xa`` over the
+    band rows in reverse, one ``solve_panel(trans=True)`` per tile row —
+    the per-tile-looped reference for the fused Pallas backward sweep.
+
+    Input:  Dr (ndt, bt+1, t, t), R (ndt, nat, t, t) as in the forward sweep
+            yd (ndt, t, k)  forward-solved band panel
+            xa (nat, t, k)  already-solved arrow panel
+    Output: xd (ndt, t, k) with
+            X_m = Lmm^{-T}(Y_m - sum_j L[m+j,m]^T X_{m+j} - sum_i R[m,i]^T Xa_i)
+    """
+    ndt, b1, t, _ = Dr.shape
+    bt = b1 - 1
+    nat = R.shape[1]
+    k = yd.shape[-1]
+    Drp = jnp.pad(Dr, ((0, bt), (0, 0), (0, 0), (0, 0)))  # slack for m+j reads
+    xp = jnp.zeros((ndt + bt, t, k), yd.dtype)
+    jr = jnp.arange(bt)
+
+    def step(i, xp):
+        m = ndt - 1 - i
+        wb = jax.lax.dynamic_slice(Drp, (m + 1, 0, 0, 0), (bt, bt + 1, t, t)) \
+            if bt else Drp[:0]
+        # L[m+j, m] = Drp[m+j, j]  -> wb[j-1, j]
+        sub = wb[jr, jr + 1] if bt else wb[:, 0]
+        xwin = jax.lax.dynamic_slice(xp, (m + 1, 0, 0), (bt, t, k)) if bt else xp[:0]
+        acc = jnp.einsum("jab,jak->bk", sub, xwin, precision=_HI) if bt else 0.0
+        if nat:
+            rm = jax.lax.dynamic_slice(R, (m, 0, 0, 0), (1, nat, t, t))[0]
+            acc = acc + jnp.einsum("iab,iak->bk", rm, xa, precision=_HI)
+        ym = jax.lax.dynamic_slice(yd, (m, 0, 0), (1, t, k))[0]
+        lmm = jax.lax.dynamic_slice(Dr, (m, 0, 0, 0), (1, 1, t, t))[0, 0]
+        xm = solve_panel_ref(lmm, ym - acc, trans=True)
+        return jax.lax.dynamic_update_slice(xp, xm[None], (m, 0, 0))
+
+    xp = jax.lax.fori_loop(0, ndt, step, xp) if ndt else xp
+    return xp[:ndt]
 
 
 def band_update_unrolled_ref(w: jnp.ndarray) -> jnp.ndarray:

@@ -12,7 +12,38 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["trsm_pallas", "solve_panel_pallas"]
+__all__ = ["trsm_pallas", "solve_panel_pallas", "substitute_panel"]
+
+
+def substitute_panel(l: jnp.ndarray, b: jnp.ndarray,
+                     trans: bool = False) -> jnp.ndarray:
+    """In-kernel multi-RHS substitution: solve ``L X = B`` (``trans`` ->
+    ``L^T X = B``) for one (t, t) lower-triangular tile against a (t, k)
+    panel, using only masked vector ops (no gather/scatter) so it lowers
+    inside a Pallas kernel body.  Shared by :func:`solve_panel_pallas` and
+    the fused band sweeps in ``kernels/band_solve.py``.  Operates in and
+    returns float32."""
+    t, k = l.shape[-1], b.shape[-1]
+    lrows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    lcols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    prows = jax.lax.broadcasted_iota(jnp.int32, (t, k), 0)
+    rvec = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
+
+    def step(s, x):
+        j = (t - 1 - s) if trans else s
+        if trans:
+            # row j of U = L^T is column j of L; only i > j contribute
+            lj = jnp.sum(jnp.where(lcols == j, l, 0.0), axis=1)
+            lj_m = jnp.where(rvec > j, lj, 0.0)
+        else:
+            lj = jnp.sum(jnp.where(lrows == j, l, 0.0), axis=0)
+            lj_m = jnp.where(rvec < j, lj, 0.0)
+        ljj = jnp.sum(jnp.where(rvec == j, lj, 0.0))
+        bj = jnp.sum(jnp.where(prows == j, b, 0.0), axis=0)         # B[j, :]
+        xrow = (bj - jnp.dot(lj_m, x, precision=jax.lax.Precision.HIGHEST)) / ljj
+        return jnp.where(prows == j, xrow[None, :], x)
+
+    return jax.lax.fori_loop(0, t, step, jnp.zeros((t, k), jnp.float32))
 
 
 def _trsm_kernel(l_ref, a_ref, o_ref):
@@ -60,30 +91,8 @@ def _solve_panel_kernel(l_ref, b_ref, o_ref, *, trans):
     """Multi-RHS substitution: solve L X = B (or L^T X = B) for one (t, k)
     panel.  Each step updates a whole row of X — a (t,) x (t, k) contraction
     — so the k right-hand sides ride one sweep instead of k."""
-    t = l_ref.shape[-2]
-    k = b_ref.shape[-1]
-    l = l_ref[0].astype(jnp.float32)
-    b = b_ref[0].astype(jnp.float32)
-    lrows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
-    lcols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
-    prows = jax.lax.broadcasted_iota(jnp.int32, (t, k), 0)
-    rvec = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
-
-    def step(s, x):
-        j = (t - 1 - s) if trans else s
-        if trans:
-            # row j of U = L^T is column j of L; only i > j contribute
-            lj = jnp.sum(jnp.where(lcols == j, l, 0.0), axis=1)
-            lj_m = jnp.where(rvec > j, lj, 0.0)
-        else:
-            lj = jnp.sum(jnp.where(lrows == j, l, 0.0), axis=0)
-            lj_m = jnp.where(rvec < j, lj, 0.0)
-        ljj = jnp.sum(jnp.where(rvec == j, lj, 0.0))
-        bj = jnp.sum(jnp.where(prows == j, b, 0.0), axis=0)         # B[j, :]
-        xrow = (bj - jnp.dot(lj_m, x, precision=jax.lax.Precision.HIGHEST)) / ljj
-        return jnp.where(prows == j, xrow[None, :], x)
-
-    x = jax.lax.fori_loop(0, t, step, jnp.zeros((t, k), jnp.float32))
+    x = substitute_panel(l_ref[0].astype(jnp.float32),
+                         b_ref[0].astype(jnp.float32), trans=trans)
     o_ref[0] = x.astype(o_ref.dtype)
 
 
