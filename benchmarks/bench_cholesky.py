@@ -1,0 +1,177 @@
+"""Fused factorization path: one-launch Pallas sweeps vs the scan paths.
+
+Two comparisons on the same banded-arrowhead problem:
+
+* ``factorize_window(impl="pallas")`` — the whole band + arrow
+  factorization as **one** ``kernels.band_cholesky`` launch (VMEM panel
+  ring, in-kernel potrf/trsm, corner Schur accumulated on the fly) — vs
+  ``impl="ref"``, the ring-buffer ``lax.scan`` dispatching per-panel ops.
+* ``selected_inverse(impl="pallas")`` — the whole Takahashi recurrence as
+  one ``kernels.selinv_sweep`` launch — vs the per-column scan.
+
+Gating is on **counted kernel launches**, not wall time: the fused sweeps
+must trace to exactly one ``pallas_call`` each (counted by jaxpr
+traversal), versus the 3·ndt (potrf + trsm + band_update) / 2·ndt
+(solve_panel + selinv_step) per-panel launches the pre-fusion paths
+dispatched.  Launch counts are backend-independent, so this gate holds on
+CPU CI; wall-clock timings on non-TPU hosts run the kernels in interpret
+mode and are recorded under ``interpret_diagnostics`` only (run.py
+excludes that block from gating), becoming top-level gated metrics on
+real TPU hardware.
+
+Emits a ``BENCH_cholesky.json`` trajectory point at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.core import (BandedCTSF, TileGrid, factorize_window,
+                        selected_inverse)
+from repro.kernels import ops
+from repro.kernels.ring import band_row_to_col
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _time(fn, reps=2):
+    fn()  # warmup / compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def count_pallas_launches(closed_jaxpr) -> int:
+    """Count pallas_call sites in a (closed) jaxpr, descending into
+    sub-jaxprs; scan/while bodies multiply by their trip count where it is
+    statically known (``scan`` carries ``length``), so a per-panel kernel
+    loop is charged once per panel."""
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+            continue
+        mult = eqn.params.get("length", 1) \
+            if eqn.primitive.name == "scan" else 1
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):
+                total += mult * count_pallas_launches(v)
+            elif isinstance(v, (list, tuple)):
+                total += mult * sum(count_pallas_launches(b)
+                                    for b in v if hasattr(b, "jaxpr"))
+    return total
+
+
+def run(quick: bool = True):
+    from repro.data import make_arrowhead
+
+    n, bw, ar, t = (1024, 32, 16, 16) if quick else (4096, 64, 32, 32)
+    A, struct = make_arrowhead(n, bw, ar, rho=0.6, seed=0)
+    grid = TileGrid(struct, t=t)
+    bm = BandedCTSF.from_sparse(A, grid)
+    ndt = grid.n_diag_tiles
+    backend = jax.default_backend()
+    interpret = backend != "tpu"
+
+    # --- launch counts (backend-independent, the CI gate) -------------------
+    Ac = band_row_to_col(bm.Dr)
+    fused_fact_launches = count_pallas_launches(jax.make_jaxpr(
+        lambda a, r: ops.band_cholesky_sweep(a, r, nchunks=8,
+                                             impl="pallas"))(Ac, bm.R))
+    f0 = factorize_window(bm, impl="ref")
+    ctsf = f0.ctsf
+    nat = grid.n_arrow_tiles
+    sc_shape = jax.ShapeDtypeStruct((nat, nat, t, t), ctsf.C.dtype)
+    fused_selinv_launches = count_pallas_launches(jax.make_jaxpr(
+        lambda l, r, s: ops.selinv_sweep(l, r, s, impl="pallas"))(
+        band_row_to_col(ctsf.Dr), ctsf.R, sc_shape))
+    # the pre-fusion per-panel dispatch counts (one potrf + trsm +
+    # band_update launch per band panel; one solve_panel + selinv_step per
+    # selinv column)
+    scan_fact_launches = 3 * ndt
+    scan_selinv_launches = 2 * ndt
+    fact_reduction = scan_fact_launches / max(fused_fact_launches, 1)
+    selinv_reduction = scan_selinv_launches / max(fused_selinv_launches, 1)
+
+    rows = [("cholesky_fused_launches", float(fused_fact_launches),
+             f"scan_equiv={scan_fact_launches};reduction={fact_reduction:.0f}x"),
+            ("selinv_fused_launches", float(fused_selinv_launches),
+             f"scan_equiv={scan_selinv_launches};reduction={selinv_reduction:.0f}x")]
+
+    # --- timings: fused vs scan (interpret-mode diagnostics off-TPU) -------
+    def fact_fused():
+        jax.block_until_ready(factorize_window(bm, impl="pallas").ctsf.Dr)
+
+    def fact_scan():
+        jax.block_until_ready(factorize_window(bm, impl="ref").ctsf.Dr)
+
+    t_ff = _time(fact_fused)
+    t_fs = _time(fact_scan)
+
+    def si_fused():
+        jax.block_until_ready(selected_inverse(f0, impl="pallas").Dr)
+
+    def si_scan():
+        jax.block_until_ready(selected_inverse(f0, impl="ref").Dr)
+
+    t_sf = _time(si_fused)
+    t_ss = _time(si_scan)
+    tag = "[interpret-diagnostic]" if interpret else ""
+    rows.append((f"factorize_fused{tag}", t_ff * 1e6,
+                 f"scan_us={t_fs*1e6:.0f};backend={backend}"))
+    rows.append((f"selinv_fused{tag}", t_sf * 1e6,
+                 f"scan_us={t_ss*1e6:.0f};backend={backend}"))
+
+    record = {
+        "bench": "cholesky",
+        "quick": quick,
+        "problem": {"n": n, "bandwidth": bw, "arrow": ar, "t": t,
+                    "ndt": ndt, "band_tiles": grid.band_tiles,
+                    "arrow_tiles": nat},
+        "fused_factorize_launches": fused_fact_launches,
+        "scan_factorize_launch_equiv": scan_fact_launches,
+        "factorize_launch_reduction": fact_reduction,
+        "fused_selinv_launches": fused_selinv_launches,
+        "scan_selinv_launch_equiv": scan_selinv_launches,
+        "selinv_launch_reduction": selinv_reduction,
+        "backend": backend,
+        # interpret-mode timings never gate; launch counts do.  On TPU the
+        # speedups graduate to top-level gated metrics.
+        "thresholds": {"factorize_launch_reduction_min": 8.0,
+                       "selinv_launch_reduction_min": 8.0},
+    }
+    timing = {
+        "factorize_fused_us": t_ff * 1e6,
+        "factorize_scan_us": t_fs * 1e6,
+        "factorize_fused_speedup": t_fs / t_ff,
+        "selinv_fused_us": t_sf * 1e6,
+        "selinv_scan_us": t_ss * 1e6,
+        "selinv_fused_speedup": t_ss / t_sf,
+    }
+    passing = (fused_fact_launches == 1 and fused_selinv_launches == 1
+               and fact_reduction >= 8.0 and selinv_reduction >= 8.0)
+    if interpret:
+        record["interpret_diagnostics"] = {**timing, "interpret_mode": True}
+    else:
+        record.update(timing)
+        record["thresholds"].update({"factorize_fused_speedup_min": 1.2,
+                                     "selinv_fused_speedup_min": 1.2})
+        passing = passing and timing["factorize_fused_speedup"] >= 1.2 \
+            and timing["selinv_fused_speedup"] >= 1.2
+    record["pass"] = bool(passing)
+    with open(os.path.join(_ROOT, "BENCH_cholesky.json"), "w") as f:
+        json.dump(record, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run(quick=True):
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

@@ -110,9 +110,14 @@ def run(quick: bool = True):
     t_fused = _time(sweep_fused, reps=2)
     t_looped = _time(sweep_looped, reps=2)
     backend = jax.default_backend()
-    rows.append((f"solve_sweep_fused_k{kf}", t_fused * 1e6,
-                 f"looped_us={t_looped*1e6:.0f};backend={backend}"
-                 f"{';interpret' if backend != 'tpu' else ''}"))
+    interpret = backend != "tpu"
+    # On non-TPU hosts the fused kernel executes in interpret mode, so its
+    # timing is a diagnostic, not a speedup claim — the CSV row is tagged
+    # and the JSON record quarantines it under interpret_diagnostics.
+    rows.append((f"solve_sweep_fused_k{kf}"
+                 + ("[interpret-diagnostic]" if interpret else ""),
+                 t_fused * 1e6,
+                 f"looped_us={t_looped*1e6:.0f};backend={backend}"))
 
     # --- batched vs looped window factorization ----------------------------
     # Stacking happens once outside the timed region (serving keeps the
@@ -154,19 +159,27 @@ def run(quick: bool = True):
         "factorize_batched_us": t_fb * 1e6,
         "factorize_loop_us": t_fl * 1e6,
         "factorize_batched_speedup": fac_speedup,
-        # fused (single-launch Pallas) vs per-tile-looped sweep; on non-TPU
-        # backends the fused kernel executes in interpret mode, so this
-        # ratio is only meaningful on TPU — not part of the pass criteria.
+        "thresholds": {"solve_many_speedup_min": 3.0,
+                       "marginal_variances_speedup_min": 5.0},
+        "pass": bool(solve_speedup >= 3.0 and mv_speedup >= 5.0),
+    }
+    # fused (single-launch Pallas) vs per-tile-looped sweep.  Only
+    # meaningful as a speedup on real TPU hardware; in interpret mode the
+    # numbers live under interpret_diagnostics, which run.py consistently
+    # excludes from gating — they never sit alongside production metrics
+    # without the flag.
+    sweep_stats = {
         "sweep_k": kf,
         "sweep_fused_us": t_fused * 1e6,
         "sweep_looped_us": t_looped * 1e6,
         "sweep_fused_speedup": t_looped / t_fused,
         "sweep_backend": backend,
-        "sweep_fused_interpret_mode": backend != "tpu",
-        "thresholds": {"solve_many_speedup_min": 3.0,
-                       "marginal_variances_speedup_min": 5.0},
-        "pass": bool(solve_speedup >= 3.0 and mv_speedup >= 5.0),
     }
+    if interpret:
+        record["interpret_diagnostics"] = {**sweep_stats,
+                                           "interpret_mode": True}
+    else:
+        record.update(sweep_stats)
     with open(os.path.join(_ROOT, "BENCH_solve.json"), "w") as f:
         json.dump(record, f, indent=2)
     return rows

@@ -15,11 +15,22 @@ matrices (long on CPU); the default is structure-preserving scaled versions.
   Selinv      -> bench_selinv         (Takahashi recurrence vs dense-panel
                                        marginals vs np.linalg.inv; writes
                                        BENCH_selinv.json)
+  Fused fact. -> bench_cholesky       (one-launch factorization/selinv vs
+                                       scan: launch counts + timings;
+                                       writes BENCH_cholesky.json)
   §Roofline   -> roofline             (from dry-run artifacts)
+
+``--check-only`` validates every committed ``BENCH_*.json`` against its
+embedded thresholds without re-running anything — the fast CI gate
+against landing a record that fails its own pass criteria.  Timings
+recorded under a record's ``interpret_diagnostics`` block (Pallas
+interpret-mode numbers on non-TPU hosts) are never gated, in check-only
+or full runs; fused-kernel records gate on counted launches instead.
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import sys
@@ -29,30 +40,68 @@ import traceback
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _regressed_thresholds(record: dict) -> list:
-    """Spell out *which* thresholds a BENCH_*.json record missed.
+def _record_failures(record: dict) -> list:
+    """Spell out which criteria a BENCH_*.json record misses.
 
     Threshold keys follow the ``<metric>_min`` convention (e.g.
-    ``solve_many_speedup_min`` gates ``solve_many_speedup``)."""
+    ``solve_many_speedup_min`` gates ``solve_many_speedup``).  A
+    thresholded metric must exist at the record's top level — except
+    metrics listed under ``interpret_diagnostics``, which are
+    interpret-mode-only timings and are consistently excluded from
+    gating.  ``pass: false`` fails regardless."""
+    diag = record.get("interpret_diagnostics") or {}
     out = []
     for name, lo in (record.get("thresholds") or {}).items():
         metric = name[: -len("_min")] if name.endswith("_min") else name
+        if metric in diag:
+            continue
         val = record.get(metric)
-        if isinstance(val, (int, float)) and val < lo:
+        if val is None:
+            out.append(f"{metric} missing (gated by threshold {name})")
+        elif isinstance(val, (int, float)) and val < lo:
             out.append(f"{metric}={val:.3g} (min {lo:.3g})")
+    if record.get("pass") is False:
+        out.append("record has pass=false")
     return out
+
+
+def check_records(root: str = _ROOT) -> int:
+    """Validate all committed BENCH_*.json against their embedded
+    thresholds; returns the number of failing records (printing each
+    failure)."""
+    bad = 0
+    paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not paths:
+        print("no BENCH_*.json records found", file=sys.stderr)
+        return 1
+    for path in paths:
+        with open(path) as f:
+            record = json.load(f)
+        reasons = _record_failures(record)
+        tag = "FAIL" if reasons else "ok"
+        print(f"{tag}: {os.path.basename(path)}"
+              + (f" — {'; '.join(reasons)}" if reasons else ""))
+        bad += bool(reasons)
+    return bad
 
 
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--full", action="store_true")
     p.add_argument("--only", default=None)
+    p.add_argument("--check-only", action="store_true",
+                   help="validate committed BENCH_*.json thresholds "
+                        "without re-running any benchmark")
     args = p.parse_args()
     quick = not args.full
 
-    from . import (bench_accumulation, bench_concurrent, bench_libraries,
-                   bench_scalability, bench_selinv, bench_solve,
-                   bench_tile_size, bench_tree_reduction, roofline)
+    if args.check_only:
+        raise SystemExit(1 if check_records() else 0)
+
+    from . import (bench_accumulation, bench_cholesky, bench_concurrent,
+                   bench_libraries, bench_scalability, bench_selinv,
+                   bench_solve, bench_tile_size, bench_tree_reduction,
+                   roofline)
     suites = {
         "accumulation": bench_accumulation,
         "libraries": bench_libraries,
@@ -62,6 +111,7 @@ def main() -> None:
         "concurrent": bench_concurrent,
         "solve": bench_solve,
         "selinv": bench_selinv,
+        "cholesky": bench_cholesky,
         "roofline": roofline,
     }
     failures = []  # (suite, [reasons...])
@@ -88,9 +138,8 @@ def main() -> None:
                 print(f"# wrote {record_path}", flush=True)
             with open(record_path) as f:
                 record = json.load(f)
-            if record.get("pass") is False:
-                reasons = (_regressed_thresholds(record)
-                           or ["record has pass=false"])
+            reasons = _record_failures(record)
+            if reasons:
                 failures.append((name, reasons))
                 print(f"{name},THRESHOLD_FAIL,{';'.join(reasons)}",
                       flush=True)

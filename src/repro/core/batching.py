@@ -1,0 +1,83 @@
+"""Shared batching utilities for the serving entry points.
+
+Both batched serving paths — ``cholesky.factorize_window_batched`` and
+``selinv.selinv_batched`` — dispatch a vmapped+jitted per-batch function
+with the same two tricks:
+
+* **pow2 bucketing** (:func:`bucketed_batched_call`): pad the leading
+  batch axis (repeating the last element) up to the next power of two,
+  call, drop the padding results — bounding XLA compiles per grid at
+  log2(max batch) instead of one per distinct sweep size.
+* **a bounded traced-callable cache** (:class:`LRUCache`): the vmapped
+  function object is cached per (grid, impl, ...) key so repeated
+  same-structure sweeps reuse the trace (and the jit wrapper's compiled
+  executable).  The cache is LRU-bounded so a long-running serving
+  process cycling through many distinct grids cannot grow it without
+  limit.  Note eviction drops the ``jax.jit`` wrapper *including* its
+  compiled-executable cache — re-entering an evicted key pays a full
+  retrace + XLA compile — so ``maxsize`` trades memory against recompile
+  cost for workloads hot on more than ``maxsize`` grids.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Hashable, Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["LRUCache", "bucketed_batched_call", "next_pow2"]
+
+
+class LRUCache:
+    """Tiny insertion/recency-ordered cache for traced callables.
+
+    ``get`` refreshes recency; ``put`` evicts the least recently used
+    entry beyond ``maxsize``.  Not thread-safe (matching the module-level
+    dict it replaces — JAX tracing itself is not re-entrant either)."""
+
+    def __init__(self, maxsize: int = 64):
+        if maxsize <= 0:
+            raise ValueError("maxsize must be positive")
+        self.maxsize = maxsize
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        if key not in self._entries:
+            return None
+        self._entries.move_to_end(key)
+        return self._entries[key]
+
+    def put(self, key: Hashable, value: Any) -> None:
+        self._entries[key] = value
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+
+def next_pow2(b: int) -> int:
+    return 1 << max(b - 1, 0).bit_length()
+
+
+def bucketed_batched_call(fn: Callable, arrays: Tuple[jnp.ndarray, ...],
+                          bucket: bool):
+    """Dispatch a vmapped per-batch function with pow2 bucketing: pad the
+    leading batch axis (repeating the last element) up to the next power of
+    two, call, and drop the padding results — bounding XLA compiles per grid
+    at log2(max batch).  Shared by the batched factorization and the batched
+    selected inversion."""
+    b = arrays[0].shape[0]
+    nb = next_pow2(b) if bucket else b
+    if nb != b:
+        pad = nb - b
+        arrays = tuple(jnp.concatenate([a, jnp.broadcast_to(
+            a[-1:], (pad,) + a.shape[1:])]) for a in arrays)
+    outs = fn(*arrays)
+    if nb != b:
+        outs = tuple(o[:b] for o in outs)
+    return outs

@@ -10,10 +10,13 @@ Two numerical backends over the CTSF layouts:
   destination tile's accumulation chain.
 
 * :func:`factorize_window` — **TPU-native** (beyond-paper, DESIGN.md §4):
-  for the regular banded-arrowhead layout, each panel's entire left-looking
-  update collapses into one fused band-window contraction
-  (``kernels.band_update``), walked by a `lax.fori_loop` along the thin
-  critical path.  Arrow/corner accumulations are tree-reduced.
+  for the regular banded-arrowhead layout, the whole band + arrow
+  factorization is one sweep-level primitive
+  (``kernels.ops.band_cholesky_sweep``): on the Pallas backend a *single
+  fused kernel launch* walks the band with the panel ring resident in
+  VMEM (``sweep="fused"``); on the jnp backend a ring-buffer ``lax.scan``
+  dispatches per-panel tile ops.  Corner Schur partial sums ride the
+  sweep as tree-reduction chunks.
 
 Both produce bit-comparable factors (tests assert allclose against
 `jnp.linalg.cholesky` of the dense matrix).
@@ -22,13 +25,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.kernels.ring import band_col_to_row, band_row_to_col
+from .batching import LRUCache, bucketed_batched_call
 from .ctsf import BandedCTSF, TileMatrix
 from .symbolic import Task, TaskType
 from .tree_reduction import chunked_tree_sum, should_use_tree
@@ -195,70 +200,17 @@ def _corner_dense_cholesky(c: jnp.ndarray, impl: Optional[str]) -> jnp.ndarray:
     return jax.lax.fori_loop(0, nat, col_step, c)
 
 
-def _band_arrow_sweep_ring(Dr, R, grid, impl):
-    """Ring-buffer panel sweep (§Perf iteration 3).
-
-    The windowed sweep below dynamic-slices a (ndt+bt, bt+1, t, t) array and
-    scatters panel results back every iteration — O(ndt·b·t²) memory traffic
-    per panel.  But panel k only ever reads the *last bt panels' outputs*:
-
-        U[e] = Σ_{j=1..bt} P_{k-j}[e+j] @ P_{k-j}[j]^T
-
-    so a `lax.scan` carrying a (bt, bt+1, t, t) ring of recent panels (plus
-    the arrow ring) does the same factorization with an O(b²·t²) working set
-    — no scatters, panels emitted directly as stacked scan outputs.  On TPU
-    the ring lives in VMEM across iterations.
-    """
-    t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
-    b1 = bt + 1
-
-    # column-band view: Ac[k, e] = A[k+e, k] = Dr[k+e, e]
-    Drp = jnp.pad(Dr, ((0, bt), (0, 0), (0, 0), (0, 0)))
-    kk, ee = jnp.meshgrid(jnp.arange(ndt), jnp.arange(b1), indexing="ij")
-    Ac = Drp[kk + ee, ee]                                 # (ndt, b1, t, t)
-
-    # shifted-gather indices for the ring contraction: for ring slot j-1
-    # (panel k-j) pair (offset e+j with offset j)
-    jj = jnp.arange(1, bt + 1)                            # (bt,)
-    e_idx = jnp.arange(b1)
-    src = jnp.clip(e_idx[None, :] + jj[:, None], 0, bt)   # (bt, b1)
-    valid = (e_idx[None, :] + jj[:, None]) <= bt
-
-    def body(carry, xs):
-        ring, ring_a = carry                              # (bt,b1,t,t), (bt,nat,t,t)
-        a_col, r_col = xs                                 # (b1,t,t), (nat,t,t)
-        if bt:
-            shifted = jnp.take_along_axis(
-                ring, src[:, :, None, None], axis=1)      # (bt,b1,t,t)
-            shifted = jnp.where(valid[:, :, None, None], shifted, 0.0)
-            rhs = ring[jnp.arange(bt), jj]                # (bt,t,t) = P_{k-j}[j]
-            u = jnp.einsum("jeab,jcb->eac", shifted, rhs, precision=_HI)
-        else:
-            u = jnp.zeros_like(a_col)
-        lkk = ops.potrf(a_col[0] - u[0], impl=impl)
-        lmk = ops.trsm(lkk, a_col[1:] - u[1:], impl=impl)
-        panel = jnp.concatenate([lkk[None], lmk], axis=0)
-        if nat:
-            v = jnp.einsum("jiab,jcb->iac", ring_a, rhs, precision=_HI) \
-                if bt else 0.0
-            la = ops.trsm(lkk, r_col - v, impl=impl)
-        else:
-            la = r_col
-        if bt:
-            ring = jnp.concatenate([panel[None], ring[:-1]], axis=0)
-            if nat:
-                ring_a = jnp.concatenate([la[None], ring_a[:-1]], axis=0)
-        return (ring, ring_a), (panel, la)
-
-    ring0 = jnp.zeros((bt, b1, t, t), Dr.dtype)
-    ring_a0 = jnp.zeros((bt, nat, t, t), Dr.dtype)
-    _, (panels, R_out) = jax.lax.scan(body, (ring0, ring_a0), (Ac, R))
-
-    # back to row-band layout: Dr_out[m, d] = panels[m-d, d]
-    mm, dd = jnp.meshgrid(jnp.arange(ndt), jnp.arange(b1), indexing="ij")
-    Dr_out = jnp.where(((mm - dd) >= 0)[:, :, None, None],
-                       panels[jnp.clip(mm - dd, 0, ndt - 1), dd], 0.0)
-    return Dr_out, R_out
+def _band_arrow_sweep_ring(Dr, R, grid, impl, tree_chunks: int = 1):
+    """Band + arrow factorization through the sweep-level primitive
+    (``kernels.ops.band_cholesky_sweep``) — the (Dr, R) -> (Dr_L, R_L,
+    schur) entry point ``core/distributed.py`` vmaps over shards.  The
+    per-chunk corner-Schur partial sums come straight from the sweep (the
+    fused kernel accumulates them on the fly), so callers must not
+    re-contract R_L.  ``impl="pallas"`` = one fused kernel launch;
+    ``"ref"`` = the ring-buffer ``lax.scan``."""
+    panels, R_out, schur = ops.band_cholesky_sweep(
+        band_row_to_col(Dr), R, nchunks=tree_chunks, impl=impl)
+    return band_col_to_row(panels), R_out, schur
 
 
 def _band_arrow_sweep(Dr, R, grid, impl):
@@ -313,21 +265,73 @@ def _corner_schur(R_L: jnp.ndarray, tree_chunks: int) -> jnp.ndarray:
 
 @functools.partial(jax.jit,
                    static_argnames=("grid", "impl", "tree_chunks", "sweep"))
-def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="ring"):
+def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto"):
+    """Window factorization with sweep-mode dispatch:
+
+    * ``"auto"`` (default) — ``"fused"`` on the Pallas backend (native TPU
+      or an explicit ``impl="pallas"``), else ``"ring"``: every caller
+      (:func:`factorize_window`, :func:`factorize_window_batched`,
+      ``concurrent_factorize``) rides the fused kernel wherever Pallas is
+      the kernel backend.
+    * ``"fused"`` — force the single-launch Pallas sweep
+      (``kernels/band_cholesky.py``).
+    * ``"ring"`` — force the ring-buffer ``lax.scan`` reference.
+    * ``"window"`` — the legacy dynamic-slice window sweep
+      (``kernels.band_update`` per panel), kept for comparison.
+
+    The fused/ring paths read the corner Schur complement from the sweep's
+    per-chunk partial sums (accumulated on the fly in the fused kernel)
+    instead of re-contracting R_out from HBM."""
     nat = grid.n_arrow_tiles
-    sweeper = _band_arrow_sweep_ring if sweep == "ring" else _band_arrow_sweep
-    Dr_out, R_out = sweeper(Dr, R, grid, impl)
+    if sweep not in ("auto", "fused", "ring", "window"):
+        raise ValueError(f"unknown sweep {sweep!r} (want 'auto', 'fused', "
+                         "'ring' or 'window')")
+    # "ring" is the jnp scan and "fused" the Pallas kernel by definition —
+    # an explicit impl pointing the other way would silently run a
+    # different backend than asked, so refuse the contradiction.
+    if (sweep == "ring" and impl == "pallas") or \
+            (sweep == "fused" and impl in ("ref", "unrolled")):
+        raise ValueError(
+            f"sweep={sweep!r} contradicts impl={impl!r}: the ring sweep is "
+            "the jnp reference scan and the fused sweep is the Pallas "
+            "kernel; use sweep='auto' to dispatch by impl")
+    mode = sweep
+    if mode == "auto":
+        mode = "fused" if (impl or ops.default_impl()) == "pallas" else "ring"
+    if mode == "window":
+        Dr_out, R_out = _band_arrow_sweep(Dr, R, grid, impl)
+        if nat:
+            C_out = _corner_dense_cholesky(
+                C - _corner_schur(R_out, tree_chunks), impl)
+        else:
+            C_out = C
+        return Dr_out, R_out, C_out
+
+    sweep_impl = "pallas" if mode == "fused" else "ref"
+    nchunks = max(1, min(tree_chunks or 1, grid.n_diag_tiles or 1))
+    panels, R_out, schur = ops.band_cholesky_sweep(
+        band_row_to_col(Dr), R, nchunks=nchunks, impl=sweep_impl)
+    Dr_out = band_col_to_row(panels)
     if nat:
-        C_out = _corner_dense_cholesky(C - _corner_schur(R_out, tree_chunks), impl)
+        # the chunks are the tree-reduction leaves; summing them is the
+        # root combine of the paper's Alg. 3 chain
+        C_out = _corner_dense_cholesky(C - jnp.sum(schur, axis=0), impl)
     else:
         C_out = C
     return Dr_out, R_out, C_out
 
 
 def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
-                     tree_chunks: int = 8) -> CholeskyFactor:
-    """Banded-arrowhead factorization (window backend)."""
-    Dr, R, C = _factorize_window_impl(m.Dr, m.R, m.C, m.grid, impl, tree_chunks)
+                     tree_chunks: int = 8,
+                     sweep: str = "auto") -> CholeskyFactor:
+    """Banded-arrowhead factorization (window backend).
+
+    ``impl="pallas"`` (or running natively on TPU) factorizes the whole
+    band + arrow block in **one fused Pallas launch**
+    (``kernels.ops.band_cholesky_sweep``); ``sweep`` overrides the
+    dispatch (see :func:`_factorize_window_impl`)."""
+    Dr, R, C = _factorize_window_impl(m.Dr, m.R, m.C, m.grid, impl,
+                                      tree_chunks, sweep)
     return CholeskyFactor(BandedCTSF(m.grid, Dr, R, C))
 
 
@@ -335,32 +339,13 @@ def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
 # Batched window factorization (INLA θ-sweep serving path)
 # ---------------------------------------------------------------------------
 
-_BATCHED_WINDOW_CACHE: Dict[Tuple, object] = {}
+# bounded so long-running serving processes cycling through many distinct
+# grids cannot grow the traced-callable map without limit; an evicted key
+# pays retrace + recompile on re-entry (core/batching.py)
+_BATCHED_WINDOW_CACHE = LRUCache(maxsize=64)
 
 
-def _next_pow2(b: int) -> int:
-    return 1 << max(b - 1, 0).bit_length()
-
-
-def _bucketed_batched_call(fn, arrays, bucket: bool):
-    """Dispatch a vmapped per-batch function with pow2 bucketing: pad the
-    leading batch axis (repeating the last element) up to the next power of
-    two, call, and drop the padding results — bounding XLA compiles per grid
-    at log2(max batch).  Shared by the batched factorization and the batched
-    selected inversion."""
-    b = arrays[0].shape[0]
-    nb = _next_pow2(b) if bucket else b
-    if nb != b:
-        pad = nb - b
-        arrays = tuple(jnp.concatenate([a, jnp.broadcast_to(
-            a[-1:], (pad,) + a.shape[1:])]) for a in arrays)
-    outs = fn(*arrays)
-    if nb != b:
-        outs = tuple(o[:b] for o in outs)
-    return outs
-
-
-def _batched_window_fn(grid, impl, tree_chunks, sweep="ring"):
+def _batched_window_fn(grid, impl, tree_chunks, sweep="auto"):
     """One vmapped+jitted window factorization per (grid, impl, chunks,
     sweep) — cached on the Python side so repeated θ-sweeps reuse the same
     traced function object (and therefore XLA's compile cache)."""
@@ -370,27 +355,30 @@ def _batched_window_fn(grid, impl, tree_chunks, sweep="ring"):
         fn = jax.jit(jax.vmap(
             lambda dr, r, c: _factorize_window_impl(dr, r, c, grid, impl,
                                                     tree_chunks, sweep)))
-        _BATCHED_WINDOW_CACHE[key] = fn
+        _BATCHED_WINDOW_CACHE.put(key, fn)
     return fn
 
 
 def factorize_window_batched(batch, impl: Optional[str] = None,
                              tree_chunks: int = 8,
-                             bucket: bool = True) -> CholeskyFactor:
+                             bucket: bool = True,
+                             sweep: str = "auto") -> CholeskyFactor:
     """Factorize a batch of same-grid matrices in one vmapped dispatch.
 
     ``batch`` is either a list of :class:`BandedCTSF` or one whose arrays
     carry a leading batch axis (cf. ``concurrent.stack_ctsf``).  This is the
     INLA θ-sweep primitive: every hyperparameter candidate's arrowhead
     matrix rides the same ring sweep + corner Schur, so a sweep of B
-    candidates costs one kernel launch sequence instead of B.
+    candidates costs one kernel launch sequence instead of B — and on the
+    Pallas backend the whole band+arrow factorization of every candidate
+    is one fused launch (``sweep`` as in :func:`factorize_window`).
 
     With ``bucket=True`` the batch is padded (by repeating the last matrix)
     to the next power of two before dispatch and the padding results are
     dropped — bounding XLA compiles per grid at log2(max batch) instead of
     one per distinct sweep size.  The vmapped callable itself is cached per
-    (grid, impl, tree_chunks), so factorizing a new batch of a known shape
-    costs zero retracing.
+    (grid, impl, tree_chunks, sweep), so factorizing a new batch of a known
+    shape costs zero retracing.
     """
     if isinstance(batch, (list, tuple)):
         grid = batch[0].grid
@@ -403,6 +391,7 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
         grid = batch.grid
         Dr, R, C = batch.Dr, batch.R, batch.C
         assert Dr.ndim == 5, "batched CTSF needs a leading batch axis"
-    dr, r, c = _bucketed_batched_call(
-        _batched_window_fn(grid, impl, tree_chunks), (Dr, R, C), bucket)
+    dr, r, c = bucketed_batched_call(
+        _batched_window_fn(grid, impl, tree_chunks, sweep), (Dr, R, C),
+        bucket)
     return CholeskyFactor(BandedCTSF(grid, dr, r, c))

@@ -33,7 +33,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.sharding.collectives import tree_allreduce
 from .cholesky import (CholeskyFactor, _band_arrow_sweep_ring,
-                       _corner_dense_cholesky, _corner_schur)
+                       _corner_dense_cholesky)
 from .ctsf import BandedCTSF
 from .structure import ArrowheadStructure, TileGrid
 
@@ -97,11 +97,14 @@ def distributed_factorize(pm: PartitionedCTSF, mesh: Mesh, axis: str = "model",
                          f"{axis}={axis_size}")
 
     def local(dr, r, c):
-        # dr: (parts_per_dev, ndt_p, bt+1, t, t) — sweep each local partition
-        sweep = jax.vmap(lambda d, rr: _band_arrow_sweep_ring(d, rr, grid, impl))
-        dr_l, r_l = sweep(dr, r)
+        # dr: (parts_per_dev, ndt_p, bt+1, t, t) — sweep each local partition;
+        # the sweep emits its own corner-Schur chunks (accumulated in-kernel
+        # on the Pallas backend), so no re-contraction of r_l from HBM here
+        sweep = jax.vmap(lambda d, rr: _band_arrow_sweep_ring(
+            d, rr, grid, impl, tree_chunks))
+        dr_l, r_l, sch = sweep(dr, r)
         if nat:
-            partial = jax.vmap(lambda rr: _corner_schur(rr, tree_chunks))(r_l).sum(0)
+            partial = sch.sum(axis=(0, 1))             # parts x chunks
             schur = tree_allreduce(partial, axis)      # GEADD tree on ICI
             c_l = _corner_dense_cholesky(c - schur, impl)
         else:

@@ -30,13 +30,17 @@ For the banded-arrowhead layout, ``L_kj != 0`` only for band rows
 ``k = j+1 .. j+b`` and arrow rows, so the sum touches Σ tiles with tile
 offset ``<= b`` plus arrow/corner tiles: the recurrence *closes* on the
 factor's own sparsity pattern and the computed entries are exact entries of
-the dense A^{-1}.  The sweep is the mirror image of the factorization's ring
-sweep: a ``lax.scan`` walks columns ``j = ndt-1 .. 0`` carrying a
+the dense A^{-1}.  The whole backward recurrence is one sweep-level
+primitive (``kernels.ops.selinv_sweep``), the mirror image of the
+factorization sweep: columns ``j = ndt-1 .. 0`` walk with a
 ``(b, b+1, t, t)`` ring of the last b computed Σ columns (plus the arrow
-ring), each step one ``kernels.ops.selinv_step`` block-row x block-column
-contraction of dense (t, t) MXU matmuls.  The trailing corner seeds the
-recurrence: the last block columns see no later columns, hence
-``Σ_corner = L_c^{-T} L_c^{-1}`` — one small dense triangular solve.
+ring).  On the Pallas backend the *entire* recurrence is a single fused
+kernel launch with the Σ-column ring resident in VMEM across columns
+(``kernels/selinv.py``); on the jnp backend it is a ``lax.scan`` of
+``kernels.ops.selinv_step`` block-row x block-column contractions.  The
+trailing corner seeds the recurrence: the last block columns see no later
+columns, hence ``Σ_corner = L_c^{-T} L_c^{-1}`` — one small dense
+triangular solve.
 
 Cost: O(ndt · (b + nat)²) tile matmuls — same order as the factorization
 itself and independent of the number of selected entries, versus
@@ -46,14 +50,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from .cholesky import CholeskyFactor, _bucketed_batched_call
+from repro.kernels.ring import band_col_to_row, band_row_to_col
+from .batching import LRUCache, bucketed_batched_call
+from .cholesky import CholeskyFactor
 from .ctsf import BandedCTSF
 from .structure import TileGrid
 
@@ -155,7 +161,6 @@ def _selinv_impl(Dr, R, C, grid, impl=None):
     row-band / arrow-row / lower-corner layout of :class:`SelectedInverse`."""
     t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
     b1 = bt + 1
-    eye = jnp.eye(t, dtype=Dr.dtype)
 
     # --- corner seed: Σ_cc = L_c^{-T} L_c^{-1} (dense, small) --------------
     if nat:
@@ -173,71 +178,12 @@ def _selinv_impl(Dr, R, C, grid, impl=None):
         sr = jnp.zeros((0, nat, t, t), Dr.dtype)
         return sd, sr, _tril_tiles(sc_full, nat)
 
-    # column view of the factor: lcol[j, d] = L_tile[j+d, j] = Dr[j+d, d]
-    drp = jnp.pad(Dr, ((0, bt), (0, 0), (0, 0), (0, 0)))
-    jj, dd = jnp.meshgrid(jnp.arange(ndt), jnp.arange(b1), indexing="ij")
-    lcol = drp[jj + dd, dd]                               # (ndt, b1, t, t)
-
-    e_i = jnp.arange(1, bt + 1)[:, None]
-    d_i = jnp.arange(1, bt + 1)[None, :]
-
-    def body(carry, xs):
-        # ring[s, e'] = Σ_{(j+1+s)+e', j+1+s}; ring_a[s, i] = Σ_{ndt+i, j+1+s}
-        ring, ring_a = carry
-        lc, rc = xs                                       # (b1,t,t), (nat,t,t)
-        ljj = lc[0]
-        winv = ops.solve_panel(ljj, eye, impl=impl)       # L_jj^{-1}
-        s0 = jnp.dot(winv.T, winv, precision=_HI)         # (L_jj L_jj^T)^{-1}
-        # normalized column: G_d = L_{j+d,j} L_jj^{-1}; arrow Ga_i = R[j,i] L_jj^{-1}
-        g = jnp.einsum("dab,bc->dac", lc[1:], winv, precision=_HI)
-        ga = jnp.einsum("iab,bc->iac", rc, winv, precision=_HI) if nat \
-            else rc
-        gcat = jnp.concatenate([g, ga], axis=0)           # (bt+nat, t, t)
-
-        # Σ block row visible from column j, rows (j+1..j+bt, arrow):
-        #   band e, band d:  e>=d -> ring[d-1, e-d]; e<d -> ring[e-1, d-e]^T
-        #   band e, arrow i: ring_a[e-1, i]^T
-        #   arrow i, band d: ring_a[d-1, i];  arrow i, arrow i': Σ_cc[i, i']
-        if bt:
-            lower = ring[d_i - 1, jnp.clip(e_i - d_i, 0, bt)]
-            upper = jnp.swapaxes(ring[e_i - 1, jnp.clip(d_i - e_i, 0, bt)],
-                                 -1, -2)
-            swin = jnp.where((e_i >= d_i)[:, :, None, None], lower, upper)
-            row_band = jnp.concatenate(
-                [swin, jnp.swapaxes(ring_a, -1, -2)], axis=1) if nat else swin
-        else:
-            row_band = jnp.zeros((0, bt + nat, t, t), Dr.dtype)
-        if nat:
-            row_arr = jnp.concatenate(
-                [ring_a.transpose(1, 0, 2, 3), sc_full], axis=1)
-            srow = jnp.concatenate([row_band, row_arr], axis=0)
-        else:
-            srow = row_band
-
-        off = -ops.selinv_step(srow, gcat, impl=impl)     # (bt+nat, t, t)
-        # diagonal: Σ_jj = s0 - Σ_{k>j} Σ_kj^T G_kj  (off = the fresh Σ_kj)
-        corr = jnp.einsum("kba,kbc->ac", off, gcat, precision=_HI)
-        sjj = s0 - corr
-        sjj = 0.5 * (sjj + sjj.T)
-        panel = jnp.concatenate([sjj[None], off[:bt]], axis=0)   # (b1, t, t)
-        acol = off[bt:]                                          # (nat, t, t)
-        if bt:
-            ring = jnp.concatenate([panel[None], ring[:-1]], axis=0)
-            if nat:
-                ring_a = jnp.concatenate([acol[None], ring_a[:-1]], axis=0)
-        return (ring, ring_a), (panel, acol)
-
-    ring0 = jnp.zeros((bt, b1, t, t), Dr.dtype)
-    ring_a0 = jnp.zeros((bt, nat, t, t), Dr.dtype)
-    xs = (jnp.flip(lcol, 0), jnp.flip(R, 0))
-    _, (panels_rev, acols_rev) = jax.lax.scan(body, (ring0, ring_a0), xs)
-    panels = jnp.flip(panels_rev, 0)                      # panels[j, e] = Σ_{j+e, j}
-    sr = jnp.flip(acols_rev, 0)                           # sr[j, i] = Σ_{ndt+i, j}
-
-    # back to row-band layout: Sd[m, d] = Σ_{m, m-d} = panels[m-d, d]
-    mm, d2 = jnp.meshgrid(jnp.arange(ndt), jnp.arange(b1), indexing="ij")
-    sd = jnp.where(((mm - d2) >= 0)[:, :, None, None],
-                   panels[jnp.clip(mm - d2, 0, ndt - 1), d2], 0.0)
+    # whole backward recurrence as one sweep primitive: the fused Pallas
+    # kernel (impl="pallas") or the per-column selinv_step scan ("ref")
+    lcol = band_row_to_col(Dr)       # lcol[j, d] = L_tile[j+d, j]
+    panels, sr = ops.selinv_sweep(lcol, R, sc_full, impl=impl)
+    # panels[j, e] = Σ_{j+e, j}; sr[j, i] = Σ_{ndt+i, j}
+    sd = band_col_to_row(panels)     # Sd[m, d] = Σ_{m, m-d}
     return sd, sr, _tril_tiles(sc_full, nat)
 
 
@@ -265,7 +211,9 @@ def selected_inverse(factor: CholeskyFactor,
 # Batched serving path (INLA θ-sweep posterior marginals)
 # ---------------------------------------------------------------------------
 
-_BATCHED_SELINV_CACHE: Dict[Tuple, object] = {}
+# bounded traced-callable cache (core/batching.py), mirroring
+# cholesky._BATCHED_WINDOW_CACHE
+_BATCHED_SELINV_CACHE = LRUCache(maxsize=64)
 
 
 def _batched_selinv_fn(grid, impl):
@@ -277,7 +225,7 @@ def _batched_selinv_fn(grid, impl):
     if fn is None:
         fn = jax.jit(jax.vmap(
             lambda dr, r, c: _selinv_impl(dr, r, c, grid, impl)))
-        _BATCHED_SELINV_CACHE[key] = fn
+        _BATCHED_SELINV_CACHE.put(key, fn)
     return fn
 
 
@@ -303,7 +251,7 @@ def selinv_batched(factor: CholeskyFactor, impl: Optional[str] = None,
     """
     ctsf = factor.ctsf
     assert ctsf.Dr.ndim == 5, "selinv_batched needs a leading batch axis"
-    sd, sr, sc = _bucketed_batched_call(
+    sd, sr, sc = bucketed_batched_call(
         _batched_selinv_fn(ctsf.grid, impl), (ctsf.Dr, ctsf.R, ctsf.C),
         bucket)
     return SelectedInverse(ctsf.grid, sd, sr, sc)

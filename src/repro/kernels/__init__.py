@@ -1,7 +1,10 @@
 """Pallas TPU kernels for the sTiles hot spots: tile primitives (POTRF/
 TRSM/SYRK/GEMM/GEADD/solve_panel, the Takahashi selected-inversion step),
-the fused band-panel update, and the fused whole-band solve sweeps
-(band_solve.py), with pure-jnp oracles in ref.py."""
+the fused band-panel update, and the fused single-launch sweeps — whole-band
+solves (band_solve.py), the entire band+arrow Cholesky factorization
+(band_cholesky.py) and the whole Takahashi selinv recurrence (selinv.py) —
+sharing the VMEM-ring machinery in ring.py, with pure-jnp oracles in
+ref.py."""
 from . import ops, ref
 
 __all__ = ["ops", "ref"]

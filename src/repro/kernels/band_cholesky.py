@@ -1,0 +1,175 @@
+"""Pallas TPU kernel: the entire banded-arrowhead Cholesky in one launch.
+
+After the solve sweeps were fused (``band_solve.py``), the factorization
+itself was the last per-panel dispatcher: the ring sweep in
+``core/cholesky.py`` ran one ``potrf`` + ``trsm`` + ``band_update`` launch
+per band panel through a ``lax.scan``, round-tripping the (bt+1, t, t)
+panel ring and the arrow ring through HBM on every step.  This kernel is
+the factorization analogue of the fused solves — the whole band + arrow
+factorization as one sequential-grid launch, in the spirit of tiled
+Cholesky's "keep the active window resident" insight (Buttari et al.) and
+the paper's left-looking accumulator reading of GEMM chains (§II):
+
+* grid = (ndt,) — one sequential step per band *column* panel k; the TPU
+  grid iteration order carries the factorization's critical path;
+* a VMEM ring of the last ``bt`` finalized column panels plus an
+  arrow-row ring (``kernels/ring.py``, shared with the solve and selinv
+  sweeps) feeds the left-looking update
+
+      U[e] = sum_{j=1..bt} L[k+e, k-j] @ L[k, k-j]^T
+
+  entirely from VMEM — the ``band_update`` contraction with no HBM reads;
+* the diagonal tile factorizes in-kernel (:func:`potrf.factorize_tile`,
+  shared with the single-tile POTRF kernel) and the whole sub-diagonal
+  panel + arrow rows substitute in one batched
+  :func:`trsm.substitute_right` call (shared with the TRSM kernel);
+* the corner Schur complement rides the sweep: partial sums
+  ``sum_k L_a[k] L_a[k]^T`` accumulate in a VMEM scratch and emit once
+  per chunk, so the corner factorization reads a precomputed
+  (nchunks, nat, nat, t, t) buffer instead of re-contracting the whole
+  arrow block from HBM (and the chunked layout preserves the paper's
+  Alg. 3 tree-reduction association).
+
+VMEM budget per step: the panel ring bt·(bt+1)·t², the arrow ring
+bt·nat·t², the Schur accumulator nat²·t² and the (bt+1+nat)·t² in/out
+blocks — e.g. bt=8, t=128, nat=2: ~6.1 MB, under the ~16 MB/core of v5e.
+
+Matches ``ref.band_cholesky_sweep_ref`` (the lax.scan oracle) to fp32
+tolerance; ``kernels.ops.band_cholesky_sweep`` dispatches between them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .potrf import factorize_tile
+from .ring import chunk_layout, ring_read, ring_write
+from .trsm import substitute_right
+
+__all__ = ["band_cholesky_sweep_pallas"]
+
+
+def _band_cholesky_kernel(ac_ref, r_ref, p_ref, ro_ref, sch_ref,
+                          ring_ref, ringa_ref, sacc_ref,
+                          *, bt: int, nat_p: int, csz: int):
+    k = pl.program_id(0)
+    t = ac_ref.shape[-1]
+
+    @pl.when(k == 0)
+    def _init():
+        ring_ref[...] = jnp.zeros_like(ring_ref)
+        ringa_ref[...] = jnp.zeros_like(ringa_ref)
+
+    @pl.when(jax.lax.rem(k, csz) == 0)
+    def _chunk_init():
+        sacc_ref[...] = jnp.zeros_like(sacc_ref)
+
+    # The last bt finalized column panels from the VMEM rings (zeros for
+    # k-j < 0 from the step-0 init).  bt is small and static, so the j/e
+    # loops unroll — every pair is one MXU matmul with no gather/masking.
+    prev = [ring_read(ring_ref, k - j, bt) for j in range(1, bt + 1)]
+    preva = [ring_read(ringa_ref, k - j, bt) for j in range(1, bt + 1)]
+    # rhs_j = L[k, k-j] = panel_{k-j}[j]
+    rhs = [prev[j - 1][j] for j in range(1, bt + 1)]
+
+    # left-looking band update: U[e] = sum_j L[k+e, k-j] @ L[k, k-j]^T
+    # (e = 0 is the SYRK chain, e > 0 the GEMM chains; e+j > bt pairs are
+    # structurally outside the band)
+    u = []
+    for e in range(bt + 1):
+        acc = jnp.zeros((t, t), jnp.float32)
+        for j in range(1, bt + 1 - e):
+            acc = acc + jax.lax.dot_general(
+                prev[j - 1][e + j], rhs[j - 1], (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        u.append(acc)
+
+    # arrow-row update: V[i] = sum_j L[ndt+i, k-j] @ L[k, k-j]^T
+    va = jnp.zeros((nat_p, t, t), jnp.float32)
+    for j in range(1, bt + 1):
+        va = va + jax.lax.dot_general(
+            preva[j - 1], rhs[j - 1], (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # diagonal tile, then the whole sub-diagonal panel + arrow rows in one
+    # batched right-substitution against the fresh L_kk
+    lkk = factorize_tile(ac_ref[0, 0].astype(jnp.float32) - u[0])
+    band_rhs = [ac_ref[0, e].astype(jnp.float32) - u[e]
+                for e in range(1, bt + 1)]
+    arrow_rhs = r_ref[0].astype(jnp.float32) - va
+    stack = jnp.concatenate([jnp.stack(band_rhs), arrow_rhs], axis=0) \
+        if bt else arrow_rhs
+    sol = substitute_right(lkk, stack)                    # (bt+nat_p, t, t)
+    panel = jnp.concatenate([lkk[None], sol[:bt]], axis=0)
+    la = sol[bt:]
+
+    if bt:
+        ring_write(ring_ref, k, bt, panel)
+        ring_write(ringa_ref, k, bt, la)
+
+    # corner-Schur partial sums on the fly: sacc[i, j] += La[i] @ La[j]^T
+    ss = jax.lax.dot_general(la, la, (((2,), (2,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    sacc_ref[...] += jnp.transpose(ss, (0, 2, 1, 3))
+    sch_ref[0] = sacc_ref[...].astype(sch_ref.dtype)
+
+    p_ref[0] = panel.astype(p_ref.dtype)
+    ro_ref[0] = la.astype(ro_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nchunks", "interpret"))
+def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1,
+                               interpret: bool = True):
+    """Fused band+arrow Cholesky sweep.  Ac: (ndt, bt+1, t, t) column-band
+    tiles (``Ac[k, e] = A[k+e, k]``, see ``ring.band_row_to_col``), R:
+    (ndt, nat, t, t) arrow rows ->
+
+      panels (ndt, bt+1, t, t)      column panels of L: panels[k, e] = L[k+e, k]
+      R_out  (ndt, nat, t, t)       factored arrow rows L[ndt+i, k]
+      schur  (nch, nat, nat, t, t)  per-chunk partial sums of R_out·R_outᵀ
+                                    (``nch = chunk_layout(ndt, nchunks)[1]``)
+
+    Matches ``ref.band_cholesky_sweep_ref`` to fp32 tolerance.
+    """
+    ndt, b1, t, _ = Ac.shape
+    bt = b1 - 1
+    nat = R.shape[1]
+    csz, nch = chunk_layout(ndt, nchunks)
+    if ndt == 0:
+        return (jnp.zeros((0, b1, t, t), Ac.dtype),
+                jnp.zeros((0, nat, t, t), Ac.dtype),
+                jnp.zeros((nch, nat, nat, t, t), Ac.dtype))
+    # zero-width arrow blocks break BlockSpecs: pad to one all-zero arrow
+    # tile row (its factor and Schur terms vanish) and slice the output back.
+    nat_p = max(nat, 1)
+    rp = R if nat else jnp.zeros((ndt, 1, t, t), Ac.dtype)
+    panels, ro, schur = pl.pallas_call(
+        functools.partial(_band_cholesky_kernel, bt=bt, nat_p=nat_p, csz=csz),
+        grid=(ndt,),
+        in_specs=[
+            pl.BlockSpec((1, b1, t, t), lambda k: (k, 0, 0, 0)),
+            pl.BlockSpec((1, nat_p, t, t), lambda k: (k, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b1, t, t), lambda k: (k, 0, 0, 0)),
+            pl.BlockSpec((1, nat_p, t, t), lambda k: (k, 0, 0, 0)),
+            pl.BlockSpec((1, nat_p, nat_p, t, t),
+                         lambda k: (k // csz, 0, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ndt, b1, t, t), Ac.dtype),
+            jax.ShapeDtypeStruct((ndt, nat_p, t, t), Ac.dtype),
+            jax.ShapeDtypeStruct((nch, nat_p, nat_p, t, t), Ac.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((max(bt, 1), b1, t, t), jnp.float32),
+            pltpu.VMEM((max(bt, 1), nat_p, t, t), jnp.float32),
+            pltpu.VMEM((nat_p, nat_p, t, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Ac, rp)
+    return panels, ro[:, :nat], schur[:, :nat, :nat]

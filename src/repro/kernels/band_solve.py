@@ -12,8 +12,8 @@ execute an *entire* band sweep in one launch, the solve-phase analogue of
 * grid = (ndt,) — one sequential grid step per band tile row; TPU grid
   iteration order makes the recurrence dependence explicit and legal;
 * a ring of the last ``bt`` solved (t, k) panels lives in VMEM scratch
-  (:func:`ring_read` / :func:`ring_write` — the same ring discipline the
-  selinv backward sweep will reuse), so the ``L[m, m-j] @ Y_{m-j}``
+  (``kernels/ring.py`` — the ring discipline shared with the fused
+  band-Cholesky and selinv sweeps), so the ``L[m, m-j] @ Y_{m-j}``
   (t, t) @ (t, k) MXU accumulations never touch HBM;
 * the per-tile triangular solve is :func:`kernels.trsm.substitute_panel`,
   shared with the ``solve_panel`` kernel;
@@ -38,28 +38,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .ring import band_row_to_col, ring_accumulate, ring_read, ring_write
 from .trsm import substitute_panel
 
+# ring_read/ring_write are re-exported for backward compatibility; the
+# canonical home of the ring machinery is kernels/ring.py.
 __all__ = ["band_forward_sweep_pallas", "band_backward_sweep_pallas",
            "ring_read", "ring_write"]
-
-
-# ---------------------------------------------------------------------------
-# Ring-scratch helpers (shared discipline for sequential-sweep kernels)
-# ---------------------------------------------------------------------------
-
-def ring_read(ring_ref, row, depth: int):
-    """Read the panel for absolute row index ``row`` from a depth-``depth``
-    VMEM ring.  Valid for ``row >= -depth`` (the modular shift keeps the
-    slot index nonnegative); slots for rows the sweep has not visited hold
-    the zero panels written by the ``step == 0`` initialization."""
-    return ring_ref[jax.lax.rem(row + depth, depth)]
-
-
-def ring_write(ring_ref, row, depth: int, panel):
-    """Store ``panel`` as absolute row ``row`` in the ring, overwriting the
-    entry ``depth`` rows back (which no later step can need)."""
-    ring_ref[jax.lax.rem(row + depth, depth)] = panel
 
 
 # ---------------------------------------------------------------------------
@@ -92,16 +77,13 @@ def _band_forward_kernel(start_ref, dr_ref, r_ref, b_ref, y_ref, acca_ref,
         # acc = sum_{j=1..bt} L[m, m-j] @ Y_{m-j}; Dr[m, j] = L[m, m-j] is
         # structurally zero for j > m and ring slots for unvisited rows hold
         # zeros, so no masking is needed beyond the zero-init.
-        acc = jnp.zeros((t, k), jnp.float32)
-        if bt:
-            def jstep(j, acc):
-                a = dr_ref[0, j].astype(jnp.float32)
-                yprev = ring_read(ring_ref, m - j, bt)
-                return acc + jax.lax.dot_general(
-                    a, yprev, (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.float32)
-
-            acc = jax.lax.fori_loop(1, bt + 1, jstep, acc)
+        acc = ring_accumulate(
+            ring_ref, m, bt, jnp.zeros((t, k), jnp.float32),
+            lambda j, yprev: jax.lax.dot_general(
+                dr_ref[0, j].astype(jnp.float32), yprev,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32),
+            step=-1)
 
         rhs = b_ref[0].astype(jnp.float32) - acc
         ym = substitute_panel(dr_ref[0, 0].astype(jnp.float32), rhs)
@@ -182,16 +164,12 @@ def _band_backward_kernel(lcol_ref, r_ref, y_ref, xa_ref, x_ref, ring_ref,
 
     # acc = sum_{j=1..bt} L[m+j, m]^T @ X_{m+j}; lcol[m, j] = L[m+j, m] is
     # zero-padded past ndt and unvisited ring slots hold zeros.
-    acc = jnp.zeros((t, k), jnp.float32)
-    if bt:
-        def jstep(j, acc):
-            lt = lcol_ref[0, j].astype(jnp.float32)
-            xnext = ring_read(ring_ref, m + j, bt)
-            return acc + jax.lax.dot_general(
-                lt, xnext, (((0,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-
-        acc = jax.lax.fori_loop(1, bt + 1, jstep, acc)
+    acc = ring_accumulate(
+        ring_ref, m, bt, jnp.zeros((t, k), jnp.float32),
+        lambda j, xnext: jax.lax.dot_general(
+            lcol_ref[0, j].astype(jnp.float32), xnext,
+            (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32),
+        step=1)
 
     # arrow term: sum_i R[m, i]^T @ Xa_i (contract arrow tile + row dims)
     r = r_ref[0].astype(jnp.float32)                     # (nat_p, t, t)
@@ -222,9 +200,7 @@ def band_backward_sweep_pallas(Dr, R, yd, xa, interpret: bool = True):
         return jnp.zeros((ndt, t, k), yd.dtype)
     # column view of the factor: lcol[m, j] = Dr[m+j, j] = L[m+j, m]
     # (cheap O(ndt·bt·t²) gather; the contraction is O(ndt·bt·t²·k))
-    drp = jnp.pad(Dr, ((0, bt), (0, 0), (0, 0), (0, 0)))
-    mm, jj = jnp.meshgrid(jnp.arange(ndt), jnp.arange(b1), indexing="ij")
-    lcol = drp[mm + jj, jj]
+    lcol = band_row_to_col(Dr)
     nat_p = max(nat, 1)
     rp = R if nat else jnp.zeros((ndt, 1, t, t), Dr.dtype)
     xap = xa if nat else jnp.zeros((1, t, k), yd.dtype)

@@ -19,19 +19,29 @@ from .potrf import potrf_pallas
 from .trsm import solve_panel_pallas, trsm_pallas
 from .gemm import gemm_pallas, syrk_pallas, geadd_pallas
 from .band_update import band_update_pallas
+from .band_cholesky import band_cholesky_sweep_pallas
 from .band_solve import band_backward_sweep_pallas, band_forward_sweep_pallas
-from .selinv import selinv_step_pallas
+from .selinv import selinv_step_pallas, selinv_sweep_pallas
 
 __all__ = ["potrf", "trsm", "solve_panel", "syrk", "gemm", "geadd",
            "band_update", "selinv_step", "band_forward_sweep",
-           "band_backward_sweep", "default_impl"]
+           "band_backward_sweep", "band_cholesky_sweep", "selinv_sweep",
+           "default_impl"]
 
 Impl = Literal["ref", "pallas", "unrolled"]
+
+_VALID_IMPLS = ("ref", "pallas", "unrolled")
 
 
 def default_impl() -> Impl:
     env = os.environ.get("REPRO_KERNEL_IMPL")
-    if env in ("ref", "pallas", "unrolled"):
+    if env is not None:
+        if env not in _VALID_IMPLS:
+            raise ValueError(
+                f"REPRO_KERNEL_IMPL={env!r} is not a valid kernel backend; "
+                f"expected one of {list(_VALID_IMPLS)} (unset the variable "
+                "to let the per-backend default apply: pallas on TPU, ref "
+                "elsewhere)")
         return env  # type: ignore[return-value]
     # Pallas natively on TPU; jnp-fused path on CPU (interpret mode is for
     # validation, not production CPU perf).
@@ -130,6 +140,44 @@ def band_backward_sweep(Dr: jnp.ndarray, R: jnp.ndarray, yd: jnp.ndarray,
     if impl == "pallas":
         return band_backward_sweep_pallas(Dr, R, yd, xa, interpret=_interp())
     return ref.band_backward_sweep_ref(Dr, R, yd, xa)
+
+
+def band_cholesky_sweep(Ac: jnp.ndarray, R: jnp.ndarray, nchunks: int = 1,
+                        impl: Impl | None = None):
+    """Whole band+arrow Cholesky factorization as one sweep-level primitive:
+    ``Ac (ndt, bt+1, t, t)`` column-band tiles and ``R (ndt, nat, t, t)``
+    arrow rows -> ``(panels, R_out, schur)`` column panels of L, factored
+    arrow rows, and per-chunk corner-Schur partial sums (``nchunks`` chunks
+    — the tree-reduction leaves for the corner factorization).
+
+    ``"pallas"`` runs one fused kernel for the entire factorization (VMEM
+    ring of the last band_tiles panels + arrow ring, in-kernel potrf/trsm,
+    Schur accumulated on the fly); ``"ref"`` the ring-buffer ``lax.scan``
+    that dispatches per-panel tile ops.  This is what
+    ``core.cholesky._factorize_window_impl`` rides on every backend."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return band_cholesky_sweep_pallas(Ac, R, nchunks=nchunks,
+                                          interpret=_interp())
+    return ref.band_cholesky_sweep_ref(Ac, R, nchunks=nchunks)
+
+
+def selinv_sweep(lcol: jnp.ndarray, R: jnp.ndarray, sc_full: jnp.ndarray,
+                 impl: Impl | None = None):
+    """Whole backward Takahashi recurrence as one sweep-level primitive:
+    ``lcol (ndt, bt+1, t, t)`` column view of the factor, ``R`` its arrow
+    rows and ``sc_full (nat, nat, t, t)`` the dense corner Σ seed ->
+    ``(panels, acols)`` Σ column panels and arrow entries.
+
+    ``"pallas"`` runs one fused kernel for the whole recurrence (Σ-column
+    ring resident in VMEM across columns — the ROADMAP's selinv-fusion
+    item); ``"ref"`` the per-column ``lax.scan`` of ``selinv_step``
+    contractions.  Backs ``core.selinv.selected_inverse`` on every
+    backend."""
+    impl = impl or default_impl()
+    if impl == "pallas":
+        return selinv_sweep_pallas(lcol, R, sc_full, interpret=_interp())
+    return ref.selinv_sweep_ref(lcol, R, sc_full)
 
 
 def band_update(w: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:

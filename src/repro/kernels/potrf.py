@@ -17,12 +17,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["potrf_pallas"]
+__all__ = ["potrf_pallas", "factorize_tile"]
 
 
-def _potrf_kernel(a_ref, o_ref):
-    t = a_ref.shape[-1]
-    a = a_ref[0].astype(jnp.float32)
+def factorize_tile(a: jnp.ndarray) -> jnp.ndarray:
+    """In-kernel dense Cholesky of one (t, t) SPD tile via a masked
+    right-looking column loop (only masked vector ops — no dynamic
+    scatters — so it lowers inside a Pallas kernel body).  Shared by
+    :func:`potrf_pallas` and the fused band-Cholesky sweep in
+    ``kernels/band_cholesky.py``.  Operates in and returns float32."""
+    t = a.shape[-1]
     rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
     rvec = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
@@ -42,7 +46,11 @@ def _potrf_kernel(a_ref, o_ref):
         return a
 
     a = jax.lax.fori_loop(0, t, step, a)
-    o_ref[0] = jnp.where(rows >= cols, a, 0.0).astype(o_ref.dtype)
+    return jnp.where(rows >= cols, a, 0.0)
+
+
+def _potrf_kernel(a_ref, o_ref):
+    o_ref[0] = factorize_tile(a_ref[0].astype(jnp.float32)).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 __all__ = ["potrf_ref", "trsm_ref", "solve_panel_ref", "syrk_ref",
            "gemm_ref", "geadd_ref", "band_update_ref", "selinv_step_ref",
-           "band_forward_sweep_ref", "band_backward_sweep_ref"]
+           "band_forward_sweep_ref", "band_backward_sweep_ref",
+           "band_cholesky_sweep_ref", "selinv_sweep_ref"]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -151,6 +152,161 @@ def band_backward_sweep_ref(Dr: jnp.ndarray, R: jnp.ndarray, yd: jnp.ndarray,
 
     xp = jax.lax.fori_loop(0, ndt, step, xp) if ndt else xp
     return xp[:ndt]
+
+
+def band_cholesky_sweep_ref(Ac: jnp.ndarray, R: jnp.ndarray,
+                            nchunks: int = 1):
+    """Whole band+arrow Cholesky sweep: the ring-buffer ``lax.scan``
+    (originally ``core/cholesky.py``'s ring sweep) — the per-panel-looped
+    semantics the fused Pallas sweep must match.
+
+    Input:  Ac (ndt, bt+1, t, t) column-band tiles, Ac[k, e] = A[k+e, k]
+            R  (ndt, nat, t, t)  arrow rows, R[k, i] = A[ndt+i, k]
+    Output: panels (ndt, bt+1, t, t)      column panels of L
+            R_out  (ndt, nat, t, t)       factored arrow rows
+            schur  (nch, nat, nat, t, t)  per-chunk sums of R_out·R_outᵀ
+                   (``nch = ring.chunk_layout(ndt, nchunks)[1]`` — the
+                   tree-reduction leaves of the corner Schur complement)
+
+    Panel k only ever reads the last bt panels' outputs, so the scan
+    carries a (bt, bt+1, t, t) ring of recent panels (plus the arrow
+    ring): an O(b²·t²) working set, no scatters.
+    """
+    from .ring import chunk_layout
+
+    ndt, b1, t, _ = Ac.shape
+    bt = b1 - 1
+    nat = R.shape[1]
+
+    # shifted-gather indices for the ring contraction: for ring slot j-1
+    # (panel k-j) pair (offset e+j with offset j)
+    jj = jnp.arange(1, bt + 1)                            # (bt,)
+    e_idx = jnp.arange(b1)
+    src = jnp.clip(e_idx[None, :] + jj[:, None], 0, max(bt, 0))
+    valid = (e_idx[None, :] + jj[:, None]) <= bt
+
+    def trsm_batched(lkk, a):
+        return jax.vmap(lambda x: trsm_ref(lkk, x))(a)
+
+    def body(carry, xs):
+        ring, ring_a = carry                              # (bt,b1,t,t), (bt,nat,t,t)
+        a_col, r_col = xs                                 # (b1,t,t), (nat,t,t)
+        if bt:
+            shifted = jnp.take_along_axis(
+                ring, src[:, :, None, None], axis=1)      # (bt,b1,t,t)
+            shifted = jnp.where(valid[:, :, None, None], shifted, 0.0)
+            rhs = ring[jnp.arange(bt), jj]                # (bt,t,t) = P_{k-j}[j]
+            u = jnp.einsum("jeab,jcb->eac", shifted, rhs, precision=_HI)
+        else:
+            u = jnp.zeros_like(a_col)
+        lkk = potrf_ref(a_col[0] - u[0])
+        lmk = trsm_batched(lkk, a_col[1:] - u[1:]) if bt else a_col[1:]
+        panel = jnp.concatenate([lkk[None], lmk], axis=0)
+        if nat:
+            v = jnp.einsum("jiab,jcb->iac", ring_a, rhs, precision=_HI) \
+                if bt else 0.0
+            la = trsm_batched(lkk, r_col - v)
+        else:
+            la = r_col
+        if bt:
+            ring = jnp.concatenate([panel[None], ring[:-1]], axis=0)
+            if nat:
+                ring_a = jnp.concatenate([la[None], ring_a[:-1]], axis=0)
+        return (ring, ring_a), (panel, la)
+
+    ring0 = jnp.zeros((bt, b1, t, t), Ac.dtype)
+    ring_a0 = jnp.zeros((bt, nat, t, t), Ac.dtype)
+    if ndt:
+        _, (panels, R_out) = jax.lax.scan(body, (ring0, ring_a0), (Ac, R))
+    else:
+        panels, R_out = Ac, R
+
+    # per-chunk corner-Schur partial sums (same layout as the fused kernel)
+    csz, nch = chunk_layout(ndt, nchunks)
+    rpad = jnp.pad(R_out, ((0, nch * csz - ndt), (0, 0), (0, 0), (0, 0)))
+    rchunk = rpad.reshape((nch, csz) + R_out.shape[1:])
+    schur = jnp.einsum("nkiab,nkjcb->nijac", rchunk, rchunk, precision=_HI)
+    return panels, R_out, schur
+
+
+def selinv_sweep_ref(lcol: jnp.ndarray, R: jnp.ndarray,
+                     sc_full: jnp.ndarray):
+    """Whole backward Takahashi recurrence: the Σ-column ring ``lax.scan``
+    (originally ``core/selinv.py``'s backward sweep) — the per-column-looped
+    semantics the fused Pallas selinv sweep must match.
+
+    Input:  lcol (ndt, bt+1, t, t) column view of the factor,
+            lcol[j, d] = L[j+d, j] (zero past ndt)
+            R (ndt, nat, t, t) arrow rows, R[j, i] = L[ndt+i, j]
+            sc_full (nat, nat, t, t) full (symmetric) corner Σ seed
+    Output: panels (ndt, bt+1, t, t)  Σ columns: panels[j, e] = Σ[j+e, j]
+            acols  (ndt, nat, t, t)   arrow entries: acols[j, i] = Σ[ndt+i, j]
+
+    Each step contracts the Σ block row visible from column j (band window
+    + arrow rows + corner) against the normalized factor column
+    G_kj = L_kj L_jj^{-1} (one :func:`selinv_step_ref`), walking columns
+    j = ndt-1..0 with a ring of the last bt computed Σ columns.
+    """
+    ndt, b1, t, _ = lcol.shape
+    bt = b1 - 1
+    nat = R.shape[1]
+    eye = jnp.eye(t, dtype=lcol.dtype)
+    e_i = jnp.arange(1, bt + 1)[:, None]
+    d_i = jnp.arange(1, bt + 1)[None, :]
+
+    def body(carry, xs):
+        # ring[s, e'] = Σ_{(j+1+s)+e', j+1+s}; ring_a[s, i] = Σ_{ndt+i, j+1+s}
+        ring, ring_a = carry
+        lc, rc = xs                                       # (b1,t,t), (nat,t,t)
+        ljj = lc[0]
+        winv = solve_panel_ref(ljj, eye)                  # L_jj^{-1}
+        s0 = jnp.dot(winv.T, winv, precision=_HI)         # (L_jj L_jj^T)^{-1}
+        # normalized column: G_d = L_{j+d,j} L_jj^{-1}; arrow Ga_i = R[j,i] L_jj^{-1}
+        g = jnp.einsum("dab,bc->dac", lc[1:], winv, precision=_HI)
+        ga = jnp.einsum("iab,bc->iac", rc, winv, precision=_HI) if nat \
+            else rc
+        gcat = jnp.concatenate([g, ga], axis=0)           # (bt+nat, t, t)
+
+        # Σ block row visible from column j, rows (j+1..j+bt, arrow):
+        #   band e, band d:  e>=d -> ring[d-1, e-d]; e<d -> ring[e-1, d-e]^T
+        #   band e, arrow i: ring_a[e-1, i]^T
+        #   arrow i, band d: ring_a[d-1, i];  arrow i, arrow i': Σ_cc[i, i']
+        if bt:
+            lower = ring[d_i - 1, jnp.clip(e_i - d_i, 0, bt)]
+            upper = jnp.swapaxes(ring[e_i - 1, jnp.clip(d_i - e_i, 0, bt)],
+                                 -1, -2)
+            swin = jnp.where((e_i >= d_i)[:, :, None, None], lower, upper)
+            row_band = jnp.concatenate(
+                [swin, jnp.swapaxes(ring_a, -1, -2)], axis=1) if nat else swin
+        else:
+            row_band = jnp.zeros((0, bt + nat, t, t), lcol.dtype)
+        if nat:
+            row_arr = jnp.concatenate(
+                [ring_a.transpose(1, 0, 2, 3), sc_full], axis=1)
+            srow = jnp.concatenate([row_band, row_arr], axis=0)
+        else:
+            srow = row_band
+
+        off = -selinv_step_ref(srow, gcat)                # (bt+nat, t, t)
+        # diagonal: Σ_jj = s0 - Σ_{k>j} Σ_kj^T G_kj  (off = the fresh Σ_kj)
+        corr = jnp.einsum("kba,kbc->ac", off, gcat, precision=_HI)
+        sjj = s0 - corr
+        sjj = 0.5 * (sjj + sjj.T)
+        panel = jnp.concatenate([sjj[None], off[:bt]], axis=0)   # (b1, t, t)
+        acol = off[bt:]                                          # (nat, t, t)
+        if bt:
+            ring = jnp.concatenate([panel[None], ring[:-1]], axis=0)
+            if nat:
+                ring_a = jnp.concatenate([acol[None], ring_a[:-1]], axis=0)
+        return (ring, ring_a), (panel, acol)
+
+    if ndt == 0:
+        return lcol, R
+    ring0 = jnp.zeros((bt, b1, t, t), lcol.dtype)
+    ring_a0 = jnp.zeros((bt, nat, t, t), lcol.dtype)
+    xs = (jnp.flip(lcol, 0), jnp.flip(R, 0))
+    _, (panels_rev, acols_rev) = jax.lax.scan(body, (ring0, ring_a0), xs)
+    return jnp.flip(panels_rev, 0), jnp.flip(acols_rev, 0)
 
 
 def band_update_unrolled_ref(w: jnp.ndarray) -> jnp.ndarray:

@@ -1,7 +1,8 @@
-"""Pallas TPU kernel: fused Takahashi selected-inversion tile step.
+"""Pallas TPU kernels: Takahashi selected inversion (tile step + fused sweep).
 
-One backward-recurrence step of the blocked Takahashi equations
-(core/selinv.py) computes a whole column of the selected inverse as
+``selinv_step_pallas`` — one backward-recurrence step of the blocked
+Takahashi equations (core/selinv.py) computes a whole column of the
+selected inverse as
 
     u[e] = sum_j  S[e, j] @ G[j]        e = 0..e_n-1
 
@@ -15,6 +16,22 @@ last axis fastest) and emits one HBM write per output tile.
 
 VMEM budget per step: (2·jb + 1)·t²·4B (S-row block, G block, accumulator)
 — e.g. jb=8, t=128: ~1.1 MB, far under the ~16 MB/core of v5e.
+
+``selinv_sweep_pallas`` — the *whole* backward Takahashi recurrence as one
+launch (the ROADMAP's selinv-fusion item): driven column-at-a-time the
+recurrence round-trips its Σ-column ring through HBM between ``lax.scan``
+steps; here grid = (ndt,) walks columns j = ndt-1..0 with the ring of the
+last ``bt`` computed Σ columns (plus the arrow ring) resident in VMEM
+scratch (``kernels/ring.py``, the machinery shared with the band-solve and
+band-Cholesky sweeps), the L_jj^{-1} seed solved in-kernel
+(:func:`trsm.substitute_panel` against the identity) and the full corner
+Σ_cc broadcast to every step.  VMEM budget per step: the Σ ring
+bt·(bt+1)·t², the arrow ring bt·nat·t², the corner nat²·t² and the
+(bt+1+nat)·t² blocks — e.g. bt=8, t=128, nat=2: ~6.1 MB, under the ~16
+MB/core of v5e.
+
+Both match their ``kernels/ref.py`` oracles to fp32 tolerance;
+``kernels.ops.selinv_step`` / ``kernels.ops.selinv_sweep`` dispatch.
 """
 from __future__ import annotations
 
@@ -25,7 +42,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["selinv_step_pallas"]
+from .ring import ring_read, ring_write
+from .trsm import substitute_panel
+
+__all__ = ["selinv_step_pallas", "selinv_sweep_pallas"]
 
 
 def _selinv_step_kernel(s_ref, g_ref, o_ref, acc_ref, *, jb: int, njb: int):
@@ -79,3 +99,139 @@ def selinv_step_pallas(s_row: jnp.ndarray, g_col: jnp.ndarray,
         scratch_shapes=[pltpu.VMEM((t, t), jnp.float32)],
         interpret=interpret,
     )(sp, gp)
+
+
+# ---------------------------------------------------------------------------
+# Fused backward sweep: the whole Takahashi recurrence in one launch
+# ---------------------------------------------------------------------------
+
+def _selinv_sweep_kernel(lcol_ref, r_ref, sc_ref, p_ref, a_ref,
+                         ring_ref, ringa_ref, *, ndt: int, bt: int):
+    s = pl.program_id(0)
+    j = ndt - 1 - s
+    t = lcol_ref.shape[-1]
+
+    @pl.when(s == 0)
+    def _init():
+        ring_ref[...] = jnp.zeros_like(ring_ref)
+        ringa_ref[...] = jnp.zeros_like(ringa_ref)
+
+    lc = lcol_ref[0].astype(jnp.float32)                  # (b1, t, t)
+    rc = r_ref[0].astype(jnp.float32)                     # (nat_p, t, t)
+    sc = sc_ref[...].astype(jnp.float32)                  # (nat_p, nat_p, t, t)
+
+    # seed: winv = L_jj^{-1} (in-kernel substitution against the identity),
+    # s0 = (L_jj L_jj^T)^{-1} = winv^T winv
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    eye = jnp.where(rows == cols, 1.0, 0.0).astype(jnp.float32)
+    winv = substitute_panel(lc[0], eye)
+    s0 = jax.lax.dot_general(winv, winv, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # normalized column: G_d = L_{j+d, j} L_jj^{-1}, arrow Ga_i = R[j,i] winv
+    g = [jax.lax.dot_general(lc[d], winv, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+         for d in range(1, bt + 1)]
+    ga = jax.lax.dot_general(rc, winv, (((2,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # Σ columns j+1..j+bt from the VMEM rings (zeros past ndt-1 / from the
+    # step-0 init); bt is static and small, so the d/e loops unroll.
+    colp = [ring_read(ring_ref, j + d, bt) for d in range(1, bt + 1)]
+    arow = [ring_read(ringa_ref, j + d, bt) for d in range(1, bt + 1)]
+
+    # off-diagonal band targets:  Σ_{j+e, j} = -sum_{k>j} Σ_{j+e, k} G_{k, j}
+    off = []
+    for e in range(1, bt + 1):
+        acc = jnp.zeros((t, t), jnp.float32)
+        for d in range(1, bt + 1):
+            if e >= d:
+                # Σ_{j+e, j+d} lives in column j+d at offset e-d
+                acc = acc + jax.lax.dot_general(
+                    colp[d - 1][e - d], g[d - 1], (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            else:
+                # Σ_{j+e, j+d} = Σ_{j+d, j+e}^T, from column j+e
+                acc = acc + jax.lax.dot_general(
+                    colp[e - 1][d - e], g[d - 1], (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+        # arrow sources: sum_i Σ_{j+e, ndt+i} @ Ga_i = sum_i arow_e[i]^T Ga_i
+        acc = acc + jax.lax.dot_general(
+            arow[e - 1], ga, (((0, 1), (0, 1)), ((), ())),
+            preferred_element_type=jnp.float32)
+        off.append(-acc)
+
+    # arrow targets:  Σ_{ndt+i, j} = -(sum_d Σ_{ndt+i, j+d} G_d
+    #                                  + sum_i' Σ_cc[i, i'] Ga_i')
+    ua = jax.lax.dot_general(sc, ga, (((1, 3), (0, 1)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    for d in range(1, bt + 1):
+        ua = ua + jax.lax.dot_general(
+            arow[d - 1], g[d - 1], (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    acol = -ua
+
+    # diagonal: Σ_jj = s0 - sum_{k>j} Σ_kj^T G_kj (the fresh off-diagonals)
+    corr = jax.lax.dot_general(acol, ga, (((0, 1), (0, 1)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    for e in range(1, bt + 1):
+        corr = corr + jax.lax.dot_general(
+            off[e - 1], g[e - 1], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    sjj = s0 - corr
+    sjj = 0.5 * (sjj + sjj.T)
+
+    panel = jnp.concatenate([sjj[None]] + [o[None] for o in off], axis=0)
+    if bt:
+        ring_write(ring_ref, j, bt, panel)
+        ring_write(ringa_ref, j, bt, acol)
+    p_ref[0] = panel.astype(p_ref.dtype)
+    a_ref[0] = acol.astype(a_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def selinv_sweep_pallas(lcol, R, sc_full, interpret: bool = True):
+    """Fused backward Takahashi sweep.  lcol: (ndt, bt+1, t, t) column view
+    of the factor (``lcol[j, d] = L[j+d, j]``, see ``ring.band_row_to_col``),
+    R: (ndt, nat, t, t) arrow rows of the factor, sc_full: (nat, nat, t, t)
+    full (symmetric) corner Σ seed ->
+
+      panels (ndt, bt+1, t, t)  Σ column panels: panels[j, e] = Σ[j+e, j]
+      acols  (ndt, nat, t, t)   arrow entries:   acols[j, i] = Σ[ndt+i, j]
+
+    Matches ``ref.selinv_sweep_ref`` (the lax.scan oracle) to fp32 tolerance.
+    """
+    ndt, b1, t, _ = lcol.shape
+    bt = b1 - 1
+    nat = R.shape[1]
+    if ndt == 0:
+        return (jnp.zeros((0, b1, t, t), lcol.dtype),
+                jnp.zeros((0, nat, t, t), lcol.dtype))
+    nat_p = max(nat, 1)
+    rp = R if nat else jnp.zeros((ndt, 1, t, t), lcol.dtype)
+    scp = sc_full if nat else jnp.zeros((1, 1, t, t), lcol.dtype)
+    panels, acols = pl.pallas_call(
+        functools.partial(_selinv_sweep_kernel, ndt=ndt, bt=bt),
+        grid=(ndt,),
+        in_specs=[
+            pl.BlockSpec((1, b1, t, t), lambda s: (ndt - 1 - s, 0, 0, 0)),
+            pl.BlockSpec((1, nat_p, t, t), lambda s: (ndt - 1 - s, 0, 0, 0)),
+            pl.BlockSpec((nat_p, nat_p, t, t), lambda s: (0, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b1, t, t), lambda s: (ndt - 1 - s, 0, 0, 0)),
+            pl.BlockSpec((1, nat_p, t, t), lambda s: (ndt - 1 - s, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ndt, b1, t, t), lcol.dtype),
+            jax.ShapeDtypeStruct((ndt, nat_p, t, t), lcol.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((max(bt, 1), b1, t, t), jnp.float32),
+            pltpu.VMEM((max(bt, 1), nat_p, t, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lcol, rp, scp)
+    return panels, acols[:, :nat]
+

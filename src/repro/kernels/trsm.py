@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["trsm_pallas", "solve_panel_pallas", "substitute_panel"]
+__all__ = ["trsm_pallas", "solve_panel_pallas", "substitute_panel",
+           "substitute_right"]
 
 
 def substitute_panel(l: jnp.ndarray, b: jnp.ndarray,
@@ -46,24 +47,34 @@ def substitute_panel(l: jnp.ndarray, b: jnp.ndarray,
     return jax.lax.fori_loop(0, t, step, jnp.zeros((t, k), jnp.float32))
 
 
-def _trsm_kernel(l_ref, a_ref, o_ref):
-    t = l_ref.shape[-1]
-    l = l_ref[0].astype(jnp.float32)
-    a = a_ref[0].astype(jnp.float32)
+def substitute_right(l: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """In-kernel right triangular substitution: solve ``X L^T = A`` (i.e.
+    ``X = A L^{-T}``, the TRSM of the tile Cholesky) for a ``(..., t, t)``
+    batch of tiles A against one (t, t) lower tile L, using only masked
+    vector ops.  Shared by :func:`trsm_pallas` and the fused band-Cholesky
+    sweep in ``kernels/band_cholesky.py`` (which substitutes its whole
+    sub-diagonal panel + arrow rows in one batched call).  Operates in and
+    returns float32."""
+    t = l.shape[-1]
     rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
     cvec = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
 
     def step(j, x):
-        # X[:, j] = (A[:, j] - X[:, :j] @ L[j, :j]^T) / L[j, j]
+        # X[..., j] = (A[..., j] - X[..., :j] @ L[j, :j]^T) / L[j, j]
         lrow = jnp.sum(jnp.where(rows == j, l, 0.0), axis=0)       # L[j, :]
         lrow_m = jnp.where(cvec < j, lrow, 0.0)
         ljj = jnp.sum(jnp.where(cvec == j, lrow, 0.0))
-        acol = jnp.sum(jnp.where(cols == j, a, 0.0), axis=1)        # A[:, j]
+        acol = jnp.sum(jnp.where(cols == j, a, 0.0), axis=-1)      # A[..., j]
         xcol = (acol - jnp.dot(x, lrow_m, precision=jax.lax.Precision.HIGHEST)) / ljj
-        return jnp.where(cols == j, xcol[:, None], x)
+        return jnp.where(cols == j, xcol[..., None], x)
 
-    x = jax.lax.fori_loop(0, t, step, jnp.zeros((t, t), jnp.float32))
+    return jax.lax.fori_loop(0, t, step, jnp.zeros(a.shape, jnp.float32))
+
+
+def _trsm_kernel(l_ref, a_ref, o_ref):
+    x = substitute_right(l_ref[0].astype(jnp.float32),
+                         a_ref[0].astype(jnp.float32))
     o_ref[0] = x.astype(o_ref.dtype)
 
 

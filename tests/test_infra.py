@@ -1,0 +1,122 @@
+"""Infrastructure satellites: kernel-backend env validation, the bounded
+batching caches, and the benchmark harness's --check-only gate."""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# REPRO_KERNEL_IMPL validation (ops.default_impl)
+# ---------------------------------------------------------------------------
+
+def test_default_impl_env_override(monkeypatch):
+    for valid in ("ref", "pallas", "unrolled"):
+        monkeypatch.setenv("REPRO_KERNEL_IMPL", valid)
+        assert ops.default_impl() == valid
+    monkeypatch.delenv("REPRO_KERNEL_IMPL")
+    assert ops.default_impl() in ("ref", "pallas")
+
+
+def test_default_impl_rejects_invalid_env(monkeypatch):
+    """An invalid REPRO_KERNEL_IMPL must fail loudly, not silently fall
+    back to the backend default (the old behavior hid typos like
+    'palas')."""
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "palas")
+    with pytest.raises(ValueError, match="REPRO_KERNEL_IMPL"):
+        ops.default_impl()
+    # the error propagates through a dispatching primitive too
+    with pytest.raises(ValueError, match="REPRO_KERNEL_IMPL"):
+        ops.potrf(jnp.eye(8))
+
+
+# ---------------------------------------------------------------------------
+# Bounded traced-callable caches (core/batching.py)
+# ---------------------------------------------------------------------------
+
+def test_lru_cache_bounds_and_recency():
+    from repro.core.batching import LRUCache
+    c = LRUCache(maxsize=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1          # refresh "a" -> "b" is now LRU
+    c.put("c", 3)                   # evicts "b"
+    assert "b" not in c and c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    assert len(c) == 2
+    with pytest.raises(ValueError):
+        LRUCache(maxsize=0)
+
+
+def test_batched_window_cache_is_bounded():
+    """The serving caches must not grow without limit across distinct
+    grids; eviction only drops the Python wrapper, correctness is
+    unaffected on re-entry."""
+    from repro.core import cholesky, selinv
+    assert cholesky._BATCHED_WINDOW_CACHE.maxsize <= 64
+    assert selinv._BATCHED_SELINV_CACHE.maxsize <= 64
+
+
+def test_bucketed_batched_call_pads_and_strips():
+    from repro.core.batching import bucketed_batched_call, next_pow2
+    assert [next_pow2(b) for b in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    seen = {}
+
+    def fn(x):
+        seen["n"] = x.shape[0]
+        return (x * 2,)
+
+    x = jnp.arange(6, dtype=jnp.float32)[:, None]
+    (out,) = bucketed_batched_call(fn, (x,), bucket=True)
+    assert seen["n"] == 8 and out.shape[0] == 6
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2)
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py --check-only (validates committed BENCH_*.json)
+# ---------------------------------------------------------------------------
+
+def _run_check_only(cwd):
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--check-only"],
+        cwd=cwd, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(_ROOT, "src")})
+
+
+@pytest.mark.slow
+def test_check_only_passes_on_committed_records():
+    """The committed BENCH_*.json artifacts must satisfy their own embedded
+    thresholds — the fast CI gate against landing a regressed record."""
+    res = _run_check_only(_ROOT)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_check_only_validation_logic(tmp_path):
+    """--check-only flags threshold regressions and missing metrics, and
+    never gates on interpret-mode diagnostics."""
+    sys.path.insert(0, _ROOT)
+    try:
+        from benchmarks.run import _record_failures
+    finally:
+        sys.path.remove(_ROOT)
+    ok = {"x_speedup": 5.0, "thresholds": {"x_speedup_min": 3.0}, "pass": True}
+    assert _record_failures(ok) == []
+    bad = {"x_speedup": 2.0, "thresholds": {"x_speedup_min": 3.0}}
+    assert any("x_speedup" in r for r in _record_failures(bad))
+    missing = {"thresholds": {"x_speedup_min": 3.0}}
+    assert any("missing" in r for r in _record_failures(missing))
+    # interpret-mode-only timings are excluded from gating even if a
+    # threshold (erroneously) names them
+    diag = {"interpret_diagnostics": {"x_speedup": 0.5, "interpret_mode": True},
+            "thresholds": {"x_speedup_min": 3.0}}
+    assert _record_failures(diag) == []
+    failed = {"pass": False}
+    assert any("pass=false" in r for r in _record_failures(failed))

@@ -6,12 +6,14 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
+from repro.kernels.band_cholesky import band_cholesky_sweep_pallas
 from repro.kernels.band_solve import (band_backward_sweep_pallas,
                                       band_forward_sweep_pallas)
 from repro.kernels.band_update import band_update_pallas
 from repro.kernels.gemm import gemm_pallas, geadd_pallas, syrk_pallas
 from repro.kernels.potrf import potrf_pallas
-from repro.kernels.selinv import selinv_step_pallas
+from repro.kernels.ring import band_row_to_col
+from repro.kernels.selinv import selinv_step_pallas, selinv_sweep_pallas
 from repro.kernels.trsm import trsm_pallas
 
 TILES = [8, 16, 32, 64]
@@ -212,6 +214,118 @@ def test_band_sweep_ref_semantics(rng):
     yd, acca = ref.band_forward_sweep_ref(Dr, R, jnp.asarray(bd))
     np.testing.assert_allclose(np.asarray(yd), want, rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(acca), want_acc, rtol=2e-4, atol=2e-4)
+
+
+def _spd_ctsf(n, bw, ar, t, seed=0):
+    """A real SPD banded-arrowhead CTSF (the fused factorization/selinv
+    sweeps need genuinely factorizable inputs, unlike the solve sweeps)."""
+    from repro.core import BandedCTSF, TileGrid
+    from repro.data import make_arrowhead
+    A, st = make_arrowhead(n, bw, ar, rho=0.6, seed=seed)
+    grid = TileGrid(st, t=t)
+    return BandedCTSF.from_sparse(A, grid), grid
+
+
+def _corner_sigma(C, nat, t):
+    """Dense corner seed Σ_cc = L_c^{-T} L_c^{-1} (mirrors core/selinv.py)."""
+    if not nat:
+        return jnp.zeros((0, 0, t, t), C.dtype)
+    nc = nat * t
+    cd = C.transpose(0, 2, 1, 3).reshape(nc, nc)
+    winv = jax.scipy.linalg.solve_triangular(
+        cd, jnp.eye(nc, dtype=C.dtype), lower=True)
+    return jnp.dot(winv.T, winv).reshape(nat, t, nat, t).transpose(0, 2, 1, 3)
+
+
+# grids cover: single tile (bt=0), bt=0 + arrow, nat=0 with bt=1, thick
+# arrow / wide band, deep band with small tiles
+CHOLESKY_GRIDS = [(16, 4, 0, 16), (30, 6, 14, 16), (160, 8, 0, 16),
+                  (130, 40, 30, 16), (96, 40, 16, 8)]
+
+
+@pytest.mark.parametrize("n,bw,ar,t", CHOLESKY_GRIDS)
+@pytest.mark.parametrize("nchunks", [1, 3])
+def test_band_cholesky_sweep(n, bw, ar, t, nchunks):
+    """One-launch factorization matches the ring-scan oracle: panels,
+    factored arrow rows and the per-chunk corner-Schur partial sums."""
+    bm, grid = _spd_ctsf(n, bw, ar, t)
+    Ac = band_row_to_col(bm.Dr)
+    got = band_cholesky_sweep_pallas(Ac, bm.R, nchunks=nchunks)
+    want = ref.band_cholesky_sweep_ref(Ac, bm.R, nchunks=nchunks)
+    for g, w, name in zip(got, want, ("panels", "R_out", "schur")):
+        assert g.shape == w.shape, name
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-4, atol=2e-4, err_msg=name)
+
+
+def test_band_cholesky_sweep_vmap(rng):
+    """Batched matrices (factorize_window_batched's shape) ride the fused
+    kernel through jax.vmap."""
+    mats = [_spd_ctsf(130, 40, 30, 16, seed=s)[0] for s in range(3)]
+    Acb = jnp.stack([band_row_to_col(m.Dr) for m in mats])
+    Rb = jnp.stack([m.R for m in mats])
+    got = jax.vmap(lambda a, r: band_cholesky_sweep_pallas(a, r, nchunks=2))(
+        Acb, Rb)
+    for i in range(3):
+        want = ref.band_cholesky_sweep_ref(Acb[i], Rb[i], nchunks=2)
+        for g, w, name in zip(got, want, ("panels", "R_out", "schur")):
+            np.testing.assert_allclose(np.asarray(g[i]), np.asarray(w),
+                                       rtol=2e-4, atol=2e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("n,bw,ar,t", CHOLESKY_GRIDS)
+def test_selinv_sweep(n, bw, ar, t):
+    """One-launch Takahashi recurrence matches the per-column scan oracle."""
+    from repro.core import factorize_window
+    bm, grid = _spd_ctsf(n, bw, ar, t)
+    f = factorize_window(bm, impl="ref").ctsf
+    lcol = band_row_to_col(f.Dr)
+    sc = _corner_sigma(f.C, grid.n_arrow_tiles, t)
+    gp, ga = selinv_sweep_pallas(lcol, f.R, sc)
+    wp, wa = ref.selinv_sweep_ref(lcol, f.R, sc)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(wp),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(wa),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_selinv_sweep_vmap():
+    from repro.core import factorize_window
+    facs, grids = zip(*[(_spd_ctsf(96, 40, 16, 8, seed=s)) for s in range(2)])
+    fs = [factorize_window(m, impl="ref").ctsf for m in facs]
+    lcolb = jnp.stack([band_row_to_col(f.Dr) for f in fs])
+    Rb = jnp.stack([f.R for f in fs])
+    scb = jnp.stack([_corner_sigma(f.C, grids[0].n_arrow_tiles, 8)
+                     for f in fs])
+    gp, ga = jax.vmap(selinv_sweep_pallas)(lcolb, Rb, scb)
+    for i in range(2):
+        wp, wa = ref.selinv_sweep_ref(lcolb[i], Rb[i], scb[i])
+        np.testing.assert_allclose(np.asarray(gp[i]), np.asarray(wp),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(ga[i]), np.asarray(wa),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_fused_sweeps_are_single_launch():
+    """The whole factorization / selinv recurrence is exactly one Pallas
+    launch (vs 3·ndt / 2·ndt per-panel dispatches for the scan paths).
+    Uses the same jaxpr counter the CI launch-count gate gates on."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    try:
+        from benchmarks.bench_cholesky import count_pallas_launches
+    finally:
+        sys.path.pop(0)
+    _count_pallas_calls = count_pallas_launches
+    bm, grid = _spd_ctsf(130, 40, 30, 16)
+    Ac = band_row_to_col(bm.Dr)
+    jx = jax.make_jaxpr(
+        lambda a, r: band_cholesky_sweep_pallas(a, r, nchunks=4))(Ac, bm.R)
+    assert _count_pallas_calls(jx) == 1
+    sc = jnp.zeros((2, 2, 16, 16), jnp.float32)   # tracing only needs shapes
+    jx2 = jax.make_jaxpr(selinv_sweep_pallas)(Ac, bm.R, sc)
+    assert _count_pallas_calls(jx2) == 1
 
 
 def test_band_update_ref_semantics(rng):

@@ -127,6 +127,9 @@ def test_selinv_batched_matches_looped():
 
 
 def test_selinv_pallas_impl_matches_ref():
+    """impl="pallas" now runs the whole Takahashi recurrence as one fused
+    kernel launch (kernels.ops.selinv_sweep) — parity vs the per-column
+    scan reference."""
     bm, f, grid = _factored(160, 16, 16, 16)
     s_ref = selected_inverse(f, impl="ref")
     s_pal = selected_inverse(f, impl="pallas")
@@ -134,6 +137,39 @@ def test_selinv_pallas_impl_matches_ref():
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(s_pal.R), np.asarray(s_ref.R),
                                rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,bw,ar,t", [
+    (160, 16, 16, 16),     # square grid, one arrow tile
+    (96, 12, 0, 16),       # no arrow at all (dummy arrow ring in-kernel)
+    (64, 9, 16, 8),        # arrow thicker than band
+])
+def test_selinv_fused_sweep_matches_dense_inverse(n, bw, ar, t):
+    """The fused sweep is exact on the factor pattern, same bar as the scan
+    path: its band + arrow block reproduces np.linalg.inv entries."""
+    bm, f, grid = _factored(n, bw, ar, t)
+    sigma = selected_inverse(f, impl="pallas")
+    inv = np.linalg.inv(bm.to_dense(lower_only=False).astype(np.float64))
+    mask = _pattern_mask(grid, bm)
+    err = np.abs(np.where(mask, sigma.to_dense_band() - inv, 0.0)).max()
+    assert err < 5e-6 * max(1.0, np.abs(inv).max())
+
+
+def test_selinv_batched_pallas_rides_fused_sweep():
+    """selinv_batched(impl="pallas") — the fused kernel under vmap —
+    matches the looped ref recurrences."""
+    mats = []
+    for s in range(3):
+        bm, f, grid = _factored(160, 16, 16, 16, seed=s)
+        mats.append(bm)
+    fb = factorize_window_batched(mats, impl="ref")
+    sb = selinv_batched(fb, impl="pallas")
+    for i, m in enumerate(mats):
+        si = selected_inverse(factorize_window(m, impl="ref"), impl="ref")
+        np.testing.assert_allclose(np.asarray(sb.Dr[i]), np.asarray(si.Dr),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(sb.R[i]), np.asarray(si.R),
+                                   rtol=2e-4, atol=2e-4)
 
 
 def test_selinv_property_random_structures():
