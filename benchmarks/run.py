@@ -20,12 +20,19 @@ matrices (long on CPU); the default is structure-preserving scaled versions.
                                        writes BENCH_cholesky.json)
   §Roofline   -> roofline             (from dry-run artifacts)
 
+  Bucketing   -> bench_bucketing     (canonical-grid policy: compile
+                                      counts for a mixed-grid stream;
+                                      writes BENCH_bucketing.json)
+
 ``--check-only`` validates every committed ``BENCH_*.json`` against its
 embedded thresholds without re-running anything — the fast CI gate
-against landing a record that fails its own pass criteria.  Timings
-recorded under a record's ``interpret_diagnostics`` block (Pallas
-interpret-mode numbers on non-TPU hosts) are never gated, in check-only
-or full runs; fused-kernel records gate on counted launches instead.
+against landing a record that fails its own pass criteria.  Suites
+listed in ``RECORD_SUITES`` *must* have a committed record: a deleted
+(or never-committed) ``BENCH_<suite>.json`` fails the check, so a
+regression cannot slip in by dropping its record.  Timings recorded
+under a record's ``interpret_diagnostics`` block (Pallas interpret-mode
+numbers on non-TPU hosts) are never gated, in check-only or full runs;
+fused-kernel records gate on counted launches instead.
 """
 from __future__ import annotations
 
@@ -38,6 +45,11 @@ import time
 import traceback
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# suites that emit a BENCH_<name>.json trajectory point; --check-only
+# requires each of these records to exist at the repo root (and pass its
+# own thresholds), so deleting a record cannot silently pass CI
+RECORD_SUITES = ("solve", "selinv", "cholesky", "bucketing")
 
 
 def _record_failures(record: dict) -> list:
@@ -68,12 +80,20 @@ def _record_failures(record: dict) -> list:
 def check_records(root: str = _ROOT) -> int:
     """Validate all committed BENCH_*.json against their embedded
     thresholds; returns the number of failing records (printing each
-    failure)."""
+    failure).  Every suite in ``RECORD_SUITES`` must have a committed
+    record — a registered suite with no BENCH_<suite>.json fails."""
     bad = 0
     paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    for suite in RECORD_SUITES:
+        expected = os.path.join(root, f"BENCH_{suite}.json")
+        if expected not in paths:
+            print(f"FAIL: BENCH_{suite}.json — suite {suite!r} is "
+                  "registered in benchmarks/run.py but has no committed "
+                  "record")
+            bad += 1
     if not paths:
         print("no BENCH_*.json records found", file=sys.stderr)
-        return 1
+        return bad or 1
     for path in paths:
         with open(path) as f:
             record = json.load(f)
@@ -98,10 +118,10 @@ def main() -> None:
     if args.check_only:
         raise SystemExit(1 if check_records() else 0)
 
-    from . import (bench_accumulation, bench_cholesky, bench_concurrent,
-                   bench_libraries, bench_scalability, bench_selinv,
-                   bench_solve, bench_tile_size, bench_tree_reduction,
-                   roofline)
+    from . import (bench_accumulation, bench_bucketing, bench_cholesky,
+                   bench_concurrent, bench_libraries, bench_scalability,
+                   bench_selinv, bench_solve, bench_tile_size,
+                   bench_tree_reduction, roofline)
     suites = {
         "accumulation": bench_accumulation,
         "libraries": bench_libraries,
@@ -112,6 +132,7 @@ def main() -> None:
         "solve": bench_solve,
         "selinv": bench_selinv,
         "cholesky": bench_cholesky,
+        "bucketing": bench_bucketing,
         "roofline": roofline,
     }
     failures = []  # (suite, [reasons...])

@@ -11,6 +11,9 @@ from .solve import (backward_solve, backward_solve_many, forward_solve,
                     sample_gmrf, sample_gmrf_many, solve, solve_many)
 from .selinv import SelectedInverse, selected_inverse, selinv_batched
 from .concurrent import concurrent_selinv
+from .gridpolicy import (GridBucketPolicy, embed_ctsf, embed_rhs,
+                         padded_flop_overhead, restrict_factor, restrict_rhs,
+                         restrict_selinv)
 
 __all__ = [
     "ArrowheadStructure", "TileGrid", "measure_arrowhead",
@@ -25,4 +28,6 @@ __all__ = [
     "sample_gmrf", "sample_gmrf_many", "solve", "solve_many",
     "SelectedInverse", "selected_inverse", "selinv_batched",
     "concurrent_selinv",
+    "GridBucketPolicy", "embed_ctsf", "embed_rhs", "padded_flop_overhead",
+    "restrict_factor", "restrict_rhs", "restrict_selinv",
 ]

@@ -59,6 +59,12 @@ class LRUCache:
     def __contains__(self, key: Hashable) -> bool:
         return key in self._entries
 
+    def keys(self):
+        """Current keys in least-to-most-recently-used order.  Each key is
+        one traced+compiled callable, so benchmarks and tests count
+        compiles by diffing snapshots of this set across a workload."""
+        return list(self._entries.keys())
+
 
 def next_pow2(b: int) -> int:
     return 1 << max(b - 1, 0).bit_length()

@@ -35,6 +35,7 @@ from repro.kernels import ops
 from repro.kernels.ring import band_col_to_row, band_row_to_col
 from .batching import LRUCache, bucketed_batched_call
 from .ctsf import BandedCTSF, TileMatrix
+from .structure import TileGrid
 from .symbolic import Task, TaskType
 from .tree_reduction import chunked_tree_sum, should_use_tree
 
@@ -151,19 +152,41 @@ def factorize_tasklist(tm: TileMatrix, impl: Optional[str] = None,
 
 @dataclasses.dataclass
 class CholeskyFactor:
-    """Factor L in banded-arrowhead CTSF layout."""
+    """Factor L in banded-arrowhead CTSF layout.
+
+    ``source_grid`` is set when the factor lives on a *canonical* grid
+    (``core/gridpolicy.py``) but represents a problem measured on
+    ``source_grid``: the CTSF arrays then hold ``blockdiag(I_prefix, L)``
+    and the policy-aware solve/selinv entry points embed right-hand sides
+    in and restrict results back automatically.  :meth:`restrict` strips
+    the embedding when the raw factor is wanted.
+    """
     ctsf: BandedCTSF
+    source_grid: Optional[TileGrid] = None
+
+    def restrict(self) -> "CholeskyFactor":
+        """Slice a canonical-grid factor back onto its source grid (no-op
+        for factors that were never embedded)."""
+        if self.source_grid is None:
+            return self
+        from .gridpolicy import restrict_factor
+        return restrict_factor(self, self.source_grid)
 
     def logdet(self) -> jnp.ndarray:
-        """log det A = 2 * sum log diag(L); padded diagonal entries are 1."""
+        """log det A = 2 * sum log diag(L); padded diagonal entries are 1
+        (including the identity prefix of a canonical-grid embedding, so
+        embedded factors report the source problem's log-determinant).
+        Leading batch axes (``factorize_window_batched`` /
+        ``concurrent_factorize`` factors) broadcast: a batched factor
+        returns a ``(batch,)`` vector."""
         g = self.ctsf.grid
-        diag_band = jnp.diagonal(self.ctsf.Dr[:, 0], axis1=-2, axis2=-1)
-        total = jnp.sum(jnp.log(jnp.abs(diag_band)))
+        d0 = jnp.take(self.ctsf.Dr, 0, axis=-3)          # (..., ndt, t, t)
+        db = jnp.diagonal(d0, axis1=-2, axis2=-1)        # (..., ndt, t)
+        total = jnp.sum(jnp.log(jnp.abs(db)), axis=(-2, -1))
         if g.n_arrow_tiles > 0:
-            dc = jnp.diagonal(
-                self.ctsf.C[jnp.arange(g.n_arrow_tiles), jnp.arange(g.n_arrow_tiles)],
-                axis1=-2, axis2=-1)
-            total = total + jnp.sum(jnp.log(jnp.abs(dc)))
+            ct = jnp.diagonal(self.ctsf.C, axis1=-4, axis2=-3)  # (..., t, t, nat)
+            dc = jnp.diagonal(ct, axis1=-3, axis2=-2)           # (..., t, nat)
+            total = total + jnp.sum(jnp.log(jnp.abs(dc)), axis=(-2, -1))
         return 2.0 * total
 
 
@@ -213,9 +236,13 @@ def _band_arrow_sweep_ring(Dr, R, grid, impl, tree_chunks: int = 1):
     return band_col_to_row(panels), R_out, schur
 
 
-def _band_arrow_sweep(Dr, R, grid, impl):
+def _band_arrow_sweep(Dr, R, grid, impl, start_tile=0):
     """The sequential panel sweep (thin critical path): factor the band and
-    arrow rows, leaving the corner untouched.  Returns (Dr_L, R_L)."""
+    arrow rows, leaving the corner untouched.  Returns (Dr_L, R_L).
+
+    ``start_tile`` skips the first rows of the sweep, leaving their input
+    values in place — correct exactly when they are the identity-embedding
+    prefix of a canonical grid (whose factor equals the input)."""
     t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
     b1 = bt + 1
 
@@ -246,7 +273,7 @@ def _band_arrow_sweep(Dr, R, grid, impl):
             Rp = jax.lax.dynamic_update_slice(Rp, lak[None], (k + bt, 0, 0, 0))
         return (Drp, Rp)
 
-    Drp, Rp = jax.lax.fori_loop(0, ndt, panel_step, (Drp, Rp))
+    Drp, Rp = jax.lax.fori_loop(start_tile, ndt, panel_step, (Drp, Rp))
     Dr_out = Drp[:ndt]
     R_out = Rp[bt:] if nat else R
     return Dr_out, R_out
@@ -265,7 +292,8 @@ def _corner_schur(R_L: jnp.ndarray, tree_chunks: int) -> jnp.ndarray:
 
 @functools.partial(jax.jit,
                    static_argnames=("grid", "impl", "tree_chunks", "sweep"))
-def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto"):
+def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto",
+                           start_tile=0):
     """Window factorization with sweep-mode dispatch:
 
     * ``"auto"`` (default) — ``"fused"`` on the Pallas backend (native TPU
@@ -281,7 +309,13 @@ def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto"):
 
     The fused/ring paths read the corner Schur complement from the sweep's
     per-chunk partial sums (accumulated on the fly in the fused kernel)
-    instead of re-contracting R_out from HBM."""
+    instead of re-contracting R_out from HBM.
+
+    ``start_tile`` declares the first band columns an identity-embedding
+    prefix (``core/gridpolicy.py``); callers omit it on the plain path so
+    the argument stays a trace-time constant 0 (keeping the static loop
+    bounds), and pass a *traced* scalar on the canonical-grid path so
+    distinct pad depths share one compilation per canonical grid."""
     nat = grid.n_arrow_tiles
     if sweep not in ("auto", "fused", "ring", "window"):
         raise ValueError(f"unknown sweep {sweep!r} (want 'auto', 'fused', "
@@ -299,7 +333,7 @@ def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto"):
     if mode == "auto":
         mode = "fused" if (impl or ops.default_impl()) == "pallas" else "ring"
     if mode == "window":
-        Dr_out, R_out = _band_arrow_sweep(Dr, R, grid, impl)
+        Dr_out, R_out = _band_arrow_sweep(Dr, R, grid, impl, start_tile)
         if nat:
             C_out = _corner_dense_cholesky(
                 C - _corner_schur(R_out, tree_chunks), impl)
@@ -310,7 +344,8 @@ def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto"):
     sweep_impl = "pallas" if mode == "fused" else "ref"
     nchunks = max(1, min(tree_chunks or 1, grid.n_diag_tiles or 1))
     panels, R_out, schur = ops.band_cholesky_sweep(
-        band_row_to_col(Dr), R, nchunks=nchunks, impl=sweep_impl)
+        band_row_to_col(Dr), R, nchunks=nchunks, start_tile=start_tile,
+        impl=sweep_impl)
     Dr_out = band_col_to_row(panels)
     if nat:
         # the chunks are the tree-reduction leaves; summing them is the
@@ -321,18 +356,45 @@ def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto"):
     return Dr_out, R_out, C_out
 
 
+def _embed_matrix(m: BandedCTSF, policy):
+    """Canonical-grid embedding of a matrix (or matrix batch) for the
+    factorization entry points — the matrix-side mirror of
+    ``solve._resolve_embedding``.  Returns ``(embedded, source_grid,
+    start_tile)`` with ``start_tile`` the *traced* identity-prefix depth,
+    so every pad depth shares the canonical grid's compilation."""
+    from .gridpolicy import embed_ctsf
+    cgrid = policy.canonicalize(m.grid)
+    start = jnp.asarray(cgrid.n_diag_tiles - m.grid.n_diag_tiles, jnp.int32)
+    return embed_ctsf(m, cgrid), m.grid, start
+
+
 def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
                      tree_chunks: int = 8,
-                     sweep: str = "auto") -> CholeskyFactor:
+                     sweep: str = "auto", policy=None) -> CholeskyFactor:
     """Banded-arrowhead factorization (window backend).
 
     ``impl="pallas"`` (or running natively on TPU) factorizes the whole
     band + arrow block in **one fused Pallas launch**
     (``kernels.ops.band_cholesky_sweep``); ``sweep`` overrides the
-    dispatch (see :func:`_factorize_window_impl`)."""
-    Dr, R, C = _factorize_window_impl(m.Dr, m.R, m.C, m.grid, impl,
-                                      tree_chunks, sweep)
-    return CholeskyFactor(BandedCTSF(m.grid, Dr, R, C))
+    dispatch (see :func:`_factorize_window_impl`).
+
+    With a :class:`~repro.core.gridpolicy.GridBucketPolicy` the matrix is
+    first embedded into its canonical grid (identity-diagonal padding) and
+    the sweep skips the prefix via its traced ``start_tile`` — mixed-size
+    traffic then compiles once per canonical rung instead of once per
+    grid.  The returned factor lives on the canonical grid with
+    ``source_grid`` set; the solve/selinv entry points consume it
+    transparently, or :meth:`CholeskyFactor.restrict` strips the
+    embedding."""
+    source = None
+    if policy is not None:
+        m, source, start = _embed_matrix(m, policy)
+        Dr, R, C = _factorize_window_impl(m.Dr, m.R, m.C, m.grid, impl,
+                                          tree_chunks, sweep, start)
+    else:
+        Dr, R, C = _factorize_window_impl(m.Dr, m.R, m.C, m.grid, impl,
+                                          tree_chunks, sweep)
+    return CholeskyFactor(BandedCTSF(m.grid, Dr, R, C), source_grid=source)
 
 
 # ---------------------------------------------------------------------------
@@ -345,16 +407,28 @@ def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
 _BATCHED_WINDOW_CACHE = LRUCache(maxsize=64)
 
 
-def _batched_window_fn(grid, impl, tree_chunks, sweep="auto"):
+def _batched_window_fn(grid, impl, tree_chunks, sweep="auto",
+                       use_start=False):
     """One vmapped+jitted window factorization per (grid, impl, chunks,
     sweep) — cached on the Python side so repeated θ-sweeps reuse the same
-    traced function object (and therefore XLA's compile cache)."""
-    key = (grid, impl, tree_chunks, sweep)
+    traced function object (and therefore XLA's compile cache).
+
+    ``use_start=True`` (the canonical-grid path) adds a *traced*
+    ``start_tile`` argument broadcast across the batch, so every source
+    grid embedding into ``grid`` — whatever its pad depth — shares this
+    one cache entry; the plain path keeps its static-zero trace."""
+    key = (grid, impl, tree_chunks, sweep, use_start)
     fn = _BATCHED_WINDOW_CACHE.get(key)
     if fn is None:
-        fn = jax.jit(jax.vmap(
-            lambda dr, r, c: _factorize_window_impl(dr, r, c, grid, impl,
-                                                    tree_chunks, sweep)))
+        if use_start:
+            fn = jax.jit(jax.vmap(
+                lambda dr, r, c, s: _factorize_window_impl(
+                    dr, r, c, grid, impl, tree_chunks, sweep, s),
+                in_axes=(0, 0, 0, None)))
+        else:
+            fn = jax.jit(jax.vmap(
+                lambda dr, r, c: _factorize_window_impl(dr, r, c, grid, impl,
+                                                        tree_chunks, sweep)))
         _BATCHED_WINDOW_CACHE.put(key, fn)
     return fn
 
@@ -362,7 +436,8 @@ def _batched_window_fn(grid, impl, tree_chunks, sweep="auto"):
 def factorize_window_batched(batch, impl: Optional[str] = None,
                              tree_chunks: int = 8,
                              bucket: bool = True,
-                             sweep: str = "auto") -> CholeskyFactor:
+                             sweep: str = "auto",
+                             policy=None) -> CholeskyFactor:
     """Factorize a batch of same-grid matrices in one vmapped dispatch.
 
     ``batch`` is either a list of :class:`BandedCTSF` or one whose arrays
@@ -379,19 +454,42 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
     one per distinct sweep size.  The vmapped callable itself is cached per
     (grid, impl, tree_chunks, sweep), so factorizing a new batch of a known
     shape costs zero retracing.
+
+    ``policy`` (a :class:`~repro.core.gridpolicy.GridBucketPolicy`) extends
+    the bucketing across *grids*: the batch is embedded into its canonical
+    grid, the cache keys on that canonical grid, and the sweep skips the
+    identity prefix via a traced ``start_tile`` — so mixed-size serving
+    traffic compiles O(#canonical rungs) sweeps instead of one per distinct
+    grid.  The returned factor carries ``source_grid`` (see
+    :func:`factorize_window`).
     """
     if isinstance(batch, (list, tuple)):
         grid = batch[0].grid
         for m in batch:
-            assert m.grid == grid, "batched factorization needs equal structure"
+            if m.grid != grid:
+                raise ValueError(
+                    "batched factorization needs equal structure; use "
+                    "concurrent.stack_ctsf(policy=...) to embed mixed "
+                    "grids onto a shared canonical rung first")
         Dr = jnp.stack([m.Dr for m in batch])
         R = jnp.stack([m.R for m in batch])
         C = jnp.stack([m.C for m in batch])
     else:
         grid = batch.grid
         Dr, R, C = batch.Dr, batch.R, batch.C
-        assert Dr.ndim == 5, "batched CTSF needs a leading batch axis"
-    dr, r, c = bucketed_batched_call(
-        _batched_window_fn(grid, impl, tree_chunks, sweep), (Dr, R, C),
-        bucket)
-    return CholeskyFactor(BandedCTSF(grid, dr, r, c))
+        if Dr.ndim != 5:
+            raise ValueError(
+                f"batched CTSF needs a leading batch axis, got Dr.ndim="
+                f"{Dr.ndim}")
+    source = None
+    if policy is not None:
+        emb, source, start = _embed_matrix(BandedCTSF(grid, Dr, R, C),
+                                           policy)
+        Dr, R, C, grid = emb.Dr, emb.R, emb.C, emb.grid
+        fn = _batched_window_fn(grid, impl, tree_chunks, sweep,
+                                use_start=True)
+        call = lambda dr, r, c: fn(dr, r, c, start)
+    else:
+        call = _batched_window_fn(grid, impl, tree_chunks, sweep)
+    dr, r, c = bucketed_batched_call(call, (Dr, R, C), bucket)
+    return CholeskyFactor(BandedCTSF(grid, dr, r, c), source_grid=source)

@@ -27,11 +27,35 @@ __all__ = ["stack_ctsf", "concurrent_factorize", "concurrent_logdet",
            "concurrent_solve"]
 
 
-def stack_ctsf(mats: list) -> BandedCTSF:
-    """Stack same-structure BandedCTSF matrices on a leading batch axis."""
+def stack_ctsf(mats: list, policy=None) -> BandedCTSF:
+    """Stack BandedCTSF matrices on a leading batch axis.
+
+    Without a policy all matrices must share one grid (unequal grids raise
+    ``ValueError`` — a real validation, not a stripped-under-``-O`` bare
+    assert).  With a :class:`~repro.core.gridpolicy.GridBucketPolicy`,
+    matrices on *unequal* grids are first embedded onto their shared
+    canonical rung (``policy.join``) with identity-diagonal padding, so a
+    mixed-size batch can ride one vmapped factorization.  Note the stacked
+    result is a plain canonical-grid matrix batch: factorize it with
+    ``factorize_window_batched(..., policy=policy)`` (a no-op embedding,
+    since every grid is already canonical) to get a factor whose solves
+    restrict back to the canonical — not the per-matrix source — layout.
+    """
+    if not mats:
+        raise ValueError("stack_ctsf needs at least one matrix")
+    if policy is not None:
+        from .gridpolicy import embed_ctsf
+        cgrid = policy.join([m.grid for m in mats])
+        mats = [embed_ctsf(m, cgrid) for m in mats]
     grid = mats[0].grid
     for m in mats:
-        assert m.grid == grid, "concurrent factorization needs equal structure"
+        if m.grid != grid:
+            raise ValueError(
+                "concurrent factorization needs equal structure: got grids "
+                f"with (ndt, bt, nat) = "
+                f"{sorted({(x.grid.n_diag_tiles, x.grid.band_tiles, x.grid.n_arrow_tiles) for x in mats})}; "
+                "pass a GridBucketPolicy (policy=) to embed them onto a "
+                "shared canonical rung")
     return BandedCTSF(
         grid,
         jnp.stack([m.Dr for m in mats]),
@@ -42,28 +66,45 @@ def stack_ctsf(mats: list) -> BandedCTSF:
 
 def concurrent_factorize(batch: BandedCTSF, mesh: Optional[Mesh] = None,
                          axis: str = "data", impl: Optional[str] = None,
-                         tree_chunks: int = 8) -> CholeskyFactor:
+                         tree_chunks: int = 8,
+                         policy=None) -> CholeskyFactor:
     """Factorize a batch of matrices concurrently.
 
     With ``mesh``, the batch axis is sharded over ``axis`` — one factorization
     never spans devices (App. A's within-NUMA binding); without, it delegates
     to the cached batched serving path (``factorize_window_batched``) so
     repeated same-structure sweeps never retrace.
+
+    With a ``policy`` the batch is embedded onto its canonical grid first
+    (``core/gridpolicy.py``) — the sharded sweep then runs on the
+    canonical grid with its identity prefix skipped, and the returned
+    factor carries ``source_grid`` for the policy-aware solve/selinv
+    entry points.
     """
     if mesh is None:
         return factorize_window_batched(batch, impl=impl,
-                                        tree_chunks=tree_chunks, bucket=False)
-    fn = jax.vmap(
-        lambda dr, r, c: _factorize_window_impl(dr, r, c, batch.grid, impl,
-                                                tree_chunks))
+                                        tree_chunks=tree_chunks,
+                                        bucket=False, policy=policy)
+    source = None
+    if policy is not None:
+        from .cholesky import _embed_matrix
+        batch, source, start = _embed_matrix(batch, policy)
+        fn = jax.vmap(
+            lambda dr, r, c: _factorize_window_impl(
+                dr, r, c, batch.grid, impl, tree_chunks, "auto", start))
+    else:
+        fn = jax.vmap(
+            lambda dr, r, c: _factorize_window_impl(dr, r, c, batch.grid,
+                                                    impl, tree_chunks))
     spec = (NamedSharding(mesh, P(axis)),) * 3
     fn = jax.jit(fn, in_shardings=spec, out_shardings=spec)
     dr, r, c = fn(batch.Dr, batch.R, batch.C)
-    return CholeskyFactor(BandedCTSF(batch.grid, dr, r, c))
+    return CholeskyFactor(BandedCTSF(batch.grid, dr, r, c),
+                          source_grid=source)
 
 
 def concurrent_solve(factor: CholeskyFactor, B: jnp.ndarray,
-                     impl: Optional[str] = None) -> jnp.ndarray:
+                     impl: Optional[str] = None, policy=None) -> jnp.ndarray:
     """Solve ``A_i X_i = B`` for every factor in the batch, one vmapped
     multi-RHS sweep.
 
@@ -83,22 +124,28 @@ def concurrent_solve(factor: CholeskyFactor, B: jnp.ndarray,
     serving path — a θ-sweep of factorizations amortized over a panel of
     RHS without ever leaving the device.  Recompiles once per
     ``(grid, impl, k, batch)``.
+
+    Embedded factors (``factor.source_grid`` set, or ``policy`` given)
+    take ``B`` and return ``X`` in the *source* layout; the canonical
+    embedding and the identity-prefix skip ride the batched sweep.
     """
-    from .solve import _merge_panels, _solve_panels, _split_rhs
-    ctsf = factor.ctsf
-    g = ctsf.grid
+    from .solve import _embedded_panels, _merge_panels, _solve_panels, \
+        _split_rhs
     panel = B[:, None] if B.ndim == 1 else B
+    ctsf, _, g, panel, start, restrict = _embedded_panels(factor, policy,
+                                                          panel)
     bd, ba = _split_rhs(g, panel)
     xd, xa = jax.vmap(
-        lambda dr, r, c: _solve_panels(dr, r, c, bd, ba, g, impl))(
+        lambda dr, r, c: _solve_panels(dr, r, c, bd, ba, g, impl, start))(
         ctsf.Dr, ctsf.R, ctsf.C)
-    out = jax.vmap(_merge_panels)(xd, xa)
+    out = restrict(jax.vmap(_merge_panels)(xd, xa))
     return out[..., 0] if B.ndim == 1 else out
 
 
 def concurrent_selinv(factor: CholeskyFactor, mesh: Optional[Mesh] = None,
                       axis: str = "data",
-                      impl: Optional[str] = None) -> SelectedInverse:
+                      impl: Optional[str] = None,
+                      policy=None) -> SelectedInverse:
     """Selected inversion of a batch of factors concurrently.
 
     With ``mesh``, the batch axis is sharded over ``axis`` — one backward
@@ -106,30 +153,55 @@ def concurrent_selinv(factor: CholeskyFactor, mesh: Optional[Mesh] = None,
     :func:`concurrent_factorize`'s placement so a θ-sweep's factors and
     their posterior marginals stay device-resident end to end; without, it
     delegates to the cached batched path (:func:`selinv_batched`).
+
+    Embedded factors (``factor.source_grid`` set, or ``policy`` given)
+    run the sweep on the canonical grid with the identity prefix skipped
+    and return the selected inverse restricted to the source grid.
     """
     if mesh is None:
-        return selinv_batched(factor, impl=impl, bucket=False)
-    ctsf = factor.ctsf
-    fn = jax.vmap(lambda dr, r, c: _selinv_impl(dr, r, c, ctsf.grid, impl))
+        return selinv_batched(factor, impl=impl, bucket=False, policy=policy)
+    from .solve import _resolve_embedding
+    ctsf, src, pad = _resolve_embedding(factor, policy)
+    g = ctsf.grid
+    if src is not None:
+        start = jnp.asarray(pad, jnp.int32)
+        fn = jax.vmap(
+            lambda dr, r, c: _selinv_impl(dr, r, c, g, impl, start))
+    else:
+        fn = jax.vmap(lambda dr, r, c: _selinv_impl(dr, r, c, g, impl))
     spec = (NamedSharding(mesh, P(axis)),) * 3
     fn = jax.jit(fn, in_shardings=spec, out_shardings=spec)
     sd, sr, sc = fn(ctsf.Dr, ctsf.R, ctsf.C)
-    return SelectedInverse(ctsf.grid, sd, sr, sc)
+    out = SelectedInverse(g, sd, sr, sc)
+    if src is not None:
+        from .gridpolicy import restrict_selinv
+        out = restrict_selinv(out, src)
+    return out
 
 
 def concurrent_quadratic_forms(factor: CholeskyFactor, y: jnp.ndarray,
-                               impl: Optional[str] = None) -> jnp.ndarray:
+                               impl: Optional[str] = None,
+                               policy=None) -> jnp.ndarray:
     """``y^T A_i^{-1} y`` for each factor in the batch.
 
     Uses ``‖L_i^{-1} y‖²`` — only the *forward* sweep, vmapped over the
     batch — which is half the work of a full solve and exactly the
     quadratic-form term INLA's objective needs per θ candidate.
+
+    Embedded factors (``factor.source_grid`` set, or ``policy`` given)
+    take ``y`` in the source layout; the identity-prefix rows of the
+    embedded sweep are zero, so the squared norm needs no restriction.
     """
-    from .solve import _forward_impl, _split_rhs
-    ctsf = factor.ctsf
-    g = ctsf.grid
-    bd, ba = _split_rhs(g, y.reshape(-1, 1))
-    fn = jax.vmap(lambda dr, r, c: _forward_impl(dr, r, c, bd, ba, g, impl))
+    from .solve import _embedded_panels, _forward_impl, _split_rhs
+    ctsf, _, g, panel, start, _ = _embedded_panels(factor, policy,
+                                                   y.reshape(-1, 1))
+    bd, ba = _split_rhs(g, panel)
+    if start is not None:
+        fn = jax.vmap(
+            lambda dr, r, c: _forward_impl(dr, r, c, bd, ba, g, impl, start))
+    else:
+        fn = jax.vmap(
+            lambda dr, r, c: _forward_impl(dr, r, c, bd, ba, g, impl))
     yd, ya = fn(ctsf.Dr, ctsf.R, ctsf.C)
     return (jnp.sum(yd * yd, axis=(1, 2, 3))
             + jnp.sum(ya * ya, axis=(1, 2, 3)))

@@ -127,6 +127,25 @@ class BandedCTSF:
         return cls.from_dense_padded(dense, grid)
 
     @classmethod
+    def eye(cls, grid: TileGrid) -> "BandedCTSF":
+        """Identity matrix in the banded-arrowhead layout: identity diagonal
+        tiles, zero band/arrow/corner slack.  This is the neutral element of
+        the canonical-grid embedding (``gridpolicy.embed_ctsf``): its
+        Cholesky factor, selected inverse and log-determinant contribution
+        are all trivial, so padding a problem with identity blocks changes
+        nothing about the original entries."""
+        t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
+        ident = np.eye(t, dtype=np.float32)
+        Dr = np.zeros((ndt, bt + 1, t, t), dtype=np.float32)
+        if ndt:
+            Dr[:, 0] = ident
+        C = np.zeros((max(nat, 0), max(nat, 0), t, t), dtype=np.float32)
+        for i in range(nat):
+            C[i, i] = ident
+        R = np.zeros((ndt, max(nat, 0), t, t), dtype=np.float32)
+        return cls(grid, jnp.asarray(Dr), jnp.asarray(R), jnp.asarray(C))
+
+    @classmethod
     def from_dense_padded(cls, dense: np.ndarray, grid: TileGrid) -> "BandedCTSF":
         t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
         Dr = np.zeros((ndt, bt + 1, t, t), dtype=np.float32)

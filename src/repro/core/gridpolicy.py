@@ -1,0 +1,285 @@
+"""Canonical-grid bucketing for mixed-size serving traffic.
+
+The paper's central tuning knob is tile size versus parallelism: larger
+tiles raise algorithmic intensity but add padding flops (§III-B, Table
+III).  A serving system faces the same trade one level up — every distinct
+:class:`~repro.core.structure.TileGrid` that reaches the batched entry
+points (``factorize_window_batched``, ``solve_many``, ``selinv_batched``,
+``concurrent_*``) traces and XLA-compiles its own sweep, so traffic mixing
+problem sizes from many users recompiles unboundedly and churns the
+bounded LRU caches of :mod:`repro.core.batching`.
+
+This module trades a little padded compute for a *bounded compile set*:
+
+* :class:`GridBucketPolicy` maps any incoming grid to a small canonical
+  set — ``n_diag_tiles`` rounds up pow2-style, ``band_tiles`` and
+  ``n_arrow_tiles`` round up to policy rungs — so the compile count for a
+  mixed-grid workload is O(#canonical rungs) instead of O(#distinct
+  grids).
+* :func:`embed_ctsf` pads a :class:`~repro.core.ctsf.BandedCTSF` onto the
+  canonical grid with **identity diagonal tiles** and zero band/arrow
+  slack.  The embedded matrix is ``blockdiag(I_prefix, A_padded)`` (plus
+  an identity-extended corner), so its Cholesky factor, triangular
+  solves, log-determinant and selected inverse are *exact* on the
+  original entries — :func:`restrict_factor` / :func:`restrict_selinv` /
+  :func:`restrict_rhs` slice them back out.
+* The identity prefix occupies band tiles ``0 .. pad_diag-1``; the fused
+  sweep kernels skip it via their traced ``start_tile`` machinery
+  (``kernels/band_solve.py``, ``band_cholesky.py``, ``selinv.py``), so
+  diagonal slack costs ~0 compute, not just correctness.  Band/arrow
+  *widening* slack (extra zero tiles inside each visited panel) is merely
+  masked by structural zeros and does cost flops —
+  :func:`padded_flop_overhead` quantifies that, and the default rungs
+  keep it small.
+
+Embedding layout (source grid ``g`` -> canonical grid ``cg``)::
+
+    pad_diag  = cg.n_diag_tiles  - g.n_diag_tiles   (identity prefix)
+    pad_band  = cg.band_tiles    - g.band_tiles     (zero band slack)
+    pad_arrow = cg.n_arrow_tiles - g.n_arrow_tiles  (identity corner tail)
+
+    Dr_c[pad_diag + m, d] = Dr[m, d]    Dr_c[m < pad_diag, 0] = I
+    R_c[pad_diag + k, i]  = R[k, i]     (zero for prefix rows / i >= nat)
+    C_c[i, j] = C[i, j]                 C_c[i >= nat, i] = I
+
+Everything here is host-side shape logic plus cheap ``jnp.pad``-class
+array ops; the expensive sweeps stay inside the cached, canonically-keyed
+callables of the serving entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .batching import next_pow2
+from .ctsf import BandedCTSF
+from .structure import TileGrid
+
+__all__ = ["GridBucketPolicy", "embed_ctsf", "embed_rhs", "restrict_rhs",
+           "restrict_factor", "restrict_selinv", "padded_flop_overhead"]
+
+
+def _round_to_rungs(v: int, rungs: Sequence[int]) -> int:
+    """Smallest rung >= v; beyond the top rung fall back to the next power
+    of two so unusually large problems still canonicalize instead of
+    failing (documented open-ended tail)."""
+    for r in rungs:
+        if r >= v:
+            return r
+    return next_pow2(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridBucketPolicy:
+    """Maps arbitrary tile grids onto a small canonical set.
+
+    Attributes:
+      band_rungs:  allowed canonical ``band_tiles`` values (ascending).
+      arrow_rungs: allowed canonical ``n_arrow_tiles`` values (ascending).
+      min_diag_tiles: floor for the pow2-rounded ``n_diag_tiles``.
+
+    Canonical grids are built with :meth:`TileGrid.from_tile_counts`, so
+    two source grids that land on the same rungs produce *equal* canonical
+    grids — that equality is what collapses the per-grid compile caches.
+    Values above the top rung round up to the next power of two (the
+    policy never rejects a grid, it only stops deduplicating as tightly).
+    """
+
+    band_rungs: Tuple[int, ...] = (1, 2, 4, 8, 16)
+    arrow_rungs: Tuple[int, ...] = (0, 1, 2, 4)
+    min_diag_tiles: int = 4
+
+    def __post_init__(self):
+        for name in ("band_rungs", "arrow_rungs"):
+            rungs = getattr(self, name)
+            if not rungs or list(rungs) != sorted(set(rungs)):
+                raise ValueError(f"{name} must be ascending and non-empty")
+        if self.band_rungs[0] < 1:
+            raise ValueError("band_rungs must start at >= 1 (a multi-tile "
+                             "diagonal always has band_tiles >= 1)")
+        if self.min_diag_tiles < 1:
+            raise ValueError("min_diag_tiles must be >= 1")
+
+    def rungs_for(self, grid: TileGrid) -> Tuple[int, int, int]:
+        """Canonical (n_diag_tiles, band_tiles, n_arrow_tiles) for a grid."""
+        ndt, bt, nat = grid.n_diag_tiles, grid.band_tiles, grid.n_arrow_tiles
+        nat_c = _round_to_rungs(nat, self.arrow_rungs) if nat else 0
+        if ndt == 0:
+            return 0, 0, nat_c
+        bt_c = _round_to_rungs(max(bt, 1), self.band_rungs)
+        ndt_c = max(next_pow2(ndt), self.min_diag_tiles)
+        while ndt_c - 1 < bt_c:          # from_tile_counts needs bt <= ndt-1
+            ndt_c *= 2
+        return ndt_c, bt_c, nat_c
+
+    def canonicalize(self, grid: TileGrid) -> TileGrid:
+        """The canonical grid a problem on ``grid`` embeds into (same tile
+        size; only the tile counts are bucketed)."""
+        ndt_c, bt_c, nat_c = self.rungs_for(grid)
+        return TileGrid.from_tile_counts(grid.t, ndt_c, bt_c, nat_c)
+
+    def join(self, grids: Iterable[TileGrid]) -> TileGrid:
+        """Smallest canonical grid every grid in ``grids`` embeds into —
+        the shared rung ``concurrent.stack_ctsf`` uses to stack unequal
+        structures.  All grids must share one tile size."""
+        grids = list(grids)
+        if not grids:
+            raise ValueError("join needs at least one grid")
+        ts = {g.t for g in grids}
+        if len(ts) > 1:
+            raise ValueError(f"cannot join grids with mixed tile sizes {sorted(ts)}")
+        rungs = [self.rungs_for(g) for g in grids]
+        # elementwise max of per-grid rungs is itself a valid rung triple:
+        # bt_c > 0 implies some grid was banded, and that grid already
+        # satisfied ndt_c_i - 1 >= bt_c, so the max does too
+        ndt_c = max(r[0] for r in rungs)
+        bt_c = max(r[1] for r in rungs)
+        nat_c = max(r[2] for r in rungs)
+        return TileGrid.from_tile_counts(grids[0].t, ndt_c, bt_c, nat_c)
+
+
+def _check_embeddable(grid: TileGrid, cgrid: TileGrid) -> Tuple[int, int, int]:
+    """Pad widths (diag, band, arrow) of the embedding, validating it is
+    one.  A band-less (arrow-only) source embeds into a banded canonical
+    grid too — its entire band part is identity prefix."""
+    if grid.t != cgrid.t:
+        raise ValueError(f"tile size mismatch: {grid.t} vs {cgrid.t}")
+    pads = (cgrid.n_diag_tiles - grid.n_diag_tiles,
+            cgrid.band_tiles - grid.band_tiles,
+            cgrid.n_arrow_tiles - grid.n_arrow_tiles)
+    if min(pads) < 0:
+        raise ValueError(
+            f"grid (ndt={grid.n_diag_tiles}, bt={grid.band_tiles}, "
+            f"nat={grid.n_arrow_tiles}) does not embed into canonical "
+            f"(ndt={cgrid.n_diag_tiles}, bt={cgrid.band_tiles}, "
+            f"nat={cgrid.n_arrow_tiles})")
+    return pads
+
+
+def _lead_pad(arr, spec):
+    """jnp.pad with the pad spec right-aligned (leading batch axes zero)."""
+    lead = arr.ndim - len(spec)
+    return jnp.pad(arr, [(0, 0)] * lead + list(spec))
+
+
+def _embed_arrays(Dr, R, C, grid: TileGrid, cgrid: TileGrid):
+    """Identity-diagonal embedding of (possibly batched) CTSF arrays —
+    shared by :func:`embed_ctsf` (matrices *and* factors: the Cholesky
+    factor of ``blockdiag(I, A)`` is ``blockdiag(I, L)``, so embedding
+    commutes with factorization)."""
+    pad_d, pad_b, pad_a = _check_embeddable(grid, cgrid)
+    t = grid.t
+    ident = jnp.eye(t, dtype=Dr.dtype)
+    Dr_c = _lead_pad(Dr, [(pad_d, 0), (0, pad_b), (0, 0), (0, 0)])
+    if pad_d:
+        Dr_c = Dr_c.at[..., :pad_d, 0, :, :].set(ident)
+    R_c = _lead_pad(R, [(pad_d, 0), (0, pad_a), (0, 0), (0, 0)])
+    C_c = _lead_pad(C, [(0, pad_a), (0, pad_a), (0, 0), (0, 0)])
+    if pad_a:
+        tail = np.arange(grid.n_arrow_tiles, cgrid.n_arrow_tiles)
+        C_c = C_c.at[..., tail, tail, :, :].set(ident)
+    return Dr_c, R_c, C_c
+
+
+def embed_ctsf(mat: BandedCTSF, cgrid: TileGrid) -> BandedCTSF:
+    """Embed a banded-arrowhead matrix (or factor) into a canonical grid.
+
+    The result represents ``blockdiag(I_prefix, A)`` with the corner
+    extended by identity tiles: SPD iff ``A`` is, factor =
+    ``blockdiag(I, L)``, ``logdet`` unchanged, ``Σ = blockdiag(I, A^{-1})``
+    — so every downstream quantity of the embedded problem is exact on the
+    original entries (extract with :func:`restrict_factor` /
+    :func:`restrict_selinv` / :func:`restrict_rhs`).  Leading batch axes
+    pass through untouched."""
+    Dr, R, C = _embed_arrays(mat.Dr, mat.R, mat.C, mat.grid, cgrid)
+    return BandedCTSF(cgrid, Dr, R, C)
+
+
+def _restrict_arrays(Dr, R, C, cgrid: TileGrid, grid: TileGrid):
+    pad_d, _, _ = _check_embeddable(grid, cgrid)
+    ndt, b1, nat = grid.n_diag_tiles, grid.band_tiles + 1, grid.n_arrow_tiles
+    return (Dr[..., pad_d:pad_d + ndt, :b1, :, :],
+            R[..., pad_d:pad_d + ndt, :nat, :, :],
+            C[..., :nat, :nat, :, :])
+
+
+def restrict_factor(factor, grid: TileGrid = None):
+    """Slice an embedded Cholesky factor back onto its source grid —
+    the inverse of factorizing ``embed_ctsf(A, cgrid)``.  ``grid``
+    defaults to ``factor.source_grid`` (set by the policy-aware
+    factorization entry points)."""
+    from .cholesky import CholeskyFactor
+    grid = grid or factor.source_grid
+    if grid is None:
+        raise ValueError("restrict_factor needs a source grid (factor has "
+                         "no source_grid and none was given)")
+    ctsf = factor.ctsf
+    Dr, R, C = _restrict_arrays(ctsf.Dr, ctsf.R, ctsf.C, ctsf.grid, grid)
+    return CholeskyFactor(BandedCTSF(grid, Dr, R, C))
+
+
+def restrict_selinv(sel, grid: TileGrid):
+    """Slice an embedded selected inverse back onto its source grid.  The
+    retained entries are exact entries of the original ``A^{-1}`` (the
+    identity prefix is decoupled, so ``Σ_embedded = blockdiag(I, Σ)``)."""
+    from .selinv import SelectedInverse
+    Dr, R, C = _restrict_arrays(sel.Dr, sel.R, sel.C, sel.grid, grid)
+    return SelectedInverse(grid, Dr, R, C)
+
+
+def embed_rhs(B: jnp.ndarray, grid: TileGrid, cgrid: TileGrid) -> jnp.ndarray:
+    """Lift an RHS panel from the source padded layout into the canonical
+    one: band rows shift past the identity prefix (which solves to zero
+    against zero RHS), arrow rows move past the band slack.  Rows live on
+    axis ``-2`` (``(..., padded_n, k)``)."""
+    pad_d, _, pad_a = _check_embeddable(grid, cgrid)
+    t, ndt = grid.t, grid.n_diag_tiles
+    if B.shape[-2] != grid.padded_n:
+        raise ValueError(f"rhs panel rows {B.shape[-2]} != padded_n "
+                         f"{grid.padded_n} of the source grid")
+    bd, ba = B[..., :ndt * t, :], B[..., ndt * t:, :]
+    zeros = lambda rows: jnp.zeros(B.shape[:-2] + (rows, B.shape[-1]), B.dtype)
+    return jnp.concatenate(
+        [zeros(pad_d * t), bd, ba, zeros(pad_a * t)], axis=-2)
+
+
+def restrict_rhs(X: jnp.ndarray, grid: TileGrid, cgrid: TileGrid) -> jnp.ndarray:
+    """Project a solution panel from the canonical layout back to the
+    source padded layout (inverse of :func:`embed_rhs`)."""
+    pad_d, _, _ = _check_embeddable(grid, cgrid)
+    t, ndt, nat = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles
+    off_a = cgrid.n_diag_tiles * t
+    if X.shape[-2] != cgrid.padded_n:
+        raise ValueError(f"solution panel rows {X.shape[-2]} != padded_n "
+                         f"{cgrid.padded_n} of the canonical grid")
+    return jnp.concatenate(
+        [X[..., pad_d * t:(pad_d + ndt) * t, :],
+         X[..., off_a:off_a + nat * t, :]], axis=-2)
+
+
+def _sweep_tile_matmuls(ndt: int, bt: int, nat: int) -> int:
+    """Tile-matmul count model of one band+arrow factorization sweep (the
+    left-looking band update, arrow update, panel substitutions and corner
+    Schur) — the unit :func:`padded_flop_overhead` compares in."""
+    band_update = bt * (bt + 1) // 2      # U[e] pairs per panel
+    arrow_update = nat * bt               # V[i] pairs per panel
+    subst = bt + nat                      # panel + arrow substitutions
+    schur = nat * nat                     # corner Schur terms per panel
+    return max(ndt, 1) * (band_update + arrow_update + subst + schur + 1)
+
+
+def padded_flop_overhead(grid: TileGrid, cgrid: TileGrid) -> float:
+    """Fractional extra tile-matmuls the canonical embedding pays over the
+    source grid, *assuming the identity prefix is skipped* (the sweeps'
+    ``start_tile`` fast path): only band/arrow widening costs compute, the
+    ``pad_diag`` prefix rows do not.  0.0 means a zero-padding embedding
+    (grid already on its rung)."""
+    _check_embeddable(grid, cgrid)
+    src = _sweep_tile_matmuls(grid.n_diag_tiles, grid.band_tiles,
+                              grid.n_arrow_tiles)
+    emb = _sweep_tile_matmuls(grid.n_diag_tiles, cgrid.band_tiles,
+                              cgrid.n_arrow_tiles)
+    return emb / src - 1.0

@@ -156,9 +156,15 @@ class SelectedInverse:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("grid", "impl"))
-def _selinv_impl(Dr, R, C, grid, impl=None):
+def _selinv_impl(Dr, R, C, grid, impl=None, start_tile=0):
     """Blocked Takahashi sweep over one factor.  Returns (Sd, Sr, Sc) in the
-    row-band / arrow-row / lower-corner layout of :class:`SelectedInverse`."""
+    row-band / arrow-row / lower-corner layout of :class:`SelectedInverse`.
+
+    ``start_tile`` declares the first columns an identity-embedding prefix
+    (``core/gridpolicy.py``): the sweep emits identity Σ panels there
+    (``Σ = blockdiag(I, Σ_src)``), skipping their compute on the fused
+    backend.  Callers omit it on the plain path (static 0) and pass a
+    traced scalar on the canonical-grid path."""
     t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
     b1 = bt + 1
 
@@ -181,7 +187,7 @@ def _selinv_impl(Dr, R, C, grid, impl=None):
     # whole backward recurrence as one sweep primitive: the fused Pallas
     # kernel (impl="pallas") or the per-column selinv_step scan ("ref")
     lcol = band_row_to_col(Dr)       # lcol[j, d] = L_tile[j+d, j]
-    panels, sr = ops.selinv_sweep(lcol, R, sc_full, impl=impl)
+    panels, sr = ops.selinv_sweep(lcol, R, sc_full, start_tile, impl=impl)
     # panels[j, e] = Σ_{j+e, j}; sr[j, i] = Σ_{ndt+i, j}
     sd = band_col_to_row(panels)     # Sd[m, d] = Σ_{m, m-d}
     return sd, sr, _tril_tiles(sc_full, nat)
@@ -198,11 +204,25 @@ def _tril_tiles(sc_full: jnp.ndarray, nat: int) -> jnp.ndarray:
 
 
 def selected_inverse(factor: CholeskyFactor,
-                     impl: Optional[str] = None) -> SelectedInverse:
+                     impl: Optional[str] = None,
+                     policy=None) -> SelectedInverse:
     """Band + arrow block of Σ = A^{-1} from a banded-arrowhead Cholesky
     factor, via the blocked Takahashi recurrence (one backward tile sweep,
-    cost independent of how many entries are selected)."""
-    ctsf = factor.ctsf
+    cost independent of how many entries are selected).
+
+    Canonical-grid embedded factors (``factor.source_grid`` set, or
+    ``policy`` given) run the recurrence on the canonical grid — one
+    compile per canonical rung across all source grids, prefix columns
+    skipped via the sweep's traced ``start_tile`` — and the result is
+    restricted back to the source grid, so every returned entry is an
+    exact entry of the source problem's inverse."""
+    from .solve import _resolve_embedding
+    ctsf, src, pad = _resolve_embedding(factor, policy)
+    if src is not None:
+        from .gridpolicy import restrict_selinv
+        sd, sr, sc = _selinv_impl(ctsf.Dr, ctsf.R, ctsf.C, ctsf.grid, impl,
+                                  jnp.asarray(pad, jnp.int32))
+        return restrict_selinv(SelectedInverse(ctsf.grid, sd, sr, sc), src)
     sd, sr, sc = _selinv_impl(ctsf.Dr, ctsf.R, ctsf.C, ctsf.grid, impl)
     return SelectedInverse(ctsf.grid, sd, sr, sc)
 
@@ -216,21 +236,29 @@ def selected_inverse(factor: CholeskyFactor,
 _BATCHED_SELINV_CACHE = LRUCache(maxsize=64)
 
 
-def _batched_selinv_fn(grid, impl):
+def _batched_selinv_fn(grid, impl, use_start=False):
     """One vmapped+jitted recurrence per (grid, impl) — cached on the Python
     side so repeated same-structure sweeps reuse the traced function object
-    (and XLA's compile cache), mirroring ``cholesky._batched_window_fn``."""
-    key = (grid, impl)
+    (and XLA's compile cache), mirroring ``cholesky._batched_window_fn``.
+    ``use_start=True`` adds the traced ``start_tile`` argument of the
+    canonical-grid path (one cache entry per canonical rung, shared by
+    every pad depth)."""
+    key = (grid, impl, use_start)
     fn = _BATCHED_SELINV_CACHE.get(key)
     if fn is None:
-        fn = jax.jit(jax.vmap(
-            lambda dr, r, c: _selinv_impl(dr, r, c, grid, impl)))
+        if use_start:
+            fn = jax.jit(jax.vmap(
+                lambda dr, r, c, s: _selinv_impl(dr, r, c, grid, impl, s),
+                in_axes=(0, 0, 0, None)))
+        else:
+            fn = jax.jit(jax.vmap(
+                lambda dr, r, c: _selinv_impl(dr, r, c, grid, impl)))
         _BATCHED_SELINV_CACHE.put(key, fn)
     return fn
 
 
 def selinv_batched(factor: CholeskyFactor, impl: Optional[str] = None,
-                   bucket: bool = True) -> SelectedInverse:
+                   bucket: bool = True, policy=None) -> SelectedInverse:
     """Selected inversion of a batch of same-grid factors (leading batch
     axis on the CTSF arrays, as returned by ``factorize_window_batched``) in
     one vmapped dispatch.
@@ -248,9 +276,25 @@ def selinv_batched(factor: CholeskyFactor, impl: Optional[str] = None,
 
     Returns: a :class:`SelectedInverse` whose arrays carry the leading
     batch axis; ``diagonal()`` / ``covariance(i, j)`` broadcast over it.
+
+    Canonical-grid embedded factors (``factor.source_grid`` set, or
+    ``policy`` given) run on the canonical grid — the cache keys on the
+    canonical grid, so mixed-size traffic compiles one recurrence per
+    rung — and the result is restricted back to the source grid.
     """
-    ctsf = factor.ctsf
-    assert ctsf.Dr.ndim == 5, "selinv_batched needs a leading batch axis"
+    from .solve import _resolve_embedding
+    ctsf, src, pad = _resolve_embedding(factor, policy)
+    if ctsf.Dr.ndim != 5:
+        raise ValueError(f"selinv_batched needs a leading batch axis, got "
+                         f"Dr.ndim={ctsf.Dr.ndim}")
+    if src is not None:
+        from .gridpolicy import restrict_selinv
+        fn = _batched_selinv_fn(ctsf.grid, impl, use_start=True)
+        start = jnp.asarray(pad, jnp.int32)
+        call = lambda dr, r, c: fn(dr, r, c, start)
+        sd, sr, sc = bucketed_batched_call(
+            call, (ctsf.Dr, ctsf.R, ctsf.C), bucket)
+        return restrict_selinv(SelectedInverse(ctsf.grid, sd, sr, sc), src)
     sd, sr, sc = bucketed_batched_call(
         _batched_selinv_fn(ctsf.grid, impl), (ctsf.Dr, ctsf.R, ctsf.C),
         bucket)

@@ -103,12 +103,17 @@ def _forward_impl(Dr, R, C, bd, ba, grid, impl=None, start_tile=0):
 
 
 @functools.partial(jax.jit, static_argnames=("grid", "impl"))
-def _backward_impl(Dr, R, C, yd, ya, grid, impl=None):
+def _backward_impl(Dr, R, C, yd, ya, grid, impl=None, start_tile=0):
     """Solve L^T X = Y for an RHS panel: yd (ndt, t, k), ya (nat, t, k).
 
     Corner first (the arrow panel seeds the band rows), then the band part
     runs as one :func:`repro.kernels.ops.band_backward_sweep` — fused into
-    a single kernel launch under ``impl="pallas"``."""
+    a single kernel launch under ``impl="pallas"``.
+
+    ``start_tile`` mirrors the forward sweep's traced fast path: rows
+    below it (the identity prefix of a canonical-grid embedding,
+    ``core/gridpolicy.py``) are decoupled with zero RHS, so the reverse
+    sweep stops before reaching them and X stays zero there."""
     t, ndt, nat, bt = grid.t, grid.n_diag_tiles, grid.n_arrow_tiles, grid.band_tiles
     k = yd.shape[-1]
 
@@ -134,19 +139,70 @@ def _backward_impl(Dr, R, C, yd, ya, grid, impl=None):
     # band rows, reverse sweep:
     # X_m = Lmm^{-T}(Y_m - sum_{j=1..bt} L[m+j,m]^T X_{m+j} - sum_i R[m,i]^T Xa_i)
     if ndt:
-        xd = ops.band_backward_sweep(Dr, R, yd, xa, impl=impl)
+        xd = ops.band_backward_sweep(Dr, R, yd, xa, start_tile, impl=impl)
     else:
         xd = jnp.zeros((0, t, k), yd.dtype)
     return xd, xa
 
 
-def _solve_panels(Dr, R, C, bd, ba, grid, impl=None):
+def _solve_panels(Dr, R, C, bd, ba, grid, impl=None, start_tile=None):
     """Full ``A X = B`` on split panels: forward then backward sweep.  The
     single source of truth shared by :func:`solve_many` and the vmapped
     ``concurrent_solve`` — layout changes (e.g. a fused Pallas band-solve)
-    land here once."""
-    yd, ya = _forward_impl(Dr, R, C, bd, ba, grid, impl)
-    return _backward_impl(Dr, R, C, yd, ya, grid, impl)
+    land here once.  ``start_tile=None`` keeps the static-zero traces;
+    a (traced) value threads the canonical-grid prefix skip through both
+    sweeps."""
+    if start_tile is None:
+        yd, ya = _forward_impl(Dr, R, C, bd, ba, grid, impl)
+        return _backward_impl(Dr, R, C, yd, ya, grid, impl)
+    yd, ya = _forward_impl(Dr, R, C, bd, ba, grid, impl, start_tile)
+    return _backward_impl(Dr, R, C, yd, ya, grid, impl, start_tile)
+
+
+def _resolve_embedding(factor: CholeskyFactor, policy=None):
+    """Resolve the canonical-grid embedding of a factor for the solve-side
+    entry points.
+
+    Returns ``(ctsf, source_grid, start_tile)``: for a plain factor with no
+    policy that is ``(factor.ctsf, None, None)`` (static-zero sweeps); for
+    a factor already living on a canonical grid (``source_grid`` set by the
+    policy-aware factorizations) the embedding is reused as-is; for a plain
+    factor with a ``policy`` the factor itself is embedded on the fly — the
+    Cholesky factor of ``blockdiag(I, A)`` is ``blockdiag(I, L)``, so
+    identity-padding a *factor* is exact.  Note the on-the-fly path pads
+    fresh arrays *per call*: a serving loop reusing one factor should pass
+    the policy at factorization time instead, so the factor is embedded
+    once and every solve reuses it."""
+    ctsf, src = factor.ctsf, factor.source_grid
+    if src is None and policy is not None:
+        from .gridpolicy import embed_ctsf
+        cgrid = policy.canonicalize(ctsf.grid)
+        src, ctsf = ctsf.grid, embed_ctsf(ctsf, cgrid)
+    if src is None:
+        return ctsf, None, None
+    return ctsf, src, ctsf.grid.n_diag_tiles - src.n_diag_tiles
+
+
+def _embedded_panels(factor: CholeskyFactor, policy, B: jnp.ndarray):
+    """The shared front half of every policy-aware RHS entry point:
+    resolve the factor's canonical-grid embedding, lift the panel into the
+    canonical layout, and hand back the restriction mapping results home.
+
+    Returns ``(ctsf, source_grid, grid, panel, start_tile, restrict)``.
+    For a plain factor without policy the panel passes through, ``start``
+    is None (keeping the static-zero sweep traces) and ``restrict`` is the
+    identity; otherwise ``start`` is the traced prefix depth and
+    ``restrict`` slices a canonical-layout result panel (any leading batch
+    axes) back to the source layout.  Every entry point writes the
+    embed/restrict logic exactly once — here."""
+    ctsf, src, pad = _resolve_embedding(factor, policy)
+    g = ctsf.grid
+    if src is None:
+        return ctsf, src, g, B, None, lambda X: X
+    from .gridpolicy import embed_rhs, restrict_rhs
+    return (ctsf, src, g, embed_rhs(B, src, g),
+            jnp.asarray(pad, jnp.int32),
+            lambda X: restrict_rhs(X, src, g))
 
 
 def _merge_panels(xd: jnp.ndarray, xa: jnp.ndarray) -> jnp.ndarray:
@@ -160,7 +216,7 @@ def _merge_panels(xd: jnp.ndarray, xa: jnp.ndarray) -> jnp.ndarray:
 
 def forward_solve_many(factor: CholeskyFactor, B: jnp.ndarray,
                        impl: Optional[str] = None,
-                       start_tile: int = 0) -> jnp.ndarray:
+                       start_tile: int = 0, policy=None) -> jnp.ndarray:
     """Solve ``L Y = B`` for a panel of right-hand sides in one blocked sweep.
 
     Args:
@@ -184,33 +240,50 @@ def forward_solve_many(factor: CholeskyFactor, B: jnp.ndarray,
     nonzero ``start_tile`` uses a dynamic-bound loop variant on the ref
     path (not reverse-differentiable), so ``start_tile=0`` keeps its own
     static-bound compilation.
+
+    Embedded factors (``factor.source_grid`` set, or ``policy`` given —
+    see ``core/gridpolicy.py``) take and return panels in the *source*
+    grid's padded layout; the canonical embedding, the identity-prefix
+    fast start and the restriction are handled here, and ``start_tile``
+    keeps its source-grid meaning.
     """
-    ctsf = factor.ctsf
-    bd, ba = _split_rhs(ctsf.grid, B)
-    if start_tile:
+    ctsf, src, g, B, start, restrict = _embedded_panels(factor, policy, B)
+    bd, ba = _split_rhs(g, B)
+    if start is not None:
+        # caller's start_tile is in source band-tile coordinates; the
+        # embedded sweep starts past the identity prefix on top of it
+        eff = start + min(int(start_tile), src.n_diag_tiles) if start_tile \
+            else start
+        yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g, impl, eff)
+    elif start_tile:
         # traced loop bound: no recompile per distinct start, but the sweep
         # becomes a dynamic-bound while_loop (not reverse-differentiable) —
         # so the common start_tile=0 path keeps its static bounds below.
-        yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, ctsf.grid,
+        yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g,
                                impl, start_tile)
     else:
-        yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, ctsf.grid,
-                               impl)
-    return _merge_panels(yd, ya)
+        yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g, impl)
+    return restrict(_merge_panels(yd, ya))
 
 
 def backward_solve_many(factor: CholeskyFactor, Y: jnp.ndarray,
-                        impl: Optional[str] = None) -> jnp.ndarray:
+                        impl: Optional[str] = None,
+                        policy=None) -> jnp.ndarray:
     """Solve ``L^T X = Y`` for an (padded_n, k) panel of right-hand sides in
-    one blocked sweep."""
-    ctsf = factor.ctsf
-    yd, ya = _split_rhs(ctsf.grid, Y)
-    xd, xa = _backward_impl(ctsf.Dr, ctsf.R, ctsf.C, yd, ya, ctsf.grid, impl)
-    return _merge_panels(xd, xa)
+    one blocked sweep.  Embedded factors take/return panels in the source
+    layout (cf. :func:`forward_solve_many`)."""
+    ctsf, _, g, Y, start, restrict = _embedded_panels(factor, policy, Y)
+    yd, ya = _split_rhs(g, Y)
+    if start is not None:
+        xd, xa = _backward_impl(ctsf.Dr, ctsf.R, ctsf.C, yd, ya, g, impl,
+                                start)
+    else:
+        xd, xa = _backward_impl(ctsf.Dr, ctsf.R, ctsf.C, yd, ya, g, impl)
+    return restrict(_merge_panels(xd, xa))
 
 
 def solve_many(factor: CholeskyFactor, B: jnp.ndarray,
-               impl: Optional[str] = None) -> jnp.ndarray:
+               impl: Optional[str] = None, policy=None) -> jnp.ndarray:
     """``A X = B`` for a panel of right-hand sides via ``L L^T``.
 
     Equivalent to stacking k :func:`solve` calls but swept once: each band
@@ -229,11 +302,18 @@ def solve_many(factor: CholeskyFactor, B: jnp.ndarray,
 
     Recompiles once per ``(grid, impl, k)`` — serving with a fixed panel
     width never retraces; pad k up to a bucket if widths vary.
+
+    Embedded factors (``factor.source_grid`` set by the policy-aware
+    factorizations, or ``policy`` given) take and return panels in the
+    *source* grid's padded layout: the canonical-grid embedding keys the
+    compile on the canonical grid — one compile per (canonical rung, k)
+    across all source grids — and both sweeps skip the identity prefix
+    via their traced ``start_tile``.
     """
-    ctsf = factor.ctsf
-    bd, ba = _split_rhs(ctsf.grid, B)
-    xd, xa = _solve_panels(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, ctsf.grid, impl)
-    return _merge_panels(xd, xa)
+    ctsf, _, g, B, start, restrict = _embedded_panels(factor, policy, B)
+    bd, ba = _split_rhs(g, B)
+    xd, xa = _solve_panels(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g, impl, start)
+    return restrict(_merge_panels(xd, xa))
 
 
 def forward_solve(factor: CholeskyFactor, b: jnp.ndarray,
@@ -249,19 +329,26 @@ def backward_solve(factor: CholeskyFactor, y: jnp.ndarray,
 
 
 def solve(factor: CholeskyFactor, b: jnp.ndarray,
-          impl: Optional[str] = None) -> jnp.ndarray:
+          impl: Optional[str] = None, policy=None) -> jnp.ndarray:
     """A x = b via L L^T."""
-    return backward_solve(factor, forward_solve(factor, b, impl), impl)
+    return solve_many(factor, b.reshape(-1, 1), impl, policy=policy)[:, 0]
 
 
 def logdet(factor: CholeskyFactor) -> jnp.ndarray:
     return factor.logdet()
 
 
+def _rhs_grid(factor: CholeskyFactor):
+    """The grid whose padded layout RHS panels use: the *source* grid for
+    canonical-grid embedded factors, the factor's own grid otherwise."""
+    return factor.source_grid or factor.ctsf.grid
+
+
 def sample_gmrf(factor: CholeskyFactor, key: jax.Array,
                 impl: Optional[str] = None) -> jnp.ndarray:
     """Draw x ~ N(0, A^{-1}) via x = L^{-T} z (the INLA sampling primitive)."""
-    z = jax.random.normal(key, (factor.ctsf.grid.padded_n,), dtype=jnp.float32)
+    z = jax.random.normal(key, (_rhs_grid(factor).padded_n,),
+                          dtype=jnp.float32)
     return backward_solve(factor, z, impl)
 
 
@@ -273,8 +360,10 @@ def sample_gmrf_many(factor: CholeskyFactor, key: jax.Array, num: int,
     kernel launch under ``impl="pallas"``) — the serving-path analogue of
     :func:`sample_gmrf`, amortizing the factor over the whole batch of
     posterior realizations.  Recompiles once per ``(grid, impl, num)``.
+    For embedded factors ``z`` is drawn in the source layout, so a
+    bucketed factor reproduces the unbucketed samples bit-for-bit per key.
     """
-    z = jax.random.normal(key, (factor.ctsf.grid.padded_n, num),
+    z = jax.random.normal(key, (_rhs_grid(factor).padded_n, num),
                           dtype=jnp.float32)
     return backward_solve_many(factor, z, impl)
 
@@ -296,7 +385,8 @@ def _validate_indices(grid, indices) -> np.ndarray:
 
 def marginal_variances(factor: CholeskyFactor, indices: jnp.ndarray,
                        method: str = "selinv",
-                       impl: Optional[str] = None) -> jnp.ndarray:
+                       impl: Optional[str] = None,
+                       policy=None) -> jnp.ndarray:
     """Selected diagonal of A^{-1} — INLA's posterior marginal variances.
 
     Two paths over the same factor:
@@ -325,12 +415,19 @@ def marginal_variances(factor: CholeskyFactor, indices: jnp.ndarray,
     panels path once per ``(grid, impl, k)`` — the sweep's start tile is
     traced, so *which* indices are selected never forces a retrace, only
     how many.
+
+    Indices always refer to the *source* matrix: for canonical-grid
+    embedded factors (``factor.source_grid`` set, or ``policy`` given)
+    both paths validate against the source structure and return the source
+    problem's variances; the embedding/restriction rides the policy-aware
+    machinery of :func:`repro.core.selinv.selected_inverse` /
+    :func:`forward_solve_many`.
     """
-    g = factor.ctsf.grid
+    g = _rhs_grid(factor)
     padded = _validate_indices(g, indices)
     if method == "selinv":
         from .selinv import selected_inverse
-        sigma = selected_inverse(factor, impl=impl)
+        sigma = selected_inverse(factor, impl=impl, policy=policy)
         return jnp.take(sigma.diagonal(padded=True), jnp.asarray(padded),
                         axis=-1)
     if method == "panels":
@@ -340,7 +437,8 @@ def marginal_variances(factor: CholeskyFactor, indices: jnp.ndarray,
         # RHS sparsity: unit-vector panels are zero above the selected row,
         # so the band sweep starts at the first tile holding a nonzero.
         start = min(int(padded.min()) // g.t, g.n_diag_tiles) if k else 0
-        Y = forward_solve_many(factor, E, impl=impl, start_tile=start)
+        Y = forward_solve_many(factor, E, impl=impl, start_tile=start,
+                               policy=policy)
         return jnp.sum(Y * Y, axis=0)
     raise ValueError(f"unknown method {method!r} (want 'selinv' or 'panels')")
 
@@ -350,7 +448,7 @@ def _marginal_variances_map(factor: CholeskyFactor,
     """Pre-batching reference: one forward sweep per selected index via
     ``lax.map`` (k sequential O(n·b) solves).  Used by tests and
     ``benchmarks/bench_solve.py`` as the comparison baseline."""
-    g = factor.ctsf.grid
+    g = _rhs_grid(factor)
 
     def one(i):
         e = jnp.zeros((g.padded_n,), jnp.float32).at[i].set(1.0)

@@ -76,6 +76,48 @@ class TileGrid:
         if self.t <= 0:
             raise ValueError("tile size must be positive")
 
+    @classmethod
+    def from_tile_counts(cls, t: int, n_diag_tiles: int, band_tiles: int,
+                         n_arrow_tiles: int) -> "TileGrid":
+        """Construct the *tile-aligned* grid with exactly the given tile
+        counts — the canonical-grid constructor of
+        :mod:`repro.core.gridpolicy`.
+
+        The underlying :class:`ArrowheadStructure` is chosen so every
+        derived property round-trips (``n_diag = n_diag_tiles * t``,
+        ``arrow = n_arrow_tiles * t``, ``bandwidth = band_tiles*t - 1``),
+        i.e. ``padded_n == n`` and ``padded_index`` is the identity.  Two
+        calls with equal tile counts produce equal (hashable) grids, which
+        is what makes canonical grids usable as compile-cache keys.
+        """
+        if n_diag_tiles < 0 or n_arrow_tiles < 0 or band_tiles < 0:
+            raise ValueError("tile counts must be >= 0")
+        if n_diag_tiles == 0 and band_tiles > 0:
+            raise ValueError("band_tiles > 0 needs a diagonal part")
+        if n_diag_tiles > 0 and band_tiles > n_diag_tiles - 1:
+            raise ValueError(
+                f"band_tiles={band_tiles} exceeds n_diag_tiles-1="
+                f"{n_diag_tiles - 1}")
+        if n_diag_tiles > 1 and band_tiles == 0:
+            # the band_tiles property maps any bandwidth >= 0 to >= 1 when
+            # there is more than one diagonal tile, so bt=0 is representable
+            # only for single-tile (or empty) diagonal parts
+            raise ValueError("band_tiles=0 needs n_diag_tiles <= 1")
+        structure = ArrowheadStructure(
+            n=(n_diag_tiles + n_arrow_tiles) * t,
+            bandwidth=max(band_tiles * t - 1, 0),
+            arrow=n_arrow_tiles * t)
+        grid = cls(structure, t)
+        derived = (grid.n_diag_tiles, grid.band_tiles, grid.n_arrow_tiles)
+        if derived != (n_diag_tiles, band_tiles, n_arrow_tiles):
+            # the round-trip is what makes canonical grids trustworthy as
+            # compile-cache keys — fail loudly even under `python -O`
+            raise RuntimeError(
+                f"tile-count round-trip failed: requested "
+                f"{(n_diag_tiles, band_tiles, n_arrow_tiles)}, derived "
+                f"{derived} (constructor bug)")
+        return grid
+
     @property
     def n_diag_tiles(self) -> int:
         return max(1, math.ceil(self.structure.n_diag / self.t)) if self.structure.n_diag > 0 else 0

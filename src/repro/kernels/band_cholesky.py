@@ -47,16 +47,17 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .potrf import factorize_tile
-from .ring import chunk_layout, ring_read, ring_write
+from .ring import chunk_layout, identity_prefix_panel, ring_read, ring_write
 from .trsm import substitute_right
 
 __all__ = ["band_cholesky_sweep_pallas"]
 
 
-def _band_cholesky_kernel(ac_ref, r_ref, p_ref, ro_ref, sch_ref,
+def _band_cholesky_kernel(start_ref, ac_ref, r_ref, p_ref, ro_ref, sch_ref,
                           ring_ref, ringa_ref, sacc_ref,
                           *, bt: int, nat_p: int, csz: int):
     k = pl.program_id(0)
+    start = start_ref[0]
     t = ac_ref.shape[-1]
 
     @pl.when(k == 0)
@@ -68,61 +69,77 @@ def _band_cholesky_kernel(ac_ref, r_ref, p_ref, ro_ref, sch_ref,
     def _chunk_init():
         sacc_ref[...] = jnp.zeros_like(sacc_ref)
 
-    # The last bt finalized column panels from the VMEM rings (zeros for
-    # k-j < 0 from the step-0 init).  bt is small and static, so the j/e
-    # loops unroll — every pair is one MXU matmul with no gather/masking.
-    prev = [ring_read(ring_ref, k - j, bt) for j in range(1, bt + 1)]
-    preva = [ring_read(ringa_ref, k - j, bt) for j in range(1, bt + 1)]
-    # rhs_j = L[k, k-j] = panel_{k-j}[j]
-    rhs = [prev[j - 1][j] for j in range(1, bt + 1)]
+    # Canonical-grid fast start (core/gridpolicy.py): columns k < start
+    # are the identity-embedding prefix, whose factor is known — an
+    # identity panel with zero arrow rows — so the whole update/potrf/trsm
+    # body is skipped.  The prefix forms a contiguous head of the walk and
+    # its ring slots keep the step-0 zeros; later columns read rhs_j =
+    # panel_{k-j}[j], an off-diagonal slot that is zero for identity
+    # panels, so skipping the ring writes is exact.
+    @pl.when(k < start)
+    def _skip():
+        p_ref[0] = identity_prefix_panel(bt, t).astype(p_ref.dtype)
+        ro_ref[0] = jnp.zeros_like(ro_ref[0])
+        sch_ref[0] = sacc_ref[...].astype(sch_ref.dtype)
 
-    # left-looking band update: U[e] = sum_j L[k+e, k-j] @ L[k, k-j]^T
-    # (e = 0 is the SYRK chain, e > 0 the GEMM chains; e+j > bt pairs are
-    # structurally outside the band)
-    u = []
-    for e in range(bt + 1):
-        acc = jnp.zeros((t, t), jnp.float32)
-        for j in range(1, bt + 1 - e):
-            acc = acc + jax.lax.dot_general(
-                prev[j - 1][e + j], rhs[j - 1], (((1,), (1,)), ((), ())),
+    @pl.when(k >= start)
+    def _work():
+        # The last bt finalized column panels from the VMEM rings (zeros
+        # for k-j < 0 from the step-0 init).  bt is small and static, so
+        # the j/e loops unroll — every pair is one MXU matmul with no
+        # gather/masking.
+        prev = [ring_read(ring_ref, k - j, bt) for j in range(1, bt + 1)]
+        preva = [ring_read(ringa_ref, k - j, bt) for j in range(1, bt + 1)]
+        # rhs_j = L[k, k-j] = panel_{k-j}[j]
+        rhs = [prev[j - 1][j] for j in range(1, bt + 1)]
+
+        # left-looking band update: U[e] = sum_j L[k+e, k-j] @ L[k, k-j]^T
+        # (e = 0 is the SYRK chain, e > 0 the GEMM chains; e+j > bt pairs
+        # are structurally outside the band)
+        u = []
+        for e in range(bt + 1):
+            acc = jnp.zeros((t, t), jnp.float32)
+            for j in range(1, bt + 1 - e):
+                acc = acc + jax.lax.dot_general(
+                    prev[j - 1][e + j], rhs[j - 1], (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            u.append(acc)
+
+        # arrow-row update: V[i] = sum_j L[ndt+i, k-j] @ L[k, k-j]^T
+        va = jnp.zeros((nat_p, t, t), jnp.float32)
+        for j in range(1, bt + 1):
+            va = va + jax.lax.dot_general(
+                preva[j - 1], rhs[j - 1], (((2,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32)
-        u.append(acc)
 
-    # arrow-row update: V[i] = sum_j L[ndt+i, k-j] @ L[k, k-j]^T
-    va = jnp.zeros((nat_p, t, t), jnp.float32)
-    for j in range(1, bt + 1):
-        va = va + jax.lax.dot_general(
-            preva[j - 1], rhs[j - 1], (((2,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32)
+        # diagonal tile, then the whole sub-diagonal panel + arrow rows in
+        # one batched right-substitution against the fresh L_kk
+        lkk = factorize_tile(ac_ref[0, 0].astype(jnp.float32) - u[0])
+        band_rhs = [ac_ref[0, e].astype(jnp.float32) - u[e]
+                    for e in range(1, bt + 1)]
+        arrow_rhs = r_ref[0].astype(jnp.float32) - va
+        stack = jnp.concatenate([jnp.stack(band_rhs), arrow_rhs], axis=0) \
+            if bt else arrow_rhs
+        sol = substitute_right(lkk, stack)                # (bt+nat_p, t, t)
+        panel = jnp.concatenate([lkk[None], sol[:bt]], axis=0)
+        la = sol[bt:]
 
-    # diagonal tile, then the whole sub-diagonal panel + arrow rows in one
-    # batched right-substitution against the fresh L_kk
-    lkk = factorize_tile(ac_ref[0, 0].astype(jnp.float32) - u[0])
-    band_rhs = [ac_ref[0, e].astype(jnp.float32) - u[e]
-                for e in range(1, bt + 1)]
-    arrow_rhs = r_ref[0].astype(jnp.float32) - va
-    stack = jnp.concatenate([jnp.stack(band_rhs), arrow_rhs], axis=0) \
-        if bt else arrow_rhs
-    sol = substitute_right(lkk, stack)                    # (bt+nat_p, t, t)
-    panel = jnp.concatenate([lkk[None], sol[:bt]], axis=0)
-    la = sol[bt:]
+        if bt:
+            ring_write(ring_ref, k, bt, panel)
+            ring_write(ringa_ref, k, bt, la)
 
-    if bt:
-        ring_write(ring_ref, k, bt, panel)
-        ring_write(ringa_ref, k, bt, la)
+        # corner-Schur partial sums on the fly: sacc[i,j] += La[i] @ La[j]^T
+        ss = jax.lax.dot_general(la, la, (((2,), (2,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        sacc_ref[...] += jnp.transpose(ss, (0, 2, 1, 3))
+        sch_ref[0] = sacc_ref[...].astype(sch_ref.dtype)
 
-    # corner-Schur partial sums on the fly: sacc[i, j] += La[i] @ La[j]^T
-    ss = jax.lax.dot_general(la, la, (((2,), (2,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    sacc_ref[...] += jnp.transpose(ss, (0, 2, 1, 3))
-    sch_ref[0] = sacc_ref[...].astype(sch_ref.dtype)
-
-    p_ref[0] = panel.astype(p_ref.dtype)
-    ro_ref[0] = la.astype(ro_ref.dtype)
+        p_ref[0] = panel.astype(p_ref.dtype)
+        ro_ref[0] = la.astype(ro_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("nchunks", "interpret"))
-def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1,
+def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1, start_tile=0,
                                interpret: bool = True):
     """Fused band+arrow Cholesky sweep.  Ac: (ndt, bt+1, t, t) column-band
     tiles (``Ac[k, e] = A[k+e, k]``, see ``ring.band_row_to_col``), R:
@@ -132,6 +149,11 @@ def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1,
       R_out  (ndt, nat, t, t)       factored arrow rows L[ndt+i, k]
       schur  (nch, nat, nat, t, t)  per-chunk partial sums of R_out·R_outᵀ
                                     (``nch = chunk_layout(ndt, nchunks)[1]``)
+
+    ``start_tile`` (traced SMEM scalar) declares columns ``k < start_tile``
+    an identity-embedding prefix (``core/gridpolicy.py``): they emit
+    identity panels / zero arrow rows without any update, potrf or trsm
+    work, so canonical-grid diagonal slack costs ~0 compute.
 
     Matches ``ref.band_cholesky_sweep_ref`` to fp32 tolerance.
     """
@@ -147,10 +169,12 @@ def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1,
     # tile row (its factor and Schur terms vanish) and slice the output back.
     nat_p = max(nat, 1)
     rp = R if nat else jnp.zeros((ndt, 1, t, t), Ac.dtype)
+    start = jnp.reshape(jnp.asarray(start_tile, jnp.int32), (1,))
     panels, ro, schur = pl.pallas_call(
         functools.partial(_band_cholesky_kernel, bt=bt, nat_p=nat_p, csz=csz),
         grid=(ndt,),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, b1, t, t), lambda k: (k, 0, 0, 0)),
             pl.BlockSpec((1, nat_p, t, t), lambda k: (k, 0, 0, 0)),
         ],
@@ -171,5 +195,5 @@ def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1,
             pltpu.VMEM((nat_p, nat_p, t, t), jnp.float32),
         ],
         interpret=interpret,
-    )(Ac, rp)
+    )(start, Ac, rp)
     return panels, ro[:, :nat], schur[:, :nat, :nat]

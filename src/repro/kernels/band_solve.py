@@ -151,10 +151,11 @@ def band_forward_sweep_pallas(Dr, R, bd, start_tile=0, interpret: bool = True):
 # Backward sweep: L^T X = Y over the band, arrow term folded in per step
 # ---------------------------------------------------------------------------
 
-def _band_backward_kernel(lcol_ref, r_ref, y_ref, xa_ref, x_ref, ring_ref,
-                          *, ndt: int, bt: int):
+def _band_backward_kernel(start_ref, lcol_ref, r_ref, y_ref, xa_ref, x_ref,
+                          ring_ref, *, ndt: int, bt: int):
     s = pl.program_id(0)
     m = ndt - 1 - s
+    start = start_ref[0]
     t = lcol_ref.shape[-1]
     k = y_ref.shape[-1]
 
@@ -162,33 +163,51 @@ def _band_backward_kernel(lcol_ref, r_ref, y_ref, xa_ref, x_ref, ring_ref,
     def _init():
         ring_ref[...] = jnp.zeros_like(ring_ref)
 
-    # acc = sum_{j=1..bt} L[m+j, m]^T @ X_{m+j}; lcol[m, j] = L[m+j, m] is
-    # zero-padded past ndt and unvisited ring slots hold zeros.
-    acc = ring_accumulate(
-        ring_ref, m, bt, jnp.zeros((t, k), jnp.float32),
-        lambda j, xnext: jax.lax.dot_general(
-            lcol_ref[0, j].astype(jnp.float32), xnext,
-            (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32),
-        step=1)
+    # Canonical-grid fast finish (the mirror of the forward sweep's fast
+    # start): rows below start_tile are the identity-embedding prefix with
+    # zero RHS, decoupled from the rest — they solve to zero, and since
+    # they form a contiguous suffix of this reverse walk nothing reads
+    # them afterwards, so the whole step body is skipped.
+    @pl.when(m < start)
+    def _skip():
+        x_ref[0] = jnp.zeros_like(x_ref[0])
 
-    # arrow term: sum_i R[m, i]^T @ Xa_i (contract arrow tile + row dims)
-    r = r_ref[0].astype(jnp.float32)                     # (nat_p, t, t)
-    xa = xa_ref[...].astype(jnp.float32)                 # (nat_p, t, k)
-    acc = acc + jax.lax.dot_general(
-        r, xa, (((0, 1), (0, 1)), ((), ())), preferred_element_type=jnp.float32)
+    @pl.when(m >= start)
+    def _work():
+        # acc = sum_{j=1..bt} L[m+j, m]^T @ X_{m+j}; lcol[m, j] = L[m+j, m]
+        # is zero-padded past ndt and unvisited ring slots hold zeros.
+        acc = ring_accumulate(
+            ring_ref, m, bt, jnp.zeros((t, k), jnp.float32),
+            lambda j, xnext: jax.lax.dot_general(
+                lcol_ref[0, j].astype(jnp.float32), xnext,
+                (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32),
+            step=1)
 
-    rhs = y_ref[0].astype(jnp.float32) - acc
-    xm = substitute_panel(lcol_ref[0, 0].astype(jnp.float32), rhs, trans=True)
-    x_ref[0] = xm.astype(x_ref.dtype)
-    if bt:
-        ring_write(ring_ref, m, bt, xm)
+        # arrow term: sum_i R[m, i]^T @ Xa_i (contract arrow tile + row dims)
+        r = r_ref[0].astype(jnp.float32)                 # (nat_p, t, t)
+        xa = xa_ref[...].astype(jnp.float32)             # (nat_p, t, k)
+        acc2 = acc + jax.lax.dot_general(
+            r, xa, (((0, 1), (0, 1)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        rhs = y_ref[0].astype(jnp.float32) - acc2
+        xm = substitute_panel(lcol_ref[0, 0].astype(jnp.float32), rhs,
+                              trans=True)
+        x_ref[0] = xm.astype(x_ref.dtype)
+        if bt:
+            ring_write(ring_ref, m, bt, xm)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def band_backward_sweep_pallas(Dr, R, yd, xa, interpret: bool = True):
+def band_backward_sweep_pallas(Dr, R, yd, xa, start_tile=0,
+                               interpret: bool = True):
     """Fused backward band sweep.  Dr: (ndt, bt+1, t, t), R: (ndt, nat, t, t),
     yd: (ndt, t, k) forward-solved panel, xa: (nat, t, k) already-solved
     arrow panel -> xd (ndt, t, k) with ``L^T X = Y - R^T Xa`` on the band.
+
+    ``start_tile`` (traced SMEM scalar, like the forward sweep's) skips
+    rows ``m < start_tile`` — the identity prefix of a canonical-grid
+    embedding — leaving X identically zero there.
 
     Matches ``ref.band_backward_sweep_ref`` to fp32 tolerance.
     """
@@ -204,10 +223,12 @@ def band_backward_sweep_pallas(Dr, R, yd, xa, interpret: bool = True):
     nat_p = max(nat, 1)
     rp = R if nat else jnp.zeros((ndt, 1, t, t), Dr.dtype)
     xap = xa if nat else jnp.zeros((1, t, k), yd.dtype)
+    start = jnp.reshape(jnp.asarray(start_tile, jnp.int32), (1,))
     return pl.pallas_call(
         functools.partial(_band_backward_kernel, ndt=ndt, bt=bt),
         grid=(ndt,),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, b1, t, t), lambda s: (ndt - 1 - s, 0, 0, 0)),
             pl.BlockSpec((1, nat_p, t, t), lambda s: (ndt - 1 - s, 0, 0, 0)),
             pl.BlockSpec((1, t, k), lambda s: (ndt - 1 - s, 0, 0)),
@@ -217,4 +238,4 @@ def band_backward_sweep_pallas(Dr, R, yd, xa, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((ndt, t, k), yd.dtype),
         scratch_shapes=[pltpu.VMEM((max(bt, 1), t, k), jnp.float32)],
         interpret=interpret,
-    )(lcol, rp, yd, xap)
+    )(start, lcol, rp, yd, xap)

@@ -132,18 +132,22 @@ def band_forward_sweep(Dr: jnp.ndarray, R: jnp.ndarray, bd: jnp.ndarray,
 
 
 def band_backward_sweep(Dr: jnp.ndarray, R: jnp.ndarray, yd: jnp.ndarray,
-                        xa: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:
+                        xa: jnp.ndarray, start_tile=0,
+                        impl: Impl | None = None) -> jnp.ndarray:
     """Whole-band multi-RHS backward sweep: solve ``L^T X = Y - R^T Xa``
     over all band tile rows in reverse — the transpose counterpart of
-    :func:`band_forward_sweep`, with the same backend split."""
+    :func:`band_forward_sweep`, with the same backend split.
+    ``start_tile`` (traced) skips the identity-embedding prefix rows of a
+    canonical grid, leaving X zero there."""
     impl = impl or default_impl()
     if impl == "pallas":
-        return band_backward_sweep_pallas(Dr, R, yd, xa, interpret=_interp())
-    return ref.band_backward_sweep_ref(Dr, R, yd, xa)
+        return band_backward_sweep_pallas(Dr, R, yd, xa, start_tile,
+                                          interpret=_interp())
+    return ref.band_backward_sweep_ref(Dr, R, yd, xa, start_tile)
 
 
 def band_cholesky_sweep(Ac: jnp.ndarray, R: jnp.ndarray, nchunks: int = 1,
-                        impl: Impl | None = None):
+                        start_tile=0, impl: Impl | None = None):
     """Whole band+arrow Cholesky factorization as one sweep-level primitive:
     ``Ac (ndt, bt+1, t, t)`` column-band tiles and ``R (ndt, nat, t, t)``
     arrow rows -> ``(panels, R_out, schur)`` column panels of L, factored
@@ -154,16 +158,23 @@ def band_cholesky_sweep(Ac: jnp.ndarray, R: jnp.ndarray, nchunks: int = 1,
     ring of the last band_tiles panels + arrow ring, in-kernel potrf/trsm,
     Schur accumulated on the fly); ``"ref"`` the ring-buffer ``lax.scan``
     that dispatches per-panel tile ops.  This is what
-    ``core.cholesky._factorize_window_impl`` rides on every backend."""
+    ``core.cholesky._factorize_window_impl`` rides on every backend.
+
+    ``start_tile`` (traced) declares the first ``start_tile`` columns an
+    identity-embedding prefix (``core/gridpolicy.py``): both backends emit
+    identity panels / zero arrow rows for them, and the fused kernel skips
+    their compute entirely."""
     impl = impl or default_impl()
     if impl == "pallas":
         return band_cholesky_sweep_pallas(Ac, R, nchunks=nchunks,
+                                          start_tile=start_tile,
                                           interpret=_interp())
-    return ref.band_cholesky_sweep_ref(Ac, R, nchunks=nchunks)
+    return ref.band_cholesky_sweep_ref(Ac, R, nchunks=nchunks,
+                                       start_tile=start_tile)
 
 
 def selinv_sweep(lcol: jnp.ndarray, R: jnp.ndarray, sc_full: jnp.ndarray,
-                 impl: Impl | None = None):
+                 start_tile=0, impl: Impl | None = None):
     """Whole backward Takahashi recurrence as one sweep-level primitive:
     ``lcol (ndt, bt+1, t, t)`` column view of the factor, ``R`` its arrow
     rows and ``sc_full (nat, nat, t, t)`` the dense corner Σ seed ->
@@ -173,11 +184,13 @@ def selinv_sweep(lcol: jnp.ndarray, R: jnp.ndarray, sc_full: jnp.ndarray,
     ring resident in VMEM across columns — the ROADMAP's selinv-fusion
     item); ``"ref"`` the per-column ``lax.scan`` of ``selinv_step``
     contractions.  Backs ``core.selinv.selected_inverse`` on every
-    backend."""
+    backend.  ``start_tile`` (traced) skips the identity-embedding prefix
+    columns of a canonical grid, emitting identity Σ panels there."""
     impl = impl or default_impl()
     if impl == "pallas":
-        return selinv_sweep_pallas(lcol, R, sc_full, interpret=_interp())
-    return ref.selinv_sweep_ref(lcol, R, sc_full)
+        return selinv_sweep_pallas(lcol, R, sc_full, start_tile,
+                                   interpret=_interp())
+    return ref.selinv_sweep_ref(lcol, R, sc_full, start_tile)
 
 
 def band_update(w: jnp.ndarray, impl: Impl | None = None) -> jnp.ndarray:

@@ -115,7 +115,7 @@ def band_forward_sweep_ref(Dr: jnp.ndarray, R: jnp.ndarray, bd: jnp.ndarray,
 
 
 def band_backward_sweep_ref(Dr: jnp.ndarray, R: jnp.ndarray, yd: jnp.ndarray,
-                            xa: jnp.ndarray) -> jnp.ndarray:
+                            xa: jnp.ndarray, start_tile=0) -> jnp.ndarray:
     """Multi-RHS backward band sweep: solve ``L^T X = Y - R^T Xa`` over the
     band rows in reverse, one ``solve_panel(trans=True)`` per tile row —
     the per-tile-looped reference for the fused Pallas backward sweep.
@@ -125,6 +125,12 @@ def band_backward_sweep_ref(Dr: jnp.ndarray, R: jnp.ndarray, yd: jnp.ndarray,
             xa (nat, t, k)  already-solved arrow panel
     Output: xd (ndt, t, k) with
             X_m = Lmm^{-T}(Y_m - sum_j L[m+j,m]^T X_{m+j} - sum_i R[m,i]^T Xa_i)
+
+    ``start_tile`` mirrors the forward sweep's RHS-sparsity fast path for
+    canonical-grid embeddings (``core/gridpolicy.py``): rows
+    ``m < start_tile`` are an identity-diagonal prefix decoupled from the
+    rest with zero RHS, so the sweep stops before them and leaves X zero
+    there.  May be traced (the loop bound turns dynamic).
     """
     ndt, b1, t, _ = Dr.shape
     bt = b1 - 1
@@ -150,12 +156,13 @@ def band_backward_sweep_ref(Dr: jnp.ndarray, R: jnp.ndarray, yd: jnp.ndarray,
         xm = solve_panel_ref(lmm, ym - acc, trans=True)
         return jax.lax.dynamic_update_slice(xp, xm[None], (m, 0, 0))
 
-    xp = jax.lax.fori_loop(0, ndt, step, xp) if ndt else xp
+    # the sweep walks m = ndt-1 .. start_tile; skipped prefix rows stay zero
+    xp = jax.lax.fori_loop(0, ndt - start_tile, step, xp) if ndt else xp
     return xp[:ndt]
 
 
 def band_cholesky_sweep_ref(Ac: jnp.ndarray, R: jnp.ndarray,
-                            nchunks: int = 1):
+                            nchunks: int = 1, start_tile=0):
     """Whole band+arrow Cholesky sweep: the ring-buffer ``lax.scan``
     (originally ``core/cholesky.py``'s ring sweep) — the per-panel-looped
     semantics the fused Pallas sweep must match.
@@ -171,12 +178,20 @@ def band_cholesky_sweep_ref(Ac: jnp.ndarray, R: jnp.ndarray,
     Panel k only ever reads the last bt panels' outputs, so the scan
     carries a (bt, bt+1, t, t) ring of recent panels (plus the arrow
     ring): an O(b²·t²) working set, no scatters.
+
+    ``start_tile`` (may be traced) declares columns ``k < start_tile`` an
+    identity-diagonal prefix (the canonical-grid embedding of
+    ``core/gridpolicy.py``): their input is *assumed* to be the identity
+    embedding column and their output is its factor — an identity panel
+    with zero arrow row — without reading the input, matching the fused
+    kernel's compute-skip exactly.
     """
     from .ring import chunk_layout
 
     ndt, b1, t, _ = Ac.shape
     bt = b1 - 1
     nat = R.shape[1]
+    skip = not (isinstance(start_tile, int) and start_tile == 0)
 
     # shifted-gather indices for the ring contraction: for ring slot j-1
     # (panel k-j) pair (offset e+j with offset j)
@@ -190,7 +205,17 @@ def band_cholesky_sweep_ref(Ac: jnp.ndarray, R: jnp.ndarray,
 
     def body(carry, xs):
         ring, ring_a = carry                              # (bt,b1,t,t), (bt,nat,t,t)
-        a_col, r_col = xs                                 # (b1,t,t), (nat,t,t)
+        if skip:
+            # prefix columns: replace the input by the identity embedding
+            # column, whose factor the normal step computes NaN-free
+            # (potrf(I)=I, trsm(I, 0)=0)
+            from .ring import identity_prefix_panel
+            a_col, r_col, kk = xs
+            id_col = identity_prefix_panel(bt, t, Ac.dtype)
+            a_col = jnp.where(kk < start_tile, id_col, a_col)
+            r_col = jnp.where(kk < start_tile, jnp.zeros_like(r_col), r_col)
+        else:
+            a_col, r_col = xs                             # (b1,t,t), (nat,t,t)
         if bt:
             shifted = jnp.take_along_axis(
                 ring, src[:, :, None, None], axis=1)      # (bt,b1,t,t)
@@ -216,8 +241,9 @@ def band_cholesky_sweep_ref(Ac: jnp.ndarray, R: jnp.ndarray,
 
     ring0 = jnp.zeros((bt, b1, t, t), Ac.dtype)
     ring_a0 = jnp.zeros((bt, nat, t, t), Ac.dtype)
+    xs = (Ac, R, jnp.arange(ndt)) if skip else (Ac, R)
     if ndt:
-        _, (panels, R_out) = jax.lax.scan(body, (ring0, ring_a0), (Ac, R))
+        _, (panels, R_out) = jax.lax.scan(body, (ring0, ring_a0), xs)
     else:
         panels, R_out = Ac, R
 
@@ -230,7 +256,7 @@ def band_cholesky_sweep_ref(Ac: jnp.ndarray, R: jnp.ndarray,
 
 
 def selinv_sweep_ref(lcol: jnp.ndarray, R: jnp.ndarray,
-                     sc_full: jnp.ndarray):
+                     sc_full: jnp.ndarray, start_tile=0):
     """Whole backward Takahashi recurrence: the Σ-column ring ``lax.scan``
     (originally ``core/selinv.py``'s backward sweep) — the per-column-looped
     semantics the fused Pallas selinv sweep must match.
@@ -246,6 +272,12 @@ def selinv_sweep_ref(lcol: jnp.ndarray, R: jnp.ndarray,
     + arrow rows + corner) against the normalized factor column
     G_kj = L_kj L_jj^{-1} (one :func:`selinv_step_ref`), walking columns
     j = ndt-1..0 with a ring of the last bt computed Σ columns.
+
+    ``start_tile`` (may be traced) declares columns ``j < start_tile`` an
+    identity-diagonal prefix (canonical-grid embedding): their factor
+    column is *assumed* to be the identity embedding column, so their Σ
+    panel is the identity (``Σ = blockdiag(I, Σ_orig)``) — emitted without
+    reading the input, matching the fused kernel's compute-skip.
     """
     ndt, b1, t, _ = lcol.shape
     bt = b1 - 1
@@ -253,11 +285,22 @@ def selinv_sweep_ref(lcol: jnp.ndarray, R: jnp.ndarray,
     eye = jnp.eye(t, dtype=lcol.dtype)
     e_i = jnp.arange(1, bt + 1)[:, None]
     d_i = jnp.arange(1, bt + 1)[None, :]
+    skip = not (isinstance(start_tile, int) and start_tile == 0)
 
     def body(carry, xs):
         # ring[s, e'] = Σ_{(j+1+s)+e', j+1+s}; ring_a[s, i] = Σ_{ndt+i, j+1+s}
         ring, ring_a = carry
-        lc, rc = xs                                       # (b1,t,t), (nat,t,t)
+        if skip:
+            # prefix columns (walked last): feed the identity embedding
+            # column through the normal step — winv = I, G = 0, so the
+            # emitted Σ panel is exactly the identity panel
+            from .ring import identity_prefix_panel
+            lc, rc, jj = xs
+            id_col = identity_prefix_panel(bt, t, lcol.dtype)
+            lc = jnp.where(jj < start_tile, id_col, lc)
+            rc = jnp.where(jj < start_tile, jnp.zeros_like(rc), rc)
+        else:
+            lc, rc = xs                                   # (b1,t,t), (nat,t,t)
         ljj = lc[0]
         winv = solve_panel_ref(ljj, eye)                  # L_jj^{-1}
         s0 = jnp.dot(winv.T, winv, precision=_HI)         # (L_jj L_jj^T)^{-1}
@@ -305,6 +348,8 @@ def selinv_sweep_ref(lcol: jnp.ndarray, R: jnp.ndarray,
     ring0 = jnp.zeros((bt, b1, t, t), lcol.dtype)
     ring_a0 = jnp.zeros((bt, nat, t, t), lcol.dtype)
     xs = (jnp.flip(lcol, 0), jnp.flip(R, 0))
+    if skip:
+        xs = xs + (jnp.flip(jnp.arange(ndt)),)
     _, (panels_rev, acols_rev) = jax.lax.scan(body, (ring0, ring_a0), xs)
     return jnp.flip(panels_rev, 0), jnp.flip(acols_rev, 0)
 

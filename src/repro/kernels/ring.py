@@ -38,7 +38,29 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["ring_read", "ring_write", "ring_accumulate",
-           "band_row_to_col", "band_col_to_row", "chunk_layout"]
+           "band_row_to_col", "band_col_to_row", "chunk_layout",
+           "eye_tile", "identity_prefix_panel"]
+
+
+def eye_tile(t: int, dtype=jnp.float32) -> jnp.ndarray:
+    """A (t, t) identity tile built from 2-D iotas — safe inside Pallas
+    TPU kernels (where 1-D iota does not lower) and identical to
+    ``jnp.eye`` everywhere else."""
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    return jnp.where(rows == cols, 1.0, 0.0).astype(dtype)
+
+
+def identity_prefix_panel(bt: int, t: int, dtype=jnp.float32) -> jnp.ndarray:
+    """The (bt+1, t, t) column panel an identity-embedding prefix column
+    contributes to every sweep (``core/gridpolicy.py``): the identity at
+    offset 0, zeros below.  Single definition shared by the fused kernels'
+    ``start_tile`` skip branches and the ref oracles' masked scans, so the
+    prefix contract cannot drift between backends."""
+    eye = eye_tile(t, dtype)
+    if not bt:
+        return eye[None]
+    return jnp.concatenate([eye[None], jnp.zeros((bt, t, t), dtype)], axis=0)
 
 
 # ---------------------------------------------------------------------------

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .ring import ring_read, ring_write
+from .ring import eye_tile, identity_prefix_panel, ring_read, ring_write
 from .trsm import substitute_panel
 
 __all__ = ["selinv_step_pallas", "selinv_sweep_pallas"]
@@ -105,10 +105,11 @@ def selinv_step_pallas(s_row: jnp.ndarray, g_col: jnp.ndarray,
 # Fused backward sweep: the whole Takahashi recurrence in one launch
 # ---------------------------------------------------------------------------
 
-def _selinv_sweep_kernel(lcol_ref, r_ref, sc_ref, p_ref, a_ref,
+def _selinv_sweep_kernel(start_ref, lcol_ref, r_ref, sc_ref, p_ref, a_ref,
                          ring_ref, ringa_ref, *, ndt: int, bt: int):
     s = pl.program_id(0)
     j = ndt - 1 - s
+    start = start_ref[0]
     t = lcol_ref.shape[-1]
 
     @pl.when(s == 0)
@@ -116,15 +117,33 @@ def _selinv_sweep_kernel(lcol_ref, r_ref, sc_ref, p_ref, a_ref,
         ring_ref[...] = jnp.zeros_like(ring_ref)
         ringa_ref[...] = jnp.zeros_like(ringa_ref)
 
+    eye = eye_tile(t)
+
+    # Canonical-grid fast finish (core/gridpolicy.py): columns j < start
+    # are the identity-embedding prefix — decoupled, so their Σ panel is
+    # exactly the identity (Σ_embedded = blockdiag(I, Σ)).  The backward
+    # walk reaches them last, nothing reads their ring slots afterwards,
+    # and the whole seed/normalize/contract body is skipped.
+    @pl.when(j < start)
+    def _skip():
+        p_ref[0] = identity_prefix_panel(bt, t).astype(p_ref.dtype)
+        a_ref[0] = jnp.zeros_like(a_ref[0])
+
+    @pl.when(j >= start)
+    def _work():
+        _selinv_sweep_body(lcol_ref, r_ref, sc_ref, p_ref, a_ref,
+                           ring_ref, ringa_ref, eye, j, bt=bt)
+
+
+def _selinv_sweep_body(lcol_ref, r_ref, sc_ref, p_ref, a_ref,
+                       ring_ref, ringa_ref, eye, j, *, bt: int):
+    t = lcol_ref.shape[-1]
     lc = lcol_ref[0].astype(jnp.float32)                  # (b1, t, t)
     rc = r_ref[0].astype(jnp.float32)                     # (nat_p, t, t)
     sc = sc_ref[...].astype(jnp.float32)                  # (nat_p, nat_p, t, t)
 
     # seed: winv = L_jj^{-1} (in-kernel substitution against the identity),
     # s0 = (L_jj L_jj^T)^{-1} = winv^T winv
-    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
-    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
-    eye = jnp.where(rows == cols, 1.0, 0.0).astype(jnp.float32)
     winv = substitute_panel(lc[0], eye)
     s0 = jax.lax.dot_general(winv, winv, (((0,), (0,)), ((), ())),
                              preferred_element_type=jnp.float32)
@@ -191,7 +210,8 @@ def _selinv_sweep_kernel(lcol_ref, r_ref, sc_ref, p_ref, a_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def selinv_sweep_pallas(lcol, R, sc_full, interpret: bool = True):
+def selinv_sweep_pallas(lcol, R, sc_full, start_tile=0,
+                        interpret: bool = True):
     """Fused backward Takahashi sweep.  lcol: (ndt, bt+1, t, t) column view
     of the factor (``lcol[j, d] = L[j+d, j]``, see ``ring.band_row_to_col``),
     R: (ndt, nat, t, t) arrow rows of the factor, sc_full: (nat, nat, t, t)
@@ -199,6 +219,10 @@ def selinv_sweep_pallas(lcol, R, sc_full, interpret: bool = True):
 
       panels (ndt, bt+1, t, t)  Σ column panels: panels[j, e] = Σ[j+e, j]
       acols  (ndt, nat, t, t)   arrow entries:   acols[j, i] = Σ[ndt+i, j]
+
+    ``start_tile`` (traced SMEM scalar) declares columns ``j < start_tile``
+    an identity-embedding prefix: they emit identity Σ panels without any
+    recurrence work (``core/gridpolicy.py``).
 
     Matches ``ref.selinv_sweep_ref`` (the lax.scan oracle) to fp32 tolerance.
     """
@@ -211,10 +235,12 @@ def selinv_sweep_pallas(lcol, R, sc_full, interpret: bool = True):
     nat_p = max(nat, 1)
     rp = R if nat else jnp.zeros((ndt, 1, t, t), lcol.dtype)
     scp = sc_full if nat else jnp.zeros((1, 1, t, t), lcol.dtype)
+    start = jnp.reshape(jnp.asarray(start_tile, jnp.int32), (1,))
     panels, acols = pl.pallas_call(
         functools.partial(_selinv_sweep_kernel, ndt=ndt, bt=bt),
         grid=(ndt,),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((1, b1, t, t), lambda s: (ndt - 1 - s, 0, 0, 0)),
             pl.BlockSpec((1, nat_p, t, t), lambda s: (ndt - 1 - s, 0, 0, 0)),
             pl.BlockSpec((nat_p, nat_p, t, t), lambda s: (0, 0, 0, 0)),
@@ -232,6 +258,6 @@ def selinv_sweep_pallas(lcol, R, sc_full, interpret: bool = True):
             pltpu.VMEM((max(bt, 1), nat_p, t, t), jnp.float32),
         ],
         interpret=interpret,
-    )(lcol, rp, scp)
+    )(start, lcol, rp, scp)
     return panels, acols[:, :nat]
 

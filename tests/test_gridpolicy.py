@@ -1,0 +1,329 @@
+"""Canonical-grid bucketing (core/gridpolicy.py): policy unit tests,
+identity-embedding invariants, and bucketed-vs-unbucketed parity for every
+serving entry point — band, arrow, corner, logdet and selinv diagonal must
+match the per-grid path to fp32 tolerance, including a grid that already
+sits on a canonical rung (zero padding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BandedCTSF, GridBucketPolicy, TileGrid, embed_ctsf,
+                        embed_rhs, factorize_window, factorize_window_batched,
+                        marginal_variances, padded_flop_overhead,
+                        restrict_factor, restrict_rhs, restrict_selinv,
+                        sample_gmrf_many, selected_inverse, selinv_batched,
+                        solve_many)
+from repro.core.concurrent import (concurrent_logdet,
+                                   concurrent_quadratic_forms,
+                                   concurrent_solve, stack_ctsf)
+from repro.data import make_arrowhead
+
+POLICY = GridBucketPolicy()
+
+# (n, bandwidth, arrow): diagonal padding only / band+diag padding /
+# exactly on a canonical rung (zero padding — the embedding must be a
+# no-op that still rides the policy machinery)
+CASES = [(96, 10, 5), (120, 18, 8), (136, 15, 8)]
+
+
+def _problem(n, bw, ar, t=8, seed=1):
+    A, struct = make_arrowhead(n, bw, ar, rho=0.6, seed=seed)
+    grid = TileGrid(struct, t=t)
+    return A, grid, BandedCTSF.from_sparse(A, grid)
+
+
+def _assert_close(a, b, tol=2e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol,
+                               rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Policy unit tests
+# ---------------------------------------------------------------------------
+
+def test_canonicalize_rounds_up_and_is_idempotent():
+    _, grid, _ = _problem(96, 10, 5)
+    cg = POLICY.canonicalize(grid)
+    assert cg.t == grid.t
+    assert cg.n_diag_tiles >= grid.n_diag_tiles
+    assert cg.band_tiles >= grid.band_tiles
+    assert cg.n_arrow_tiles >= grid.n_arrow_tiles
+    assert cg.n_diag_tiles & (cg.n_diag_tiles - 1) == 0  # pow2
+    assert cg.band_tiles in POLICY.band_rungs
+    assert cg.n_arrow_tiles in POLICY.arrow_rungs
+    # canonical grids are fixed points — re-bucketing never moves them
+    assert POLICY.canonicalize(cg) == cg
+    # padded_index is the identity on canonical grids (tile-aligned)
+    assert cg.padded_n == cg.structure.n
+
+
+def test_equal_rungs_give_equal_canonical_grids():
+    """The compile-cache dedup property: different true shapes landing on
+    the same rung must produce *equal* (hashable-equal) canonical grids."""
+    _, g1, _ = _problem(96, 10, 5)
+    _, g2, _ = _problem(90, 9, 3)
+    c1, c2 = POLICY.canonicalize(g1), POLICY.canonicalize(g2)
+    assert g1 != g2
+    assert c1 == c2 and hash(c1) == hash(c2)
+
+
+def test_zero_padding_case_is_exactly_on_rung():
+    _, grid, _ = _problem(136, 15, 8)
+    cg = POLICY.canonicalize(grid)
+    assert (cg.n_diag_tiles, cg.band_tiles, cg.n_arrow_tiles) == \
+        (grid.n_diag_tiles, grid.band_tiles, grid.n_arrow_tiles)
+    assert padded_flop_overhead(grid, cg) == 0.0
+
+
+def test_rungs_above_top_fall_back_to_pow2():
+    pol = GridBucketPolicy(band_rungs=(1, 2), arrow_rungs=(0, 1))
+    grid = TileGrid.from_tile_counts(8, 32, 5, 3)
+    cg = pol.canonicalize(grid)
+    assert cg.band_tiles == 8 and cg.n_arrow_tiles == 4
+
+
+def test_join_takes_elementwise_max_rung():
+    _, g1, _ = _problem(96, 10, 5)     # -> (16, 2, 1)
+    _, g2, _ = _problem(120, 18, 8)    # -> (16, 4, 1)
+    j = POLICY.join([g1, g2])
+    c1, c2 = POLICY.canonicalize(g1), POLICY.canonicalize(g2)
+    assert j.band_tiles == max(c1.band_tiles, c2.band_tiles)
+    assert j.n_diag_tiles == max(c1.n_diag_tiles, c2.n_diag_tiles)
+    with pytest.raises(ValueError, match="mixed tile sizes"):
+        POLICY.join([g1, TileGrid(g2.structure, t=4)])
+
+
+def test_policy_and_tile_count_validation():
+    with pytest.raises(ValueError, match="ascending"):
+        GridBucketPolicy(band_rungs=(4, 2))
+    with pytest.raises(ValueError, match="band_rungs"):
+        GridBucketPolicy(band_rungs=(0, 1))
+    with pytest.raises(ValueError, match="band_tiles"):
+        TileGrid.from_tile_counts(8, 4, 4, 1)     # bt > ndt - 1
+    with pytest.raises(ValueError, match="band_tiles=0"):
+        TileGrid.from_tile_counts(8, 4, 0, 1)     # multi-tile diag, no band
+    # round-trip: derived tile counts match the requested ones
+    g = TileGrid.from_tile_counts(8, 16, 4, 2)
+    assert (g.n_diag_tiles, g.band_tiles, g.n_arrow_tiles) == (16, 4, 2)
+
+
+# ---------------------------------------------------------------------------
+# Embedding invariants
+# ---------------------------------------------------------------------------
+
+def test_embed_is_identity_blockdiag_and_restrict_roundtrips():
+    _, grid, m = _problem(96, 10, 5)
+    cg = POLICY.canonicalize(grid)
+    emb = embed_ctsf(m, cg)
+    pad_d = cg.n_diag_tiles - grid.n_diag_tiles
+    t = grid.t
+    dense = emb.to_dense(lower_only=False)
+    # identity prefix, decoupled
+    _assert_close(dense[:pad_d * t, :pad_d * t], np.eye(pad_d * t), 1e-7)
+    assert np.all(dense[:pad_d * t, pad_d * t:] == 0)
+    # original block intact (band part sits right after the prefix)
+    src = m.to_dense(lower_only=False)
+    nb = grid.n_diag_tiles * t
+    _assert_close(dense[pad_d * t:pad_d * t + nb, pad_d * t:pad_d * t + nb],
+                  src[:nb, :nb], 1e-7)
+    # restrict(embed) is the identity on all three blocks
+    from repro.core.cholesky import CholeskyFactor
+    r = restrict_factor(CholeskyFactor(emb), grid)
+    _assert_close(r.ctsf.Dr, m.Dr, 1e-7)
+    _assert_close(r.ctsf.R, m.R, 1e-7)
+    _assert_close(r.ctsf.C, m.C, 1e-7)
+
+
+def test_identity_embeds_to_identity():
+    """BandedCTSF.eye is the embedding's neutral element: embedding the
+    identity of the source grid yields exactly the identity of the
+    canonical grid — pinning eye() and embed_ctsf to one contract."""
+    _, grid, _ = _problem(96, 10, 5)
+    cg = POLICY.canonicalize(grid)
+    emb = embed_ctsf(BandedCTSF.eye(grid), cg)
+    want = BandedCTSF.eye(cg)
+    _assert_close(emb.Dr, want.Dr, 0)
+    _assert_close(emb.R, want.R, 0)
+    _assert_close(emb.C, want.C, 0)
+
+
+def test_rhs_embed_restrict_roundtrip_and_validation(rng):
+    _, grid, _ = _problem(96, 10, 5)
+    cg = POLICY.canonicalize(grid)
+    B = jnp.asarray(rng.standard_normal((grid.padded_n, 3)).astype(np.float32))
+    Bc = embed_rhs(B, grid, cg)
+    assert Bc.shape == (cg.padded_n, 3)
+    _assert_close(restrict_rhs(Bc, grid, cg), B, 0)
+    with pytest.raises(ValueError, match="padded_n"):
+        embed_rhs(B[:-1], grid, cg)
+    with pytest.raises(ValueError, match="does not embed"):
+        embed_rhs(Bc, cg, grid)   # canonical into smaller source
+
+
+# ---------------------------------------------------------------------------
+# Serving entry-point parity: bucketed == unbucketed per grid
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,bw,ar", CASES)
+def test_factorize_window_policy_parity(n, bw, ar):
+    _, grid, m = _problem(n, bw, ar)
+    f0 = factorize_window(m, impl="ref")
+    fp = factorize_window(m, impl="ref", policy=POLICY)
+    assert fp.source_grid == grid
+    assert fp.ctsf.grid == POLICY.canonicalize(grid)
+    fr = fp.restrict()
+    _assert_close(fr.ctsf.Dr, f0.ctsf.Dr)       # band
+    _assert_close(fr.ctsf.R, f0.ctsf.R)         # arrow
+    _assert_close(fr.ctsf.C, f0.ctsf.C)         # corner
+    _assert_close(fp.logdet(), f0.logdet())     # logdet on the embedding
+
+
+@pytest.mark.parametrize("n,bw,ar", CASES)
+def test_solve_and_marginals_policy_parity(n, bw, ar, rng):
+    A, grid, m = _problem(n, bw, ar)
+    f0 = factorize_window(m, impl="ref")
+    fp = factorize_window(m, impl="ref", policy=POLICY)
+    B = jnp.asarray(rng.standard_normal((grid.padded_n, 4))
+                    .astype(np.float32))
+    X0 = solve_many(f0, B, impl="ref")
+    _assert_close(solve_many(fp, B, impl="ref"), X0)
+    # policy on a plain factor embeds on the fly — same answer
+    _assert_close(solve_many(f0, B, impl="ref", policy=POLICY), X0)
+    idx = np.arange(0, grid.structure.n, 7)
+    v0 = marginal_variances(f0, idx, impl="ref")
+    _assert_close(marginal_variances(fp, idx, impl="ref"), v0)
+    _assert_close(marginal_variances(fp, idx, method="panels", impl="ref"),
+                  marginal_variances(f0, idx, method="panels", impl="ref"))
+    # sampling reproduces the unbucketed draw bit-for-bit per key
+    s0 = sample_gmrf_many(f0, jax.random.PRNGKey(5), 3, impl="ref")
+    s1 = sample_gmrf_many(fp, jax.random.PRNGKey(5), 3, impl="ref")
+    _assert_close(s1, s0, 0)
+
+
+@pytest.mark.parametrize("n,bw,ar", CASES)
+def test_selinv_policy_parity(n, bw, ar):
+    _, grid, m = _problem(n, bw, ar)
+    f0 = factorize_window(m, impl="ref")
+    fp = factorize_window(m, impl="ref", policy=POLICY)
+    s0 = selected_inverse(f0, impl="ref")
+    s1 = selected_inverse(fp, impl="ref")
+    assert s1.grid == grid
+    _assert_close(s1.Dr, s0.Dr)                 # Σ band
+    _assert_close(s1.R, s0.R)                   # Σ arrow
+    _assert_close(s1.C, s0.C)                   # Σ corner
+    _assert_close(s1.diagonal(), s0.diagonal())
+
+
+def test_pallas_fused_sweeps_ride_the_embedding(rng):
+    """The fused kernels' traced start_tile path: pallas bucketed results
+    must match the unbucketed ref path."""
+    _, grid, m = _problem(96, 10, 5)
+    f0 = factorize_window(m, impl="ref")
+    fp = factorize_window(m, impl="pallas", policy=POLICY)
+    _assert_close(fp.restrict().ctsf.Dr, f0.ctsf.Dr)
+    B = jnp.asarray(rng.standard_normal((grid.padded_n, 4))
+                    .astype(np.float32))
+    _assert_close(solve_many(fp, B, impl="pallas"),
+                  solve_many(f0, B, impl="ref"))
+    _assert_close(selected_inverse(fp, impl="pallas").diagonal(),
+                  selected_inverse(f0, impl="ref").diagonal())
+
+
+def test_batched_and_concurrent_policy_parity(rng):
+    _, grid, m = _problem(96, 10, 5)
+    mats = [m] * 3
+    fb0 = factorize_window_batched(mats, impl="ref")
+    fbp = factorize_window_batched(mats, impl="ref", policy=POLICY)
+    assert fbp.source_grid == grid
+    _assert_close(restrict_factor(fbp).ctsf.Dr, fb0.ctsf.Dr)
+    _assert_close(concurrent_logdet(fbp), concurrent_logdet(fb0))
+    y = jnp.asarray(rng.standard_normal((grid.padded_n,)).astype(np.float32))
+    _assert_close(concurrent_solve(fbp, y, impl="ref"),
+                  concurrent_solve(fb0, y, impl="ref"))
+    _assert_close(concurrent_quadratic_forms(fbp, y, impl="ref"),
+                  concurrent_quadratic_forms(fb0, y, impl="ref"))
+    sb0 = selinv_batched(fb0, impl="ref")
+    sbp = selinv_batched(fbp, impl="ref")
+    assert sbp.grid == grid
+    _assert_close(sbp.diagonal(), sb0.diagonal())
+    _assert_close(sbp.Dr, sb0.Dr)
+
+
+def test_stack_ctsf_policy_embeds_mixed_grids():
+    _, g1, m1 = _problem(96, 10, 5)
+    _, g2, m2 = _problem(120, 18, 8)
+    with pytest.raises(ValueError, match="equal structure"):
+        stack_ctsf([m1, m2])
+    stacked = stack_ctsf([m1, m2], policy=POLICY)
+    assert stacked.grid == POLICY.join([g1, g2])
+    assert stacked.Dr.shape[0] == 2
+    # each slice factorizes to the same (restricted) factor as its source
+    fb = factorize_window_batched(stacked, impl="ref", policy=POLICY)
+    f1 = factorize_window(m1, impl="ref", policy=POLICY)
+    band1 = embed_ctsf(f1.ctsf, stacked.grid).Dr
+    _assert_close(fb.ctsf.Dr[0], band1)
+
+
+def test_stack_ctsf_embeds_bandless_grid_with_banded_ones():
+    """An arrow-only (ndt=0) problem embeds into a banded canonical grid —
+    its whole band part is identity prefix — so mixed corner-only and
+    banded traffic can share one stacked batch."""
+    import scipy.sparse as sp
+    from repro.core import ArrowheadStructure
+    _, g1, m1 = _problem(96, 10, 5)
+    rng0 = np.random.default_rng(7)
+    x = rng0.standard_normal((16, 16)).astype(np.float32)
+    dense = x @ x.T + 16 * np.eye(16, dtype=np.float32)
+    g0 = TileGrid(ArrowheadStructure(n=16, bandwidth=0, arrow=16), t=8)
+    assert g0.n_diag_tiles == 0
+    m0 = BandedCTSF.from_sparse(sp.csc_matrix(dense), g0)
+    stacked = stack_ctsf([m1, m0], policy=POLICY)
+    assert stacked.grid.n_diag_tiles > 0
+    # the embedded corner-only slice factorizes to blockdiag(I, chol(A))
+    fb = factorize_window_batched(stacked, impl="ref", policy=POLICY)
+    want = np.linalg.cholesky(dense)
+    corner = np.asarray(fb.ctsf.C[1])
+    got = corner.transpose(0, 2, 1, 3).reshape(16, 16)
+    np.testing.assert_allclose(np.tril(got), want, rtol=2e-4, atol=2e-4)
+    # band slice of the corner-only item is pure identity prefix
+    np.testing.assert_allclose(
+        np.asarray(fb.ctsf.Dr[1, :, 0]),
+        np.broadcast_to(np.eye(8), (stacked.grid.n_diag_tiles, 8, 8)),
+        atol=1e-6)
+
+
+def test_logdet_broadcasts_over_batched_factors():
+    """CholeskyFactor.logdet on a batched factor returns one value per
+    batch element (it used to index the batch axis as the band axis and
+    collapse everything into one wrong scalar)."""
+    _, grid, m = _problem(96, 10, 5)
+    f1 = factorize_window(m, impl="ref")
+    fb = factorize_window_batched([m, m, m], impl="ref")
+    ld = fb.logdet()
+    assert ld.shape == (3,)
+    _assert_close(ld, jnp.full((3,), f1.logdet()))
+    _assert_close(concurrent_logdet(fb), ld)
+
+
+def test_mixed_grid_stream_shares_canonical_cache_entries():
+    """The compile-count contract: a stream of distinct grids landing on
+    one canonical rung adds exactly one traced-callable cache entry."""
+    from repro.core import cholesky as core_cholesky
+    cache = core_cholesky._BATCHED_WINDOW_CACHE
+    probs = [_problem(96, 10, 5), _problem(90, 9, 3), _problem(88, 11, 2)]
+    rungs = {POLICY.canonicalize(g) for _, g, _ in probs}
+    assert len(rungs) == 1
+    before = set(cache.keys())
+    # tree_chunks=7 keeps this test's key space disjoint from whatever
+    # earlier tests already traced into the module-level cache
+    outs = [factorize_window_batched([m, m], impl="ref", tree_chunks=7,
+                                     policy=POLICY)
+            for _, _, m in probs]
+    new = set(cache.keys()) - before
+    assert len(new) == 1
+    # ... and despite sharing the compiled sweep, each grid's results are
+    # its own (no cache-key collision across true shapes)
+    for (_, g, m), f in zip(probs, outs):
+        f0 = factorize_window_batched([m, m], impl="ref", tree_chunks=7)
+        _assert_close(restrict_factor(f).ctsf.Dr, f0.ctsf.Dr)

@@ -80,6 +80,71 @@ def test_bucketed_batched_call_pads_and_strips():
     np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2)
 
 
+def test_lru_eviction_follows_recency_order():
+    """Eviction must walk least-recently-*used* order, not insertion
+    order: a get() refresh moves an old key behind newer inserts."""
+    from repro.core.batching import LRUCache
+    c = LRUCache(maxsize=3)
+    for k in "abc":
+        c.put(k, k)
+    assert c.keys() == ["a", "b", "c"]
+    c.get("a")                      # refresh: now b is LRU
+    c.put("d", "d")                 # evicts b
+    assert c.keys() == ["c", "a", "d"]
+    c.put("c", "C")                 # overwrite refreshes too
+    c.put("e", "e")                 # evicts a (refreshed before c, d)
+    assert c.keys() == ["d", "c", "e"]
+
+
+def test_bucketed_batched_call_exact_pow2_boundary():
+    """A batch already sitting on a pow2 boundary must dispatch unpadded
+    (no silent 2x blow-up) and return all rows."""
+    from repro.core.batching import bucketed_batched_call
+    seen = {}
+
+    def fn(x):
+        seen["n"] = x.shape[0]
+        return (x + 1,)
+
+    for b in (1, 2, 8):
+        x = jnp.zeros((b, 3), jnp.float32)
+        (out,) = bucketed_batched_call(fn, (x,), bucket=True)
+        assert seen["n"] == b and out.shape[0] == b
+    # bucket=False never pads either
+    x = jnp.zeros((5, 3), jnp.float32)
+    (out,) = bucketed_batched_call(fn, (x,), bucket=False)
+    assert seen["n"] == 5 and out.shape[0] == 5
+
+
+def test_canonical_rung_cache_key_distinguishes_use_start():
+    """Grids canonicalizing to the same rung share one policy-path cache
+    entry, but that entry must be distinct from the plain (no-policy)
+    entry for the canonical grid itself — colliding them would replay a
+    static-zero trace for embedded inputs (or vice versa)."""
+    from repro.core import (BandedCTSF, GridBucketPolicy, TileGrid,
+                            factorize_window_batched)
+    from repro.core import cholesky as core_cholesky
+    from repro.data import make_arrowhead
+    pol = GridBucketPolicy()
+    A, s = make_arrowhead(96, 10, 5, rho=0.6, seed=0)
+    g = TileGrid(s, t=8)
+    m = BandedCTSF.from_sparse(A, g)
+    cgrid = pol.canonicalize(g)
+    cache = core_cholesky._BATCHED_WINDOW_CACHE
+    before = set(cache.keys())
+    factorize_window_batched([m], impl="ref", tree_chunks=5, policy=pol)
+    new = set(cache.keys()) - before
+    assert len(new) == 1
+    (key,) = new
+    assert key[0] == cgrid          # keyed on the canonical grid
+    assert key[-1] is True          # ... with the traced-start variant
+    # a same-rung grid with a different true shape reuses that entry
+    A2, s2 = make_arrowhead(90, 9, 3, rho=0.6, seed=1)
+    m2 = BandedCTSF.from_sparse(A2, TileGrid(s2, t=8))
+    factorize_window_batched([m2], impl="ref", tree_chunks=5, policy=pol)
+    assert set(cache.keys()) - before == new
+
+
 # ---------------------------------------------------------------------------
 # benchmarks/run.py --check-only (validates committed BENCH_*.json)
 # ---------------------------------------------------------------------------
@@ -120,3 +185,25 @@ def test_check_only_validation_logic(tmp_path):
     assert _record_failures(diag) == []
     failed = {"pass": False}
     assert any("pass=false" in r for r in _record_failures(failed))
+
+
+def test_check_only_fails_on_missing_registered_record(tmp_path, capsys):
+    """Every suite registered in run.py RECORD_SUITES must have a
+    committed BENCH_<suite>.json: deleting a record (instead of fixing a
+    regression) must fail --check-only, not silently pass."""
+    sys.path.insert(0, _ROOT)
+    try:
+        from benchmarks.run import RECORD_SUITES, check_records
+    finally:
+        sys.path.remove(_ROOT)
+    assert "bucketing" in RECORD_SUITES
+    # all registered records present and passing -> clean
+    for suite in RECORD_SUITES:
+        (tmp_path / f"BENCH_{suite}.json").write_text(
+            json.dumps({"pass": True}))
+    assert check_records(root=str(tmp_path)) == 0
+    # dropping one registered record -> exactly that failure
+    (tmp_path / f"BENCH_{RECORD_SUITES[0]}.json").unlink()
+    assert check_records(root=str(tmp_path)) == 1
+    out = capsys.readouterr().out
+    assert f"BENCH_{RECORD_SUITES[0]}.json" in out and "no committed" in out

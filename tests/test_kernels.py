@@ -328,6 +328,89 @@ def test_fused_sweeps_are_single_launch():
     assert _count_pallas_calls(jx2) == 1
 
 
+@pytest.mark.parametrize("start_tile", [2, 5])
+def test_band_cholesky_sweep_start_tile(start_tile):
+    """With a start_tile prefix, both backends emit identity panels / zero
+    arrow rows for the prefix and the exact factor of the identity-embedded
+    matrix elsewhere — the canonical-grid embedding contract
+    (core/gridpolicy.py)."""
+    from repro.core import embed_ctsf, GridBucketPolicy, TileGrid
+    bm, grid = _spd_ctsf(96, 16, 8, 8)
+    cgrid = TileGrid.from_tile_counts(
+        8, grid.n_diag_tiles + start_tile, grid.band_tiles,
+        grid.n_arrow_tiles)
+    emb = embed_ctsf(bm, cgrid)
+    Ac = band_row_to_col(emb.Dr)
+    # traced start (as the serving path passes it) and both backends
+    st = jnp.asarray(start_tile, jnp.int32)
+    got = band_cholesky_sweep_pallas(Ac, emb.R, nchunks=3, start_tile=st)
+    want = ref.band_cholesky_sweep_ref(Ac, emb.R, nchunks=3, start_tile=st)
+    for g, w, name in zip(got, want, ("panels", "R_out", "schur")):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=2e-4, atol=2e-4, err_msg=name)
+    panels = np.asarray(got[0])
+    np.testing.assert_allclose(panels[:start_tile, 0],
+                               np.broadcast_to(np.eye(8), (start_tile, 8, 8)),
+                               atol=1e-6)
+    assert np.abs(panels[:start_tile, 1:]).max() == 0.0
+    # prefix skip leaves the suffix identical to the unembedded sweep
+    plain = ref.band_cholesky_sweep_ref(band_row_to_col(bm.Dr), bm.R)
+    np.testing.assert_allclose(panels[start_tile:], np.asarray(plain[0]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_selinv_sweep_start_tile():
+    """Prefix columns of the fused/ref Takahashi sweeps emit identity Σ
+    panels (Σ_embedded = blockdiag(I, Σ)); the suffix matches the
+    unembedded recurrence."""
+    from repro.core import embed_ctsf, factorize_window, TileGrid
+    bm, grid = _spd_ctsf(96, 16, 8, 8)
+    pad = 3
+    cgrid = TileGrid.from_tile_counts(
+        8, grid.n_diag_tiles + pad, grid.band_tiles, grid.n_arrow_tiles)
+    f = factorize_window(embed_ctsf(bm, cgrid), impl="ref").ctsf
+    lcol = band_row_to_col(f.Dr)
+    sc = _corner_sigma(f.C, cgrid.n_arrow_tiles, 8)
+    st = jnp.asarray(pad, jnp.int32)
+    gp, ga = selinv_sweep_pallas(lcol, f.R, sc, start_tile=st)
+    wp, wa = ref.selinv_sweep_ref(lcol, f.R, sc, start_tile=st)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(wp),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(wa),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(gp)[:pad, 0],
+                               np.broadcast_to(np.eye(8), (pad, 8, 8)),
+                               atol=1e-6)
+    assert np.abs(np.asarray(gp)[:pad, 1:]).max() == 0.0
+    f0 = factorize_window(bm, impl="ref").ctsf
+    wp0, _ = ref.selinv_sweep_ref(band_row_to_col(f0.Dr), f0.R,
+                                  _corner_sigma(f0.C, grid.n_arrow_tiles, 8))
+    np.testing.assert_allclose(np.asarray(gp)[pad:], np.asarray(wp0),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("start_tile", [1, 4])
+def test_band_backward_sweep_start_tile(rng, start_tile):
+    """Rows below start_tile come out identically zero on both backends
+    (the reverse-sweep mirror of the forward fast start)."""
+    ndt, bt, nat, t, k = 7, 2, 1, 8, 4
+    Dr, R = _band_factor(rng, ndt, bt, nat, t)
+    yd = jnp.asarray(rng.standard_normal((ndt, t, k)), jnp.float32)
+    xa = jnp.asarray(rng.standard_normal((nat, t, k)), jnp.float32)
+    st = jnp.asarray(start_tile, jnp.int32)
+    xd = band_backward_sweep_pallas(Dr, R, yd, xa, start_tile=st)
+    xr = ref.band_backward_sweep_ref(Dr, R, yd, xa, start_tile=st)
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(xr),
+                               rtol=2e-4, atol=2e-4)
+    assert np.abs(np.asarray(xd)[:start_tile]).max() == 0.0
+    # rows >= start_tile agree with the full sweep (suffix decouples
+    # upward: X_m only reads X_{m+j}, never the skipped prefix)
+    xfull = ref.band_backward_sweep_ref(Dr, R, yd, xa)
+    np.testing.assert_allclose(np.asarray(xd)[start_tile:],
+                               np.asarray(xfull)[start_tile:],
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_band_update_ref_semantics(rng):
     """Cross-check the fused contraction against the naive task loop."""
     b1, t = 4, 8
