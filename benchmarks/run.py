@@ -49,7 +49,7 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # suites that emit a BENCH_<name>.json trajectory point; --check-only
 # requires each of these records to exist at the repo root (and pass its
 # own thresholds), so deleting a record cannot silently pass CI
-RECORD_SUITES = ("solve", "selinv", "cholesky", "bucketing")
+RECORD_SUITES = ("solve", "selinv", "cholesky", "bucketing", "robustness")
 
 
 def _record_failures(record: dict) -> list:
@@ -119,9 +119,9 @@ def main() -> None:
         raise SystemExit(1 if check_records() else 0)
 
     from . import (bench_accumulation, bench_bucketing, bench_cholesky,
-                   bench_concurrent, bench_libraries, bench_scalability,
-                   bench_selinv, bench_solve, bench_tile_size,
-                   bench_tree_reduction, roofline)
+                   bench_concurrent, bench_libraries, bench_robustness,
+                   bench_scalability, bench_selinv, bench_solve,
+                   bench_tile_size, bench_tree_reduction, roofline)
     suites = {
         "accumulation": bench_accumulation,
         "libraries": bench_libraries,
@@ -133,6 +133,7 @@ def main() -> None:
         "selinv": bench_selinv,
         "cholesky": bench_cholesky,
         "bucketing": bench_bucketing,
+        "robustness": bench_robustness,
         "roofline": roofline,
     }
     failures = []  # (suite, [reasons...])

@@ -10,10 +10,12 @@ from .solve import (backward_solve, backward_solve_many, forward_solve,
                     forward_solve_many, logdet, marginal_variances,
                     sample_gmrf, sample_gmrf_many, solve, solve_many)
 from .selinv import SelectedInverse, selected_inverse, selinv_batched
-from .concurrent import concurrent_selinv
+from .concurrent import concurrent_factorize, concurrent_selinv
 from .gridpolicy import (GridBucketPolicy, embed_ctsf, embed_rhs,
                          padded_flop_overhead, restrict_factor, restrict_rhs,
                          restrict_selinv)
+from .robustness import (STATUS_FAILED, STATUS_OK, STATUS_RECOVERED,
+                         FactorInfo, RegularizePolicy)
 
 __all__ = [
     "ArrowheadStructure", "TileGrid", "measure_arrowhead",
@@ -27,7 +29,9 @@ __all__ = [
     "forward_solve_many", "logdet", "marginal_variances",
     "sample_gmrf", "sample_gmrf_many", "solve", "solve_many",
     "SelectedInverse", "selected_inverse", "selinv_batched",
-    "concurrent_selinv",
+    "concurrent_factorize", "concurrent_selinv",
     "GridBucketPolicy", "embed_ctsf", "embed_rhs", "padded_flop_overhead",
     "restrict_factor", "restrict_rhs", "restrict_selinv",
+    "STATUS_FAILED", "STATUS_OK", "STATUS_RECOVERED",
+    "FactorInfo", "RegularizePolicy",
 ]

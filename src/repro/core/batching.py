@@ -20,6 +20,7 @@ with the same two tricks:
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Any, Callable, Hashable, Optional, Tuple
 
@@ -32,38 +33,49 @@ class LRUCache:
     """Tiny insertion/recency-ordered cache for traced callables.
 
     ``get`` refreshes recency; ``put`` evicts the least recently used
-    entry beyond ``maxsize``.  Not thread-safe (matching the module-level
-    dict it replaces — JAX tracing itself is not re-entrant either)."""
+    entry beyond ``maxsize``.  Thread-safe: serving processes commonly
+    fan requests over a thread pool, and a torn ``move_to_end`` /
+    ``popitem`` under concurrent mutation corrupts the OrderedDict.  The
+    lock covers only the bookkeeping — a cache miss may still trace the
+    same callable twice in two threads (JAX tracing is outside the lock
+    by design), which wastes a trace but stays correct: ``put`` is
+    last-writer-wins."""
 
     def __init__(self, maxsize: int = 64):
         if maxsize <= 0:
             raise ValueError("maxsize must be positive")
         self.maxsize = maxsize
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.RLock()
 
     def get(self, key: Hashable) -> Optional[Any]:
-        if key not in self._entries:
-            return None
-        self._entries.move_to_end(key)
-        return self._entries[key]
+        with self._lock:
+            if key not in self._entries:
+                return None
+            self._entries.move_to_end(key)
+            return self._entries[key]
 
     def put(self, key: Hashable, value: Any) -> None:
-        self._entries[key] = value
-        self._entries.move_to_end(key)
-        while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
+        with self._lock:
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: Hashable) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     def keys(self):
         """Current keys in least-to-most-recently-used order.  Each key is
         one traced+compiled callable, so benchmarks and tests count
         compiles by diffing snapshots of this set across a workload."""
-        return list(self._entries.keys())
+        with self._lock:
+            return list(self._entries.keys())
 
 
 def next_pow2(b: int) -> int:

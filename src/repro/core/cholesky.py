@@ -32,9 +32,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.kernels.ref import sweep_status
 from repro.kernels.ring import band_col_to_row, band_row_to_col
 from .batching import LRUCache, bucketed_batched_call
 from .ctsf import BandedCTSF, TileMatrix
+from .robustness import (FactorInfo, RegularizePolicy, fold_corner_status,
+                         run_ladder)
 from .structure import TileGrid
 from .symbolic import Task, TaskType
 from .tree_reduction import chunked_tree_sum, should_use_tree
@@ -160,9 +163,18 @@ class CholeskyFactor:
     and the policy-aware solve/selinv entry points embed right-hand sides
     in and restrict results back automatically.  :meth:`restrict` strips
     the embedding when the raw factor is wanted.
+
+    ``info`` is attached when the factorization ran under a
+    ``regularize=`` policy: per-element numerical status (OK / RECOVERED
+    with diagonal jitter / FAILED), attempts, applied jitter and minimum
+    pivot — see :class:`~repro.core.robustness.FactorInfo`.  Serving
+    callers should consult ``info`` instead of expecting exceptions; a
+    FAILED element's factor is numerically unusable but never poisons its
+    batch siblings.
     """
     ctsf: BandedCTSF
     source_grid: Optional[TileGrid] = None
+    info: Optional[FactorInfo] = None
 
     def restrict(self) -> "CholeskyFactor":
         """Slice a canonical-grid factor back onto its source grid (no-op
@@ -230,8 +242,10 @@ def _band_arrow_sweep_ring(Dr, R, grid, impl, tree_chunks: int = 1):
     per-chunk corner-Schur partial sums come straight from the sweep (the
     fused kernel accumulates them on the fly), so callers must not
     re-contract R_L.  ``impl="pallas"`` = one fused kernel launch;
-    ``"ref"`` = the ring-buffer ``lax.scan``."""
-    panels, R_out, schur = ops.band_cholesky_sweep(
+    ``"ref"`` = the ring-buffer ``lax.scan``.  The sweep's breakdown
+    status word is dropped here — the distributed path does its own
+    health checks at the shard level."""
+    panels, R_out, schur, _status = ops.band_cholesky_sweep(
         band_row_to_col(Dr), R, nchunks=tree_chunks, impl=impl)
     return band_col_to_row(panels), R_out, schur
 
@@ -315,7 +329,13 @@ def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto",
     prefix (``core/gridpolicy.py``); callers omit it on the plain path so
     the argument stays a trace-time constant 0 (keeping the static loop
     bounds), and pass a *traced* scalar on the canonical-grid path so
-    distinct pad depths share one compilation per canonical grid."""
+    distinct pad depths share one compilation per canonical grid.
+
+    Returns ``(Dr_L, R_L, C_L, status)`` — ``status`` the (3,) float32
+    breakdown word ``[min_pivot, nonfinite, first_bad]`` covering band
+    *and* corner (a corner breakdown reports ``first_bad = ndt``).  It is
+    carried in-graph with no host sync; the jitter ladder
+    (``core/robustness.py``) is the consumer."""
     nat = grid.n_arrow_tiles
     if sweep not in ("auto", "fused", "ring", "window"):
         raise ValueError(f"unknown sweep {sweep!r} (want 'auto', 'fused', "
@@ -334,16 +354,21 @@ def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto",
         mode = "fused" if (impl or ops.default_impl()) == "pallas" else "ring"
     if mode == "window":
         Dr_out, R_out = _band_arrow_sweep(Dr, R, grid, impl, start_tile)
+        # legacy sweep predates the in-sweep status carry: fold the same
+        # word from the emitted factor (row layout keeps diag at [:, 0],
+        # which is all ref.sweep_status reads)
+        status = sweep_status(Dr_out, R_out)
         if nat:
             C_out = _corner_dense_cholesky(
                 C - _corner_schur(R_out, tree_chunks), impl)
         else:
             C_out = C
-        return Dr_out, R_out, C_out
+        return Dr_out, R_out, C_out, fold_corner_status(
+            status, C_out, grid.n_diag_tiles, nat)
 
     sweep_impl = "pallas" if mode == "fused" else "ref"
     nchunks = max(1, min(tree_chunks or 1, grid.n_diag_tiles or 1))
-    panels, R_out, schur = ops.band_cholesky_sweep(
+    panels, R_out, schur, status = ops.band_cholesky_sweep(
         band_row_to_col(Dr), R, nchunks=nchunks, start_tile=start_tile,
         impl=sweep_impl)
     Dr_out = band_col_to_row(panels)
@@ -353,7 +378,8 @@ def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto",
         C_out = _corner_dense_cholesky(C - jnp.sum(schur, axis=0), impl)
     else:
         C_out = C
-    return Dr_out, R_out, C_out
+    return Dr_out, R_out, C_out, fold_corner_status(
+        status, C_out, grid.n_diag_tiles, nat)
 
 
 def _embed_matrix(m: BandedCTSF, policy):
@@ -370,7 +396,8 @@ def _embed_matrix(m: BandedCTSF, policy):
 
 def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
                      tree_chunks: int = 8,
-                     sweep: str = "auto", policy=None) -> CholeskyFactor:
+                     sweep: str = "auto", policy=None,
+                     regularize=None) -> CholeskyFactor:
     """Banded-arrowhead factorization (window backend).
 
     ``impl="pallas"`` (or running natively on TPU) factorizes the whole
@@ -385,16 +412,30 @@ def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
     grid.  The returned factor lives on the canonical grid with
     ``source_grid`` set; the solve/selinv entry points consume it
     transparently, or :meth:`CholeskyFactor.restrict` strips the
-    embedding."""
+    embedding.
+
+    ``regularize`` opts into numerical fault tolerance: ``True`` (default
+    :class:`~repro.core.robustness.RegularizePolicy`) or a policy runs the
+    escalating-jitter retry ladder on breakdown and attaches a
+    :class:`~repro.core.robustness.FactorInfo` to the returned factor
+    instead of ever raising; an SPD input factorizes on the first attempt
+    and its factor is bit-identical to the unregularized call."""
+    pol = RegularizePolicy.resolve(regularize)
     source = None
     if policy is not None:
         m, source, start = _embed_matrix(m, policy)
-        Dr, R, C = _factorize_window_impl(m.Dr, m.R, m.C, m.grid, impl,
-                                          tree_chunks, sweep, start)
+        call = lambda dr, r, c: _factorize_window_impl(
+            dr, r, c, m.grid, impl, tree_chunks, sweep, start)
     else:
-        Dr, R, C = _factorize_window_impl(m.Dr, m.R, m.C, m.grid, impl,
-                                          tree_chunks, sweep)
-    return CholeskyFactor(BandedCTSF(m.grid, Dr, R, C), source_grid=source)
+        call = lambda dr, r, c: _factorize_window_impl(
+            dr, r, c, m.grid, impl, tree_chunks, sweep)
+    if pol is None:
+        Dr, R, C, _status = call(m.Dr, m.R, m.C)
+        info = None
+    else:
+        Dr, R, C, info = run_ladder(m.Dr, m.R, m.C, m.grid, call, pol)
+    return CholeskyFactor(BandedCTSF(m.grid, Dr, R, C), source_grid=source,
+                          info=info)
 
 
 # ---------------------------------------------------------------------------
@@ -437,7 +478,8 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
                              tree_chunks: int = 8,
                              bucket: bool = True,
                              sweep: str = "auto",
-                             policy=None) -> CholeskyFactor:
+                             policy=None,
+                             regularize=None) -> CholeskyFactor:
     """Factorize a batch of same-grid matrices in one vmapped dispatch.
 
     ``batch`` is either a list of :class:`BandedCTSF` or one whose arrays
@@ -462,6 +504,15 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
     traffic compiles O(#canonical rungs) sweeps instead of one per distinct
     grid.  The returned factor carries ``source_grid`` (see
     :func:`factorize_window`).
+
+    ``regularize`` (bool or :class:`~repro.core.robustness.RegularizePolicy`)
+    runs the escalating-jitter ladder *per batch element*: retries
+    refactorize the whole (bucketed) batch through the same compiled
+    callable with only the failed elements' diagonals jittered, healthy
+    elements keep their first-attempt factors bit-for-bit, and the
+    returned ``factor.info`` carries ``(B,)`` status/attempts/tau vectors
+    — one poisoned θ-candidate degrades to a flagged element instead of
+    sinking the sweep.
     """
     if isinstance(batch, (list, tuple)):
         grid = batch[0].grid
@@ -491,5 +542,27 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
         call = lambda dr, r, c: fn(dr, r, c, start)
     else:
         call = _batched_window_fn(grid, impl, tree_chunks, sweep)
-    dr, r, c = bucketed_batched_call(call, (Dr, R, C), bucket)
-    return CholeskyFactor(BandedCTSF(grid, dr, r, c), source_grid=source)
+    pol = RegularizePolicy.resolve(regularize)
+    if pol is None:
+        dr, r, c, _status = bucketed_batched_call(call, (Dr, R, C), bucket)
+        info = None
+    else:
+        # ladder inside the bucketed call: the pow2 padding elements (copies
+        # of the last matrix) ride the retries and are stripped with the
+        # other outputs; FactorInfo arrays flatten through the stripper
+        kept = []
+
+        def ladder_call(dr_, r_, c_):
+            d2, r2, c2, inf = run_ladder(dr_, r_, c_, grid, call, pol)
+            kept.append(inf.matrix is not None)
+            return (d2, r2, c2, inf.status, inf.attempts, inf.tau,
+                    inf.min_pivot, inf.first_bad_tile)
+
+        dr, r, c, st, at, ta, mp, fb = bucketed_batched_call(
+            ladder_call, (Dr, R, C), bucket)
+        # re-attach the *unpadded* original batch for the refinement path
+        matrix = BandedCTSF(grid, Dr, R, C) if kept[-1] else None
+        info = FactorInfo(status=st, attempts=at, tau=ta, min_pivot=mp,
+                          first_bad_tile=fb, matrix=matrix)
+    return CholeskyFactor(BandedCTSF(grid, dr, r, c), source_grid=source,
+                          info=info)

@@ -67,7 +67,7 @@ def stack_ctsf(mats: list, policy=None) -> BandedCTSF:
 def concurrent_factorize(batch: BandedCTSF, mesh: Optional[Mesh] = None,
                          axis: str = "data", impl: Optional[str] = None,
                          tree_chunks: int = 8,
-                         policy=None) -> CholeskyFactor:
+                         policy=None, regularize=None) -> CholeskyFactor:
     """Factorize a batch of matrices concurrently.
 
     With ``mesh``, the batch axis is sharded over ``axis`` — one factorization
@@ -80,11 +80,22 @@ def concurrent_factorize(batch: BandedCTSF, mesh: Optional[Mesh] = None,
     canonical grid with its identity prefix skipped, and the returned
     factor carries ``source_grid`` for the policy-aware solve/selinv
     entry points.
+
+    ``regularize`` (bool or :class:`~repro.core.robustness.RegularizePolicy`)
+    enables per-element breakdown recovery: the escalating-jitter ladder
+    retries only the failed elements (on the mesh path the retries ride
+    the same sharded callable — the per-sweep status words are replicated
+    host-side, everything else stays sharded) and the returned
+    ``factor.info`` flags each element OK / RECOVERED / FAILED instead of
+    one bad θ-candidate raising mid-sweep.
     """
     if mesh is None:
         return factorize_window_batched(batch, impl=impl,
                                         tree_chunks=tree_chunks,
-                                        bucket=False, policy=policy)
+                                        bucket=False, policy=policy,
+                                        regularize=regularize)
+    from .robustness import RegularizePolicy, run_ladder
+    pol = RegularizePolicy.resolve(regularize)
     source = None
     if policy is not None:
         from .cholesky import _embed_matrix
@@ -97,10 +108,18 @@ def concurrent_factorize(batch: BandedCTSF, mesh: Optional[Mesh] = None,
             lambda dr, r, c: _factorize_window_impl(dr, r, c, batch.grid,
                                                     impl, tree_chunks))
     spec = (NamedSharding(mesh, P(axis)),) * 3
-    fn = jax.jit(fn, in_shardings=spec, out_shardings=spec)
-    dr, r, c = fn(batch.Dr, batch.R, batch.C)
+    # the (B, 3) status words are tiny — replicate them so the ladder's
+    # host readback never gathers factor data
+    st_spec = NamedSharding(mesh, P())
+    fn = jax.jit(fn, in_shardings=spec, out_shardings=spec + (st_spec,))
+    if pol is None:
+        dr, r, c, _status = fn(batch.Dr, batch.R, batch.C)
+        info = None
+    else:
+        dr, r, c, info = run_ladder(batch.Dr, batch.R, batch.C, batch.grid,
+                                    fn, pol)
     return CholeskyFactor(BandedCTSF(batch.grid, dr, r, c),
-                          source_grid=source)
+                          source_grid=source, info=info)
 
 
 def concurrent_solve(factor: CholeskyFactor, B: jnp.ndarray,

@@ -1,6 +1,6 @@
 """Deterministic synthetic data pipeline.
 
-Two generators:
+Token generators:
 
 * :func:`token_batch` — pure-hash tokens keyed by (seed, step): exactly
   reproducible on restart from any step, no state to checkpoint.  This is
@@ -9,6 +9,23 @@ Two generators:
 * :class:`MarkovStream` — tokens from a fixed random first-order Markov
   chain: a learnable distribution (entropy strictly below uniform) used by
   the training examples so loss curves mean something.
+
+Pathological-matrix generators (the numerical fault-injection suite for
+``core/robustness.py``'s breakdown detection + jitter-ladder recovery):
+
+* :func:`indefinite_arrowhead` — SPD arrowhead with a known negative shift
+  applied to part of the diagonal (Cholesky breaks down at a predictable
+  pivot);
+* :func:`near_singular_arrowhead` — SPD with smallest eigenvalue driven to
+  a requested tiny value (factorizable in exact arithmetic, pivots at the
+  float32 cliff);
+* :func:`nan_contaminated_arrowhead` — SPD with seeded NaN entries
+  (symmetrically placed), the "silent NaN downstream" case detection must
+  flag.
+
+All are seeded and grid-parameterized like ``data.gmrf.make_arrowhead``
+(same ``(csc_matrix, ArrowheadStructure)`` return), so tests and the
+robustness benchmark can sweep them over the tier-1 grid cases.
 
 Batches are emitted host-side as numpy and sharded by the caller's
 `batch_specs`; for multi-host production each host would emit only its
@@ -21,8 +38,66 @@ from typing import Dict, Iterator, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+import scipy.sparse as sp
 
-__all__ = ["token_batch", "MarkovStream"]
+__all__ = ["token_batch", "MarkovStream", "indefinite_arrowhead",
+           "near_singular_arrowhead", "nan_contaminated_arrowhead"]
+
+
+def _base_arrowhead(n, bandwidth, arrow, rho, seed):
+    from .gmrf import make_arrowhead
+    return make_arrowhead(n, bandwidth, arrow, rho=rho, seed=seed)
+
+
+def indefinite_arrowhead(n: int, bandwidth: int, arrow: int,
+                         rho: float = 0.7, seed: int = 0,
+                         shift: float = 10.0, frac: float = 0.1):
+    """SPD arrowhead made indefinite by subtracting ``shift * mean_diag``
+    from a seeded random ``frac`` of the diagonal.  The negative Cholesky
+    pivot lands near the first corrupted index, so tests can assert the
+    detector's ``first_bad`` tile.  Returns ``(csc_matrix, structure)``."""
+    A, st = _base_arrowhead(n, bandwidth, arrow, rho, seed)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 1]))
+    k = max(1, int(frac * n))
+    idx = np.sort(rng.choice(n, size=k, replace=False))
+    A = sp.lil_matrix(A)
+    d = A.diagonal()
+    drop = shift * float(d.mean())
+    for i in idx:
+        A[i, i] = d[i] - drop
+    return sp.csc_matrix(A), st
+
+
+def near_singular_arrowhead(n: int, bandwidth: int, arrow: int,
+                            rho: float = 0.7, seed: int = 0,
+                            eig_min: float = 1e-6):
+    """SPD arrowhead whose smallest eigenvalue is shifted down to
+    ``eig_min`` (exact arithmetic keeps it factorizable; float32 pivots sit
+    at the breakdown threshold — the case ``pivot_rtol`` exists for).
+    Returns ``(csc_matrix, structure)``."""
+    A, st = _base_arrowhead(n, bandwidth, arrow, rho, seed)
+    lam_min = float(np.linalg.eigvalsh(A.toarray()).min())
+    return sp.csc_matrix(A - sp.eye(n, format="csc")
+                         * (lam_min - eig_min)), st
+
+
+def nan_contaminated_arrowhead(n: int, bandwidth: int, arrow: int,
+                               rho: float = 0.7, seed: int = 0,
+                               count: int = 1):
+    """SPD arrowhead with ``count`` seeded NaN entries placed symmetrically
+    on existing structural nonzeros — the silent-corruption case (a bad
+    DMA, a poisoned upstream reduction) the in-sweep ``nonfinite`` flag
+    must catch without any host sync.  Returns ``(csc_matrix, structure)``."""
+    A, st = _base_arrowhead(n, bandwidth, arrow, rho, seed)
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 2]))
+    A = sp.lil_matrix(A)
+    rows, cols = A.nonzero()
+    for pick in rng.choice(len(rows), size=min(count, len(rows)),
+                           replace=False):
+        i, j = int(rows[pick]), int(cols[pick])
+        A[i, j] = np.nan
+        A[j, i] = np.nan
+    return sp.csc_matrix(A), st
 
 
 def token_batch(seed: int, step: int, batch: int, seq: int, vocab: int,

@@ -54,7 +54,7 @@ __all__ = ["band_cholesky_sweep_pallas"]
 
 
 def _band_cholesky_kernel(start_ref, ac_ref, r_ref, p_ref, ro_ref, sch_ref,
-                          ring_ref, ringa_ref, sacc_ref,
+                          st_ref, ring_ref, ringa_ref, sacc_ref,
                           *, bt: int, nat_p: int, csz: int):
     k = pl.program_id(0)
     start = start_ref[0]
@@ -64,6 +64,12 @@ def _band_cholesky_kernel(start_ref, ac_ref, r_ref, p_ref, ro_ref, sch_ref,
     def _init():
         ring_ref[...] = jnp.zeros_like(ring_ref)
         ringa_ref[...] = jnp.zeros_like(ringa_ref)
+        # breakdown status carry [min_pivot, nonfinite, first_bad]: the
+        # (1, 3) output block's index map is constant, so it stays VMEM
+        # resident across the sequential grid and doubles as the carry
+        st_ref[0, 0] = jnp.float32(jnp.inf)
+        st_ref[0, 1] = jnp.float32(0.0)
+        st_ref[0, 2] = jnp.float32(-1.0)
 
     @pl.when(jax.lax.rem(k, csz) == 0)
     def _chunk_init():
@@ -81,6 +87,9 @@ def _band_cholesky_kernel(start_ref, ac_ref, r_ref, p_ref, ro_ref, sch_ref,
         p_ref[0] = identity_prefix_panel(bt, t).astype(p_ref.dtype)
         ro_ref[0] = jnp.zeros_like(ro_ref[0])
         sch_ref[0] = sacc_ref[...].astype(sch_ref.dtype)
+        # identity panel: pivot 1, finite — same fold ref.sweep_status
+        # applies to the emitted identity column
+        st_ref[0, 0] = jnp.minimum(st_ref[0, 0], jnp.float32(1.0))
 
     @pl.when(k >= start)
     def _work():
@@ -137,6 +146,23 @@ def _band_cholesky_kernel(start_ref, ac_ref, r_ref, p_ref, ro_ref, sch_ref,
         p_ref[0] = panel.astype(p_ref.dtype)
         ro_ref[0] = la.astype(ro_ref.dtype)
 
+        # in-sweep breakdown detection: fold this column into the status
+        # carry — the same per-column update ``ref.sweep_status`` applies
+        # to the emitted factor, so both backends report identical words.
+        # Masked 2-D reductions only (no 1-D iota/vectors on TPU).
+        rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+        dmask = rows == cols
+        dsq = jnp.where(dmask, lkk * lkk, jnp.float32(jnp.inf))
+        fin_d = jnp.all(jnp.isfinite(jnp.where(dmask, lkk, 0.0)))
+        piv = jnp.where(fin_d, jnp.min(dsq), jnp.float32(jnp.inf))
+        fin = jnp.all(jnp.isfinite(panel)) & jnp.all(jnp.isfinite(la))
+        bad = jnp.logical_not(fin) | (piv <= 0.0)
+        st_ref[0, 0] = jnp.minimum(st_ref[0, 0], piv)
+        st_ref[0, 1] = jnp.maximum(st_ref[0, 1], jnp.where(fin, 0.0, 1.0))
+        st_ref[0, 2] = jnp.where((st_ref[0, 2] < 0.0) & bad,
+                                 k.astype(jnp.float32), st_ref[0, 2])
+
 
 @functools.partial(jax.jit, static_argnames=("nchunks", "interpret"))
 def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1, start_tile=0,
@@ -149,6 +175,11 @@ def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1, start_tile=0,
       R_out  (ndt, nat, t, t)       factored arrow rows L[ndt+i, k]
       schur  (nch, nat, nat, t, t)  per-chunk partial sums of R_out·R_outᵀ
                                     (``nch = chunk_layout(ndt, nchunks)[1]``)
+      status (3,) float32           breakdown word [min_pivot, nonfinite,
+                                    first_bad] accumulated *in-kernel* as
+                                    the sweep runs (a VMEM-resident carry —
+                                    no extra HBM pass, no host sync);
+                                    matches ``ref.sweep_status`` exactly
 
     ``start_tile`` (traced SMEM scalar) declares columns ``k < start_tile``
     an identity-embedding prefix (``core/gridpolicy.py``): they emit
@@ -162,15 +193,17 @@ def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1, start_tile=0,
     nat = R.shape[1]
     csz, nch = chunk_layout(ndt, nchunks)
     if ndt == 0:
+        from .ref import empty_sweep_status
         return (jnp.zeros((0, b1, t, t), Ac.dtype),
                 jnp.zeros((0, nat, t, t), Ac.dtype),
-                jnp.zeros((nch, nat, nat, t, t), Ac.dtype))
+                jnp.zeros((nch, nat, nat, t, t), Ac.dtype),
+                empty_sweep_status())
     # zero-width arrow blocks break BlockSpecs: pad to one all-zero arrow
     # tile row (its factor and Schur terms vanish) and slice the output back.
     nat_p = max(nat, 1)
     rp = R if nat else jnp.zeros((ndt, 1, t, t), Ac.dtype)
     start = jnp.reshape(jnp.asarray(start_tile, jnp.int32), (1,))
-    panels, ro, schur = pl.pallas_call(
+    panels, ro, schur, st = pl.pallas_call(
         functools.partial(_band_cholesky_kernel, bt=bt, nat_p=nat_p, csz=csz),
         grid=(ndt,),
         in_specs=[
@@ -183,11 +216,13 @@ def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1, start_tile=0,
             pl.BlockSpec((1, nat_p, t, t), lambda k: (k, 0, 0, 0)),
             pl.BlockSpec((1, nat_p, nat_p, t, t),
                          lambda k: (k // csz, 0, 0, 0, 0)),
+            pl.BlockSpec((1, 3), lambda k: (0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((ndt, b1, t, t), Ac.dtype),
             jax.ShapeDtypeStruct((ndt, nat_p, t, t), Ac.dtype),
             jax.ShapeDtypeStruct((nch, nat_p, nat_p, t, t), Ac.dtype),
+            jax.ShapeDtypeStruct((1, 3), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((max(bt, 1), b1, t, t), jnp.float32),
@@ -196,4 +231,4 @@ def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1, start_tile=0,
         ],
         interpret=interpret,
     )(start, Ac, rp)
-    return panels, ro[:, :nat], schur[:, :nat, :nat]
+    return panels, ro[:, :nat], schur[:, :nat, :nat], st[0]

@@ -150,9 +150,14 @@ def band_cholesky_sweep(Ac: jnp.ndarray, R: jnp.ndarray, nchunks: int = 1,
                         start_tile=0, impl: Impl | None = None):
     """Whole band+arrow Cholesky factorization as one sweep-level primitive:
     ``Ac (ndt, bt+1, t, t)`` column-band tiles and ``R (ndt, nat, t, t)``
-    arrow rows -> ``(panels, R_out, schur)`` column panels of L, factored
-    arrow rows, and per-chunk corner-Schur partial sums (``nchunks`` chunks
-    — the tree-reduction leaves for the corner factorization).
+    arrow rows -> ``(panels, R_out, schur, status)`` column panels of L,
+    factored arrow rows, per-chunk corner-Schur partial sums (``nchunks``
+    chunks — the tree-reduction leaves for the corner factorization), and
+    the (3,) float32 breakdown status word ``[min_pivot, nonfinite,
+    first_bad]`` (see ``ref.sweep_status``) — detection rides the sweep
+    with no host sync on either backend, so callers (the jitter ladder in
+    ``core/robustness.py``) decide host-side whether to retry without the
+    factorization ever raising mid-batch.
 
     ``"pallas"`` runs one fused kernel for the entire factorization (VMEM
     ring of the last band_tiles panels + arrow ring, in-kernel potrf/trsm,

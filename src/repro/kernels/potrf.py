@@ -20,20 +20,30 @@ from jax.experimental import pallas as pl
 __all__ = ["potrf_pallas", "factorize_tile"]
 
 
-def factorize_tile(a: jnp.ndarray) -> jnp.ndarray:
+def factorize_tile(a: jnp.ndarray, return_status: bool = False):
     """In-kernel dense Cholesky of one (t, t) SPD tile via a masked
     right-looking column loop (only masked vector ops — no dynamic
     scatters — so it lowers inside a Pallas kernel body).  Shared by
     :func:`potrf_pallas` and the fused band-Cholesky sweep in
-    ``kernels/band_cholesky.py``.  Operates in and returns float32."""
+    ``kernels/band_cholesky.py``.  Operates in and returns float32.
+
+    ``return_status=True`` additionally returns the minimum *raw* pivot
+    encountered by the column loop — the true (possibly negative) value of
+    ``a[j, j]`` after trailing updates, before ``rsqrt`` destroys its sign.
+    A breakdown therefore reports *how* indefinite the tile was, which is
+    what sizes the jitter ladder in ``core/robustness.py`` (the sweep-level
+    status word derives its pivots from the emitted factor instead, so
+    both kernel backends agree bit-for-bit — see ``ref.sweep_status``)."""
     t = a.shape[-1]
     rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
     rvec = jax.lax.broadcasted_iota(jnp.int32, (t,), 0)
 
-    def step(j, a):
+    def step(j, carry):
+        a, min_piv = carry
         # pivot = a[j, j]
         pivot = jnp.sum(jnp.where((rows == j) & (cols == j), a, 0.0))
+        min_piv = jnp.minimum(min_piv, pivot)
         dinv = jax.lax.rsqrt(pivot)
         # column j, scaled: L[i, j] = a[i, j] / sqrt(pivot), rows >= j
         col = jnp.sum(jnp.where(cols == j, a, 0.0), axis=1) * dinv
@@ -43,10 +53,13 @@ def factorize_tile(a: jnp.ndarray) -> jnp.ndarray:
         a = a - jnp.where(trailing, col[:, None] * col[None, :], 0.0)
         # write the finished column j
         a = jnp.where(cols == j, col[:, None], a)
-        return a
+        return a, min_piv
 
-    a = jax.lax.fori_loop(0, t, step, a)
-    return jnp.where(rows >= cols, a, 0.0)
+    a, min_piv = jax.lax.fori_loop(0, t, step, (a, jnp.float32(jnp.inf)))
+    a = jnp.where(rows >= cols, a, 0.0)
+    if return_status:
+        return a, min_piv
+    return a
 
 
 def _potrf_kernel(a_ref, o_ref):

@@ -13,9 +13,59 @@ import jax.numpy as jnp
 __all__ = ["potrf_ref", "trsm_ref", "solve_panel_ref", "syrk_ref",
            "gemm_ref", "geadd_ref", "band_update_ref", "selinv_step_ref",
            "band_forward_sweep_ref", "band_backward_sweep_ref",
-           "band_cholesky_sweep_ref", "selinv_sweep_ref"]
+           "band_cholesky_sweep_ref", "selinv_sweep_ref", "sweep_status",
+           "empty_sweep_status"]
 
 _HI = jax.lax.Precision.HIGHEST
+
+
+def empty_sweep_status() -> jnp.ndarray:
+    """The healthy/empty status word: ``[+inf, 0, -1]``."""
+    return jnp.array([jnp.inf, 0.0, -1.0], jnp.float32)
+
+
+def sweep_status(panels: jnp.ndarray, R_out: jnp.ndarray) -> jnp.ndarray:
+    """Per-sweep breakdown status word, derived from the emitted factor.
+
+    Input:  panels (ndt, b1, t, t) column panels (``panels[k, 0]`` the
+            diagonal tile L_kk), R_out (ndt, nat, t, t) factored arrow rows.
+    Output: (3,) float32 ``[min_pivot, nonfinite, first_bad]`` with
+
+    * ``min_pivot`` — min over columns of ``min(diag(L_kk)^2)`` (the
+      smallest Cholesky pivot), taken over columns whose diagonal is
+      finite (+inf if none are);
+    * ``nonfinite`` — 1.0 iff any emitted panel/arrow entry is NaN/inf;
+    * ``first_bad`` — index of the first column whose output is
+      non-finite or whose pivot is <= 0 (-1.0 when the sweep is clean).
+
+    Deriving the word from the *emitted* factor (not the in-loop pivots of
+    ``potrf.factorize_tile``) is what makes both kernel backends agree: the
+    jnp scan's ``jnp.linalg.cholesky`` NaN-poisons on breakdown instead of
+    yielding finite negative pivots, but the emitted tiles are the same
+    story on both paths.  The fused Pallas kernel folds exactly this
+    per-column update into a VMEM status carry as the sweep runs; this
+    helper is the jnp oracle for it (and serves the post-hoc "window"
+    legacy path, whose index is then a *row* index — NaNs propagate
+    forward, so the first bad row and first bad column coincide).
+
+    jit-safe, no host sync, vmap/batch friendly: all three entries are
+    data-dependent scalars with static shapes.
+    """
+    ndt = panels.shape[0]
+    if ndt == 0:
+        return empty_sweep_status()
+    t = panels.shape[-1]
+    diag = jnp.diagonal(panels[:, 0], axis1=-2, axis2=-1)      # (ndt, t)
+    fin_diag = jnp.all(jnp.isfinite(diag), axis=-1)            # (ndt,)
+    piv = jnp.where(fin_diag, jnp.min(diag * diag, axis=-1), jnp.inf)
+    fin = (jnp.all(jnp.isfinite(panels), axis=(1, 2, 3))
+           & jnp.all(jnp.isfinite(R_out), axis=(1, 2, 3)))     # (ndt,)
+    bad = ~fin | (piv <= 0.0)
+    first = jnp.min(jnp.where(bad, jnp.arange(ndt), ndt))
+    first = jnp.where(first == ndt, -1, first)
+    return jnp.stack([jnp.min(piv),
+                      jnp.max(jnp.where(fin, 0.0, 1.0)),
+                      first.astype(jnp.float32)])
 
 
 def potrf_ref(a: jnp.ndarray) -> jnp.ndarray:
@@ -174,6 +224,7 @@ def band_cholesky_sweep_ref(Ac: jnp.ndarray, R: jnp.ndarray,
             schur  (nch, nat, nat, t, t)  per-chunk sums of R_out·R_outᵀ
                    (``nch = ring.chunk_layout(ndt, nchunks)[1]`` — the
                    tree-reduction leaves of the corner Schur complement)
+            status (3,) float32           breakdown word (:func:`sweep_status`)
 
     Panel k only ever reads the last bt panels' outputs, so the scan
     carries a (bt, bt+1, t, t) ring of recent panels (plus the arrow
@@ -252,7 +303,7 @@ def band_cholesky_sweep_ref(Ac: jnp.ndarray, R: jnp.ndarray,
     rpad = jnp.pad(R_out, ((0, nch * csz - ndt), (0, 0), (0, 0), (0, 0)))
     rchunk = rpad.reshape((nch, csz) + R_out.shape[1:])
     schur = jnp.einsum("nkiab,nkjcb->nijac", rchunk, rchunk, precision=_HI)
-    return panels, R_out, schur
+    return panels, R_out, schur, sweep_status(panels, R_out)
 
 
 def selinv_sweep_ref(lcol: jnp.ndarray, R: jnp.ndarray,

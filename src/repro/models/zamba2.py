@@ -39,7 +39,10 @@ def _shared_block_init(key, cfg: ModelConfig) -> Dict[str, Any]:
 
 
 def _n_super(cfg: ModelConfig) -> int:
-    assert cfg.n_layers % cfg.shared_attn_every == 0
+    if cfg.n_layers % cfg.shared_attn_every != 0:
+        raise ValueError(
+            f"n_layers={cfg.n_layers} must be divisible by "
+            f"shared_attn_every={cfg.shared_attn_every}")
     return cfg.n_layers // cfg.shared_attn_every
 
 

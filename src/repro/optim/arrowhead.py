@@ -151,7 +151,7 @@ class ArrowheadPrecond:
         corner_damp = self.damping + fro(R0).sum()
         dr = Dr0.at[:, 0].add(row_damp[:, None, None] * eye)
         c = C0.at[0, 0].add(corner_damp * eye)
-        Dr, R, C = _factorize_window_impl(dr, R0, c, g, None, 4)
+        Dr, R, C, _status = _factorize_window_impl(dr, R0, c, g, None, 4)
         return {"Dr": Dr, "R": R, "C": C}
 
     def precondition(self, factor, grads):

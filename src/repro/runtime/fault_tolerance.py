@@ -18,6 +18,10 @@ Failure model for thousands of nodes (DESIGN.md §7):
   runs without invalidating state.
 
 `FailureInjector` drives the tests: deterministic exceptions at chosen steps.
+`NumericalFaultInjector` is its sibling for *numerical* faults: instead of
+raising, it corrupts chosen elements of a CTSF matrix batch (indefinite
+shift or NaN poke) so the breakdown-detection + jitter-ladder machinery in
+``core/robustness.py`` can be exercised deterministically end to end.
 """
 from __future__ import annotations
 
@@ -29,7 +33,8 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 
-__all__ = ["FailureInjector", "StragglerMonitor", "TrainLoop"]
+__all__ = ["FailureInjector", "NumericalFaultInjector", "StragglerMonitor",
+           "TrainLoop"]
 
 
 class FailureInjector:
@@ -44,6 +49,55 @@ class FailureInjector:
             self.fail_at[step] -= 1
             self.injected.append(step)
             raise RuntimeError(f"injected failure at step {step}")
+
+
+class NumericalFaultInjector:
+    """Deterministically corrupts elements of a CTSF matrix batch — the
+    numerical sibling of :class:`FailureInjector`.  Where FailureInjector
+    models *process* faults (raise, retry the step), this models *data*
+    faults that would otherwise sail through silently: an indefinite
+    diagonal (model misconfiguration, a θ-candidate outside the SPD cone)
+    or a NaN (bad DMA, poisoned upstream reduction).  The corruption is
+    seeded and recorded, so tests and ``benchmarks/bench_robustness.py``
+    can assert exactly which elements the detector must flag and the
+    jitter ladder must recover or degrade gracefully.
+
+    ``corrupt(batch, modes)`` takes a batched :class:`BandedCTSF` (leading
+    batch axis) and a dict ``{element_index: mode}`` with mode
+    ``"indefinite"`` (subtract a large multiple of the mean diagonal from
+    one seeded diagonal tile) or ``"nan"`` (poke NaN into one seeded band
+    entry); it returns a new batch and appends ``(index, mode, tile)``
+    records to ``injected``.
+    """
+
+    def __init__(self, seed: int = 0, shift: float = 10.0):
+        self.seed = seed
+        self.shift = shift
+        self.injected: List[tuple] = []
+
+    def corrupt(self, batch, modes: Dict[int, str]):
+        import jax.numpy as jnp
+        rng = np.random.default_rng(self.seed)
+        Dr = batch.Dr
+        g = batch.grid
+        t = g.t
+        ndt = g.n_diag_tiles
+        for idx in sorted(modes):
+            mode = modes[idx]
+            tile = int(rng.integers(0, max(1, ndt)))
+            if mode == "indefinite":
+                diag = jnp.diagonal(Dr[idx, :, 0], axis1=-2, axis2=-1)
+                drop = self.shift * jnp.mean(jnp.abs(diag))
+                Dr = Dr.at[idx, tile, 0].add(-drop * jnp.eye(t, dtype=Dr.dtype))
+            elif mode == "nan":
+                a, b = int(rng.integers(0, t)), int(rng.integers(0, t))
+                Dr = Dr.at[idx, tile, 0, a, b].set(jnp.nan)
+            else:
+                raise ValueError(
+                    f"unknown corruption mode {mode!r} for element {idx} "
+                    "(want 'indefinite' or 'nan')")
+            self.injected.append((idx, mode, tile))
+        return type(batch)(g, Dr, batch.R, batch.C)
 
 
 class StragglerMonitor:

@@ -28,7 +28,8 @@ def split_stages(stacked_layer_params: Any, n_stages: int) -> Any:
     """(L, ...) stacked layer params -> (S, L/S, ...) stage-stacked."""
     def r(x):
         L = x.shape[0]
-        assert L % n_stages == 0, f"{L} layers not divisible by {n_stages} stages"
+        if L % n_stages != 0:
+            raise ValueError(f"{L} layers not divisible by {n_stages} stages")
         return x.reshape((n_stages, L // n_stages) + x.shape[1:])
     return jax.tree.map(r, stacked_layer_params)
 
@@ -44,7 +45,8 @@ def pipeline_forward(stage_fn: Callable, stage_params: Any, x: jnp.ndarray,
     S = mesh.shape[axis]
     M = n_microbatches
     B = x.shape[0]
-    assert B % M == 0, f"batch {B} % microbatches {M} != 0"
+    if B % M != 0:
+        raise ValueError(f"batch {B} % microbatches {M} != 0")
     mb = B // M
     xs = x.reshape((M, mb) + x.shape[1:])
 

@@ -252,7 +252,7 @@ def test_band_cholesky_sweep(n, bw, ar, t, nchunks):
     Ac = band_row_to_col(bm.Dr)
     got = band_cholesky_sweep_pallas(Ac, bm.R, nchunks=nchunks)
     want = ref.band_cholesky_sweep_ref(Ac, bm.R, nchunks=nchunks)
-    for g, w, name in zip(got, want, ("panels", "R_out", "schur")):
+    for g, w, name in zip(got, want, ("panels", "R_out", "schur", "status")):
         assert g.shape == w.shape, name
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=2e-4, atol=2e-4, err_msg=name)
@@ -268,7 +268,7 @@ def test_band_cholesky_sweep_vmap(rng):
         Acb, Rb)
     for i in range(3):
         want = ref.band_cholesky_sweep_ref(Acb[i], Rb[i], nchunks=2)
-        for g, w, name in zip(got, want, ("panels", "R_out", "schur")):
+        for g, w, name in zip(got, want, ("panels", "R_out", "schur", "status")):
             np.testing.assert_allclose(np.asarray(g[i]), np.asarray(w),
                                        rtol=2e-4, atol=2e-4, err_msg=name)
 
@@ -345,7 +345,7 @@ def test_band_cholesky_sweep_start_tile(start_tile):
     st = jnp.asarray(start_tile, jnp.int32)
     got = band_cholesky_sweep_pallas(Ac, emb.R, nchunks=3, start_tile=st)
     want = ref.band_cholesky_sweep_ref(Ac, emb.R, nchunks=3, start_tile=st)
-    for g, w, name in zip(got, want, ("panels", "R_out", "schur")):
+    for g, w, name in zip(got, want, ("panels", "R_out", "schur", "status")):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=2e-4, atol=2e-4, err_msg=name)
     panels = np.asarray(got[0])
