@@ -33,6 +33,9 @@ from repro.core import (BandedCTSF, TileGrid, factorize_window,
                         selected_inverse)
 from repro.kernels import ops
 from repro.kernels.ring import band_row_to_col
+# single library implementation of the launch counter + static cost model
+# (ISSUE 7: the bench imports it, it no longer defines its own copy)
+from repro.runtime.telemetry import count_pallas_launches, kernel_report
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -47,28 +50,6 @@ def _time(fn, reps=2):
     return best
 
 
-def count_pallas_launches(closed_jaxpr) -> int:
-    """Count pallas_call sites in a (closed) jaxpr, descending into
-    sub-jaxprs; scan/while bodies multiply by their trip count where it is
-    statically known (``scan`` carries ``length``), so a per-panel kernel
-    loop is charged once per panel."""
-    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
-    total = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            total += 1
-            continue
-        mult = eqn.params.get("length", 1) \
-            if eqn.primitive.name == "scan" else 1
-        for v in eqn.params.values():
-            if hasattr(v, "jaxpr"):
-                total += mult * count_pallas_launches(v)
-            elif isinstance(v, (list, tuple)):
-                total += mult * sum(count_pallas_launches(b)
-                                    for b in v if hasattr(b, "jaxpr"))
-    return total
-
-
 def run(quick: bool = True):
     from repro.data import make_arrowhead
 
@@ -80,18 +61,21 @@ def run(quick: bool = True):
     backend = jax.default_backend()
     interpret = backend != "tpu"
 
-    # --- launch counts (backend-independent, the CI gate) -------------------
+    # --- launch counts + static costs (backend-independent, the CI gate) ---
     Ac = band_row_to_col(bm.Dr)
-    fused_fact_launches = count_pallas_launches(jax.make_jaxpr(
-        lambda a, r: ops.band_cholesky_sweep(a, r, nchunks=8,
-                                             impl="pallas"))(Ac, bm.R))
+    fact_report = kernel_report(
+        lambda a, r: ops.band_cholesky_sweep(a, r, nchunks=8, impl="pallas"),
+        Ac, bm.R, grid=grid, sweep="cholesky")
+    fused_fact_launches = fact_report.pallas_launches
     f0 = factorize_window(bm, impl="ref")
     ctsf = f0.ctsf
     nat = grid.n_arrow_tiles
     sc_shape = jax.ShapeDtypeStruct((nat, nat, t, t), ctsf.C.dtype)
-    fused_selinv_launches = count_pallas_launches(jax.make_jaxpr(
-        lambda l, r, s: ops.selinv_sweep(l, r, s, impl="pallas"))(
-        band_row_to_col(ctsf.Dr), ctsf.R, sc_shape))
+    selinv_report = kernel_report(
+        lambda l, r, s: ops.selinv_sweep(l, r, s, impl="pallas"),
+        band_row_to_col(ctsf.Dr), ctsf.R, sc_shape, grid=grid,
+        sweep="selinv")
+    fused_selinv_launches = selinv_report.pallas_launches
     # the pre-fusion per-panel dispatch counts (one potrf + trsm +
     # band_update launch per band panel; one solve_panel + selinv_step per
     # selinv column)
@@ -141,6 +125,19 @@ def run(quick: bool = True):
         "fused_selinv_launches": fused_selinv_launches,
         "scan_selinv_launch_equiv": scan_selinv_launches,
         "selinv_launch_reduction": selinv_reduction,
+        # static per-sweep cost estimates from telemetry.kernel_report
+        # (flops / bytes-moved / arithmetic intensity under the shared
+        # roofline hardware model) — informational, never gated
+        "kernel_report": {
+            "cholesky": {"flops": fact_report.flops,
+                         "bytes_moved": fact_report.bytes_moved,
+                         "intensity": fact_report.intensity,
+                         "bound": fact_report.bound},
+            "selinv": {"flops": selinv_report.flops,
+                       "bytes_moved": selinv_report.bytes_moved,
+                       "intensity": selinv_report.intensity,
+                       "bound": selinv_report.bound},
+        },
         "backend": backend,
         # interpret-mode timings never gate; launch counts do.  On TPU the
         # speedups graduate to top-level gated metrics.

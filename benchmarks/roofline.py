@@ -20,10 +20,9 @@ from typing import Dict, List, Optional
 
 from repro.configs import get as get_cfg
 from repro.configs.base import SHAPES
-
-PEAK_FLOPS = 197e12          # bf16 per chip
-HBM_BW = 819e9               # bytes/s per chip
-ICI_BW = 50e9                # bytes/s per link (1 link used conservatively)
+# hardware model lives in the library (single source of truth shared with
+# telemetry.kernel_report); re-exported here for existing importers
+from repro.runtime.telemetry import HBM_BW, ICI_BW, PEAK_FLOPS
 
 RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                        "results", "dryrun")

@@ -77,31 +77,66 @@ def _record_failures(record: dict) -> list:
     return out
 
 
+def _gated_metrics_cell(record: dict) -> str:
+    """Compact ``metric=value(min lo)`` listing of a record's gated
+    metrics for the check-only summary table (interpret-mode diagnostics
+    excluded, like gating itself)."""
+    diag = record.get("interpret_diagnostics") or {}
+    cells = []
+    for name, lo in sorted((record.get("thresholds") or {}).items()):
+        metric = name[: -len("_min")] if name.endswith("_min") else name
+        if metric in diag:
+            continue
+        val = record.get(metric)
+        shown = f"{val:.3g}" if isinstance(val, (int, float)) else "?"
+        cells.append(f"{metric}={shown}(min {lo:.3g})")
+    return " ".join(cells) if cells else "-"
+
+
 def check_records(root: str = _ROOT) -> int:
     """Validate all committed BENCH_*.json against their embedded
-    thresholds; returns the number of failing records (printing each
-    failure).  Every suite in ``RECORD_SUITES`` must have a committed
-    record — a registered suite with no BENCH_<suite>.json fails."""
+    thresholds; returns the number of failing records (printing a
+    one-line-per-suite summary table, then every regressed suite).
+    Every suite in ``RECORD_SUITES`` must have a committed record — a
+    registered suite with no BENCH_<suite>.json fails."""
     bad = 0
+    failing = []   # (suite/record name, reasons)
     paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
     for suite in RECORD_SUITES:
         expected = os.path.join(root, f"BENCH_{suite}.json")
         if expected not in paths:
-            print(f"FAIL: BENCH_{suite}.json — suite {suite!r} is "
-                  "registered in benchmarks/run.py but has no committed "
-                  "record")
+            reason = (f"suite {suite!r} is registered in benchmarks/run.py "
+                      "but has no committed record")
+            print(f"FAIL: BENCH_{suite}.json — {reason}")
+            failing.append((suite, [reason]))
             bad += 1
     if not paths:
         print("no BENCH_*.json records found", file=sys.stderr)
         return bad or 1
+    rows = []
     for path in paths:
         with open(path) as f:
             record = json.load(f)
+        name = os.path.basename(path)[len("BENCH_"): -len(".json")]
         reasons = _record_failures(record)
-        tag = "FAIL" if reasons else "ok"
-        print(f"{tag}: {os.path.basename(path)}"
-              + (f" — {'; '.join(reasons)}" if reasons else ""))
-        bad += bool(reasons)
+        rows.append((name, _gated_metrics_cell(record),
+                     "FAIL" if reasons else "pass"))
+        if reasons:
+            failing.append((name, reasons))
+            bad += 1
+    widths = [max(len(r[i]) for r in rows + [("suite", "gated metrics",
+                                              "status")]) for i in range(3)]
+    fmt = "  ".join("{:<%d}" % w for w in widths)
+    print(fmt.format("suite", "gated metrics", "status"))
+    for row in rows:
+        print(fmt.format(*row))
+    if failing:
+        print(f"\n{len(failing)} suite(s) failing:")
+        for name, reasons in failing:
+            for r in reasons:
+                print(f"  {name}: {r}")
+    else:
+        print("\nall records pass")
     return bad
 
 
@@ -112,11 +147,19 @@ def main() -> None:
     p.add_argument("--check-only", action="store_true",
                    help="validate committed BENCH_*.json thresholds "
                         "without re-running any benchmark")
+    p.add_argument("--telemetry", default=None, metavar="PATH",
+                   help="enable the runtime telemetry registry for the run "
+                        "and dump a Chrome trace-event JSON (spans + a "
+                        "'metrics' snapshot; open in Perfetto) to PATH")
     args = p.parse_args()
     quick = not args.full
 
     if args.check_only:
         raise SystemExit(1 if check_records() else 0)
+
+    from repro.runtime import telemetry
+    if args.telemetry:
+        telemetry.enable()
 
     from . import (bench_accumulation, bench_bucketing, bench_cholesky,
                    bench_concurrent, bench_libraries, bench_robustness,
@@ -143,9 +186,10 @@ def main() -> None:
             continue
         t_start = time.time()
         try:
-            for row in mod.run(quick=quick):
-                print(f"{row[0]},{row[1]:.1f},{row[2]}")
-                sys.stdout.flush()
+            with telemetry.span(f"bench.{name}", quick=quick):
+                for row in mod.run(quick=quick):
+                    print(f"{row[0]},{row[1]:.1f},{row[2]}")
+                    sys.stdout.flush()
         except Exception as e:
             failures.append((name, [f"crashed: {type(e).__name__}: {e}"]))
             print(f"{name},ERROR,", flush=True)
@@ -165,6 +209,9 @@ def main() -> None:
                 failures.append((name, reasons))
                 print(f"{name},THRESHOLD_FAIL,{';'.join(reasons)}",
                       flush=True)
+    if args.telemetry:
+        telemetry.write_trace(args.telemetry)
+        print(f"# wrote telemetry trace {args.telemetry}", flush=True)
     if failures:
         print("\nFAILED benchmark suites:", file=sys.stderr)
         for name, reasons in failures:

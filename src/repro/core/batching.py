@@ -17,14 +17,22 @@ with the same two tricks:
   compiled-executable cache — re-entering an evicted key pays a full
   retrace + XLA compile — so ``maxsize`` trades memory against recompile
   cost for workloads hot on more than ``maxsize`` grids.
+
+Named caches report hit/miss/eviction/duplicate-trace counters and a
+trace-time histogram through :mod:`repro.runtime.telemetry` under
+``cache.*{cache=<name>}``; :meth:`LRUCache.stats` exposes the same
+numbers as a plain dict regardless of whether telemetry is enabled.
 """
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 from typing import Any, Callable, Hashable, Optional, Tuple
 
 import jax.numpy as jnp
+
+from repro.runtime import telemetry
 
 __all__ = ["LRUCache", "bucketed_batched_call", "next_pow2"]
 
@@ -39,28 +47,94 @@ class LRUCache:
     lock covers only the bookkeeping — a cache miss may still trace the
     same callable twice in two threads (JAX tracing is outside the lock
     by design), which wastes a trace but stays correct: ``put`` is
-    last-writer-wins."""
+    last-writer-wins, and the wasted trace is counted (``stats()``
+    ``duplicate_traces``, telemetry ``cache.duplicate_trace``) rather
+    than silently dropped.
 
-    def __init__(self, maxsize: int = 64):
+    A ``name`` makes the cache visible to telemetry: hits, misses,
+    evictions, duplicate traces, and :meth:`get_or_create` trace times
+    are emitted under ``cache.*{cache=<name>}``.  Anonymous caches keep
+    local ``stats()`` only."""
+
+    def __init__(self, maxsize: int = 64, name: Optional[str] = None):
         if maxsize <= 0:
             raise ValueError("maxsize must be positive")
         self.maxsize = maxsize
+        self.name = name
         self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
         self._lock = threading.RLock()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+        self._duplicate_traces = 0
+
+    def _emit(self, metric: str, value: float = 1.0) -> None:
+        if self.name is not None and telemetry.enabled():
+            telemetry.inc(metric, value, cache=self.name)
 
     def get(self, key: Hashable) -> Optional[Any]:
         with self._lock:
             if key not in self._entries:
-                return None
-            self._entries.move_to_end(key)
-            return self._entries[key]
+                self._misses += 1
+                hit = False
+            else:
+                self._entries.move_to_end(key)
+                self._hits += 1
+                hit = True
+                value = self._entries[key]
+        self._emit("cache.hit" if hit else "cache.miss")
+        return value if hit else None
 
     def put(self, key: Hashable, value: Any) -> None:
         with self._lock:
+            duplicate = key in self._entries
+            if duplicate:
+                # a second thread raced us through the same miss and
+                # already traced this key — count the wasted trace
+                self._duplicate_traces += 1
             self._entries[key] = value
             self._entries.move_to_end(key)
+            evicted = 0
             while len(self._entries) > self.maxsize:
                 self._entries.popitem(last=False)
+                evicted += 1
+            self._evictions += evicted
+        if duplicate:
+            self._emit("cache.duplicate_trace")
+        if evicted:
+            self._emit("cache.eviction", evicted)
+
+    def get_or_create(self, key: Hashable, factory: Callable[[], Any]) -> Any:
+        """``get`` or build-via-``factory``-then-``put``, timing the
+        factory (the trace+jit-wrap cost) into ``cache.trace_seconds``.
+        The factory runs outside the lock by design — see the class note
+        on concurrent misses."""
+        value = self.get(key)
+        if value is not None:
+            return value
+        t0 = time.perf_counter()
+        value = factory()
+        dt = time.perf_counter() - t0
+        if self.name is not None and telemetry.enabled():
+            telemetry.observe("cache.trace_seconds", dt, cache=self.name)
+        self.put(key, value)
+        return value
+
+    def stats(self) -> dict:
+        """Point-in-time counters: hits/misses/evictions/duplicate_traces
+        since construction plus current size/maxsize.  Read under the
+        lock, so the numbers are mutually consistent."""
+        with self._lock:
+            return {"hits": self._hits, "misses": self._misses,
+                    "evictions": self._evictions,
+                    "duplicate_traces": self._duplicate_traces,
+                    "size": len(self._entries), "maxsize": self.maxsize}
+
+    def clear(self) -> None:
+        """Drop every entry.  Cumulative counters are kept (clearing is
+        not an eviction); subsequent gets miss and re-trace."""
+        with self._lock:
+            self._entries.clear()
 
     def __len__(self) -> int:
         with self._lock:

@@ -34,6 +34,7 @@ import numpy as np
 from repro.kernels import ops
 from repro.kernels.ref import sweep_status
 from repro.kernels.ring import band_col_to_row, band_row_to_col
+from repro.runtime import telemetry
 from .batching import LRUCache, bucketed_batched_call
 from .ctsf import BandedCTSF, TileMatrix
 from .robustness import (FactorInfo, RegularizePolicy, fold_corner_status,
@@ -420,22 +421,25 @@ def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
     :class:`~repro.core.robustness.FactorInfo` to the returned factor
     instead of ever raising; an SPD input factorizes on the first attempt
     and its factor is bit-identical to the unregularized call."""
-    pol = RegularizePolicy.resolve(regularize)
-    source = None
-    if policy is not None:
-        m, source, start = _embed_matrix(m, policy)
-        call = lambda dr, r, c: _factorize_window_impl(
-            dr, r, c, m.grid, impl, tree_chunks, sweep, start)
-    else:
-        call = lambda dr, r, c: _factorize_window_impl(
-            dr, r, c, m.grid, impl, tree_chunks, sweep)
-    if pol is None:
-        Dr, R, C, _status = call(m.Dr, m.R, m.C)
-        info = None
-    else:
-        Dr, R, C, info = run_ladder(m.Dr, m.R, m.C, m.grid, call, pol)
-    return CholeskyFactor(BandedCTSF(m.grid, Dr, R, C), source_grid=source,
-                          info=info)
+    with telemetry.span("factorize.window",
+                        grid=telemetry.rung_tag(m.grid)) as sp:
+        pol = RegularizePolicy.resolve(regularize)
+        source = None
+        if policy is not None:
+            m, source, start = _embed_matrix(m, policy)
+            sp.tag(rung=telemetry.rung_tag(m.grid))
+            call = lambda dr, r, c: _factorize_window_impl(
+                dr, r, c, m.grid, impl, tree_chunks, sweep, start)
+        else:
+            call = lambda dr, r, c: _factorize_window_impl(
+                dr, r, c, m.grid, impl, tree_chunks, sweep)
+        if pol is None:
+            Dr, R, C, _status = call(m.Dr, m.R, m.C)
+            info = None
+        else:
+            Dr, R, C, info = run_ladder(m.Dr, m.R, m.C, m.grid, call, pol)
+        return CholeskyFactor(BandedCTSF(m.grid, Dr, R, C),
+                              source_grid=source, info=info)
 
 
 # ---------------------------------------------------------------------------
@@ -445,7 +449,7 @@ def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
 # bounded so long-running serving processes cycling through many distinct
 # grids cannot grow the traced-callable map without limit; an evicted key
 # pays retrace + recompile on re-entry (core/batching.py)
-_BATCHED_WINDOW_CACHE = LRUCache(maxsize=64)
+_BATCHED_WINDOW_CACHE = LRUCache(maxsize=64, name="batched_window")
 
 
 def _batched_window_fn(grid, impl, tree_chunks, sweep="auto",
@@ -459,19 +463,18 @@ def _batched_window_fn(grid, impl, tree_chunks, sweep="auto",
     grid embedding into ``grid`` — whatever its pad depth — shares this
     one cache entry; the plain path keeps its static-zero trace."""
     key = (grid, impl, tree_chunks, sweep, use_start)
-    fn = _BATCHED_WINDOW_CACHE.get(key)
-    if fn is None:
+
+    def build():
         if use_start:
-            fn = jax.jit(jax.vmap(
+            return jax.jit(jax.vmap(
                 lambda dr, r, c, s: _factorize_window_impl(
                     dr, r, c, grid, impl, tree_chunks, sweep, s),
                 in_axes=(0, 0, 0, None)))
-        else:
-            fn = jax.jit(jax.vmap(
-                lambda dr, r, c: _factorize_window_impl(dr, r, c, grid, impl,
-                                                        tree_chunks, sweep)))
-        _BATCHED_WINDOW_CACHE.put(key, fn)
-    return fn
+        return jax.jit(jax.vmap(
+            lambda dr, r, c: _factorize_window_impl(dr, r, c, grid, impl,
+                                                    tree_chunks, sweep)))
+
+    return _BATCHED_WINDOW_CACHE.get_or_create(key, build)
 
 
 def factorize_window_batched(batch, impl: Optional[str] = None,
@@ -532,37 +535,42 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
             raise ValueError(
                 f"batched CTSF needs a leading batch axis, got Dr.ndim="
                 f"{Dr.ndim}")
-    source = None
-    if policy is not None:
-        emb, source, start = _embed_matrix(BandedCTSF(grid, Dr, R, C),
-                                           policy)
-        Dr, R, C, grid = emb.Dr, emb.R, emb.C, emb.grid
-        fn = _batched_window_fn(grid, impl, tree_chunks, sweep,
-                                use_start=True)
-        call = lambda dr, r, c: fn(dr, r, c, start)
-    else:
-        call = _batched_window_fn(grid, impl, tree_chunks, sweep)
-    pol = RegularizePolicy.resolve(regularize)
-    if pol is None:
-        dr, r, c, _status = bucketed_batched_call(call, (Dr, R, C), bucket)
-        info = None
-    else:
-        # ladder inside the bucketed call: the pow2 padding elements (copies
-        # of the last matrix) ride the retries and are stripped with the
-        # other outputs; FactorInfo arrays flatten through the stripper
-        kept = []
+    with telemetry.span("factorize.window_batched", b=Dr.shape[0],
+                        grid=telemetry.rung_tag(grid)) as sp:
+        source = None
+        if policy is not None:
+            emb, source, start = _embed_matrix(BandedCTSF(grid, Dr, R, C),
+                                               policy)
+            Dr, R, C, grid = emb.Dr, emb.R, emb.C, emb.grid
+            sp.tag(rung=telemetry.rung_tag(grid))
+            fn = _batched_window_fn(grid, impl, tree_chunks, sweep,
+                                    use_start=True)
+            call = lambda dr, r, c: fn(dr, r, c, start)
+        else:
+            call = _batched_window_fn(grid, impl, tree_chunks, sweep)
+        pol = RegularizePolicy.resolve(regularize)
+        if pol is None:
+            dr, r, c, _status = bucketed_batched_call(call, (Dr, R, C),
+                                                      bucket)
+            info = None
+        else:
+            # ladder inside the bucketed call: the pow2 padding elements
+            # (copies of the last matrix) ride the retries and are stripped
+            # with the other outputs; FactorInfo arrays flatten through the
+            # stripper
+            kept = []
 
-        def ladder_call(dr_, r_, c_):
-            d2, r2, c2, inf = run_ladder(dr_, r_, c_, grid, call, pol)
-            kept.append(inf.matrix is not None)
-            return (d2, r2, c2, inf.status, inf.attempts, inf.tau,
-                    inf.min_pivot, inf.first_bad_tile)
+            def ladder_call(dr_, r_, c_):
+                d2, r2, c2, inf = run_ladder(dr_, r_, c_, grid, call, pol)
+                kept.append(inf.matrix is not None)
+                return (d2, r2, c2, inf.status, inf.attempts, inf.tau,
+                        inf.min_pivot, inf.first_bad_tile)
 
-        dr, r, c, st, at, ta, mp, fb = bucketed_batched_call(
-            ladder_call, (Dr, R, C), bucket)
-        # re-attach the *unpadded* original batch for the refinement path
-        matrix = BandedCTSF(grid, Dr, R, C) if kept[-1] else None
-        info = FactorInfo(status=st, attempts=at, tau=ta, min_pivot=mp,
-                          first_bad_tile=fb, matrix=matrix)
-    return CholeskyFactor(BandedCTSF(grid, dr, r, c), source_grid=source,
-                          info=info)
+            dr, r, c, st, at, ta, mp, fb = bucketed_batched_call(
+                ladder_call, (Dr, R, C), bucket)
+            # re-attach the *unpadded* original batch for the refinement path
+            matrix = BandedCTSF(grid, Dr, R, C) if kept[-1] else None
+            info = FactorInfo(status=st, attempts=at, tau=ta, min_pivot=mp,
+                              first_bad_tile=fb, matrix=matrix)
+        return CholeskyFactor(BandedCTSF(grid, dr, r, c), source_grid=source,
+                              info=info)

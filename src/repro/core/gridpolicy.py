@@ -54,6 +54,8 @@ from typing import Iterable, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime import telemetry
+
 from .batching import next_pow2
 from .ctsf import BandedCTSF
 from .structure import TileGrid
@@ -117,9 +119,20 @@ class GridBucketPolicy:
 
     def canonicalize(self, grid: TileGrid) -> TileGrid:
         """The canonical grid a problem on ``grid`` embeds into (same tile
-        size; only the tile counts are bucketed)."""
+        size; only the tile counts are bucketed).
+
+        When telemetry is enabled each call counts a hit on the chosen
+        rung (``gridpolicy.rung_hit{rung=...}``) and observes the padded
+        flop overhead of the embedding
+        (``gridpolicy.padded_flop_overhead`` histogram) — the two numbers
+        that say whether the policy's rung set fits the traffic."""
         ndt_c, bt_c, nat_c = self.rungs_for(grid)
-        return TileGrid.from_tile_counts(grid.t, ndt_c, bt_c, nat_c)
+        cgrid = TileGrid.from_tile_counts(grid.t, ndt_c, bt_c, nat_c)
+        if telemetry.enabled():
+            telemetry.inc("gridpolicy.rung_hit", rung=telemetry.rung_tag(cgrid))
+            telemetry.observe("gridpolicy.padded_flop_overhead",
+                              padded_flop_overhead(grid, cgrid))
+        return cgrid
 
     def join(self, grids: Iterable[TileGrid]) -> TileGrid:
         """Smallest canonical grid every grid in ``grids`` embeds into —

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.runtime import telemetry
 from .ctsf import BandedCTSF
 
 __all__ = ["STATUS_OK", "STATUS_RECOVERED", "STATUS_FAILED",
@@ -281,7 +282,14 @@ def run_ladder(Dr: jnp.ndarray, R: jnp.ndarray, C: jnp.ndarray, grid,
     (scale, ok, min_piv0, first_bad,
      status0, attempts, tau_app) = _first_attempt_eval(sv, Dr, C, grid,
                                                        policy)
-    if np.asarray(ok).all():
+    ok_host = np.asarray(ok)          # the ladder's one clean-path readback
+    if ok_host.all():
+        # telemetry piggybacks on the readback the ladder already pays —
+        # no extra device sync rides the <= 5% clean-overhead gate
+        if telemetry.enabled():
+            n = int(ok_host.size)
+            telemetry.inc("robustness.attempts", n)
+            telemetry.inc("robustness.status", n, outcome="ok")
         info = FactorInfo(status=status0, attempts=attempts, tau=tau_app,
                           min_pivot=min_piv0, first_bad_tile=first_bad,
                           matrix=None)
@@ -308,6 +316,18 @@ def run_ladder(Dr: jnp.ndarray, R: jnp.ndarray, C: jnp.ndarray, grid,
                        jnp.where(tau_app > 0, STATUS_RECOVERED, STATUS_OK),
                        STATUS_FAILED).astype(jnp.int32)
     jittered = bool(np.asarray(jnp.any(tau_app > 0)))
+    if telemetry.enabled():
+        # ladder path only — extra readbacks here are off the clean path,
+        # which short-circuited above
+        st_host = np.asarray(status).ravel()
+        telemetry.inc("robustness.attempts",
+                      int(np.asarray(attempts).sum()))
+        for code, outcome in ((STATUS_OK, "ok"),
+                              (STATUS_RECOVERED, "recovered"),
+                              (STATUS_FAILED, "failed")):
+            n = int((st_host == code).sum())
+            if n:
+                telemetry.inc("robustness.status", n, outcome=outcome)
     matrix = BandedCTSF(grid, Dr, R, C) \
         if (jittered and policy.keep_matrix) else None
     info = FactorInfo(status=status, attempts=attempts, tau=tau_app,

@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.kernels.ring import band_col_to_row, band_row_to_col
+from repro.runtime import telemetry
 from .batching import LRUCache, bucketed_batched_call
 from .cholesky import CholeskyFactor
 from .ctsf import BandedCTSF
@@ -217,14 +218,17 @@ def selected_inverse(factor: CholeskyFactor,
     restricted back to the source grid, so every returned entry is an
     exact entry of the source problem's inverse."""
     from .solve import _resolve_embedding
-    ctsf, src, pad = _resolve_embedding(factor, policy)
-    if src is not None:
-        from .gridpolicy import restrict_selinv
-        sd, sr, sc = _selinv_impl(ctsf.Dr, ctsf.R, ctsf.C, ctsf.grid, impl,
-                                  jnp.asarray(pad, jnp.int32))
-        return restrict_selinv(SelectedInverse(ctsf.grid, sd, sr, sc), src)
-    sd, sr, sc = _selinv_impl(ctsf.Dr, ctsf.R, ctsf.C, ctsf.grid, impl)
-    return SelectedInverse(ctsf.grid, sd, sr, sc)
+    with telemetry.span("selinv.selected_inverse") as sp:
+        ctsf, src, pad = _resolve_embedding(factor, policy)
+        sp.tag(grid=telemetry.rung_tag(ctsf.grid))
+        if src is not None:
+            from .gridpolicy import restrict_selinv
+            sd, sr, sc = _selinv_impl(ctsf.Dr, ctsf.R, ctsf.C, ctsf.grid,
+                                      impl, jnp.asarray(pad, jnp.int32))
+            return restrict_selinv(SelectedInverse(ctsf.grid, sd, sr, sc),
+                                   src)
+        sd, sr, sc = _selinv_impl(ctsf.Dr, ctsf.R, ctsf.C, ctsf.grid, impl)
+        return SelectedInverse(ctsf.grid, sd, sr, sc)
 
 
 # ---------------------------------------------------------------------------
@@ -233,7 +237,7 @@ def selected_inverse(factor: CholeskyFactor,
 
 # bounded traced-callable cache (core/batching.py), mirroring
 # cholesky._BATCHED_WINDOW_CACHE
-_BATCHED_SELINV_CACHE = LRUCache(maxsize=64)
+_BATCHED_SELINV_CACHE = LRUCache(maxsize=64, name="batched_selinv")
 
 
 def _batched_selinv_fn(grid, impl, use_start=False):
@@ -244,17 +248,16 @@ def _batched_selinv_fn(grid, impl, use_start=False):
     canonical-grid path (one cache entry per canonical rung, shared by
     every pad depth)."""
     key = (grid, impl, use_start)
-    fn = _BATCHED_SELINV_CACHE.get(key)
-    if fn is None:
+
+    def build():
         if use_start:
-            fn = jax.jit(jax.vmap(
+            return jax.jit(jax.vmap(
                 lambda dr, r, c, s: _selinv_impl(dr, r, c, grid, impl, s),
                 in_axes=(0, 0, 0, None)))
-        else:
-            fn = jax.jit(jax.vmap(
-                lambda dr, r, c: _selinv_impl(dr, r, c, grid, impl)))
-        _BATCHED_SELINV_CACHE.put(key, fn)
-    return fn
+        return jax.jit(jax.vmap(
+            lambda dr, r, c: _selinv_impl(dr, r, c, grid, impl)))
+
+    return _BATCHED_SELINV_CACHE.get_or_create(key, build)
 
 
 def selinv_batched(factor: CholeskyFactor, impl: Optional[str] = None,
@@ -283,19 +286,22 @@ def selinv_batched(factor: CholeskyFactor, impl: Optional[str] = None,
     rung — and the result is restricted back to the source grid.
     """
     from .solve import _resolve_embedding
-    ctsf, src, pad = _resolve_embedding(factor, policy)
-    if ctsf.Dr.ndim != 5:
-        raise ValueError(f"selinv_batched needs a leading batch axis, got "
-                         f"Dr.ndim={ctsf.Dr.ndim}")
-    if src is not None:
-        from .gridpolicy import restrict_selinv
-        fn = _batched_selinv_fn(ctsf.grid, impl, use_start=True)
-        start = jnp.asarray(pad, jnp.int32)
-        call = lambda dr, r, c: fn(dr, r, c, start)
+    with telemetry.span("selinv.batched") as sp:
+        ctsf, src, pad = _resolve_embedding(factor, policy)
+        if ctsf.Dr.ndim != 5:
+            raise ValueError(f"selinv_batched needs a leading batch axis, "
+                             f"got Dr.ndim={ctsf.Dr.ndim}")
+        sp.tag(b=ctsf.Dr.shape[0], grid=telemetry.rung_tag(ctsf.grid))
+        if src is not None:
+            from .gridpolicy import restrict_selinv
+            fn = _batched_selinv_fn(ctsf.grid, impl, use_start=True)
+            start = jnp.asarray(pad, jnp.int32)
+            call = lambda dr, r, c: fn(dr, r, c, start)
+            sd, sr, sc = bucketed_batched_call(
+                call, (ctsf.Dr, ctsf.R, ctsf.C), bucket)
+            return restrict_selinv(SelectedInverse(ctsf.grid, sd, sr, sc),
+                                   src)
         sd, sr, sc = bucketed_batched_call(
-            call, (ctsf.Dr, ctsf.R, ctsf.C), bucket)
-        return restrict_selinv(SelectedInverse(ctsf.grid, sd, sr, sc), src)
-    sd, sr, sc = bucketed_batched_call(
-        _batched_selinv_fn(ctsf.grid, impl), (ctsf.Dr, ctsf.R, ctsf.C),
-        bucket)
-    return SelectedInverse(ctsf.grid, sd, sr, sc)
+            _batched_selinv_fn(ctsf.grid, impl), (ctsf.Dr, ctsf.R, ctsf.C),
+            bucket)
+        return SelectedInverse(ctsf.grid, sd, sr, sc)

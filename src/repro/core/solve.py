@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+from repro.runtime import telemetry
 from .cholesky import CholeskyFactor
 from .ctsf import BandedCTSF
 
@@ -249,23 +250,27 @@ def forward_solve_many(factor: CholeskyFactor, B: jnp.ndarray,
     fast start and the restriction are handled here, and ``start_tile``
     keeps its source-grid meaning.
     """
-    ctsf, src, g, B, start, restrict = _embedded_panels(factor, policy, B)
-    bd, ba = _split_rhs(g, B)
-    if start is not None:
-        # caller's start_tile is in source band-tile coordinates; the
-        # embedded sweep starts past the identity prefix on top of it
-        eff = start + min(int(start_tile), src.n_diag_tiles) if start_tile \
-            else start
-        yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g, impl, eff)
-    elif start_tile:
-        # traced loop bound: no recompile per distinct start, but the sweep
-        # becomes a dynamic-bound while_loop (not reverse-differentiable) —
-        # so the common start_tile=0 path keeps its static bounds below.
-        yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g,
-                               impl, start_tile)
-    else:
-        yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g, impl)
-    return restrict(_merge_panels(yd, ya))
+    with telemetry.span("solve.forward_many", k=B.shape[-1]) as sp:
+        ctsf, src, g, B, start, restrict = _embedded_panels(factor, policy, B)
+        sp.tag(grid=telemetry.rung_tag(g))
+        bd, ba = _split_rhs(g, B)
+        if start is not None:
+            # caller's start_tile is in source band-tile coordinates; the
+            # embedded sweep starts past the identity prefix on top of it
+            eff = start + min(int(start_tile), src.n_diag_tiles) \
+                if start_tile else start
+            yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g, impl,
+                                   eff)
+        elif start_tile:
+            # traced loop bound: no recompile per distinct start, but the
+            # sweep becomes a dynamic-bound while_loop (not
+            # reverse-differentiable) — so the common start_tile=0 path
+            # keeps its static bounds below.
+            yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g,
+                                   impl, start_tile)
+        else:
+            yd, ya = _forward_impl(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g, impl)
+        return restrict(_merge_panels(yd, ya))
 
 
 def backward_solve_many(factor: CholeskyFactor, Y: jnp.ndarray,
@@ -274,14 +279,16 @@ def backward_solve_many(factor: CholeskyFactor, Y: jnp.ndarray,
     """Solve ``L^T X = Y`` for an (padded_n, k) panel of right-hand sides in
     one blocked sweep.  Embedded factors take/return panels in the source
     layout (cf. :func:`forward_solve_many`)."""
-    ctsf, _, g, Y, start, restrict = _embedded_panels(factor, policy, Y)
-    yd, ya = _split_rhs(g, Y)
-    if start is not None:
-        xd, xa = _backward_impl(ctsf.Dr, ctsf.R, ctsf.C, yd, ya, g, impl,
-                                start)
-    else:
-        xd, xa = _backward_impl(ctsf.Dr, ctsf.R, ctsf.C, yd, ya, g, impl)
-    return restrict(_merge_panels(xd, xa))
+    with telemetry.span("solve.backward_many", k=Y.shape[-1]) as sp:
+        ctsf, _, g, Y, start, restrict = _embedded_panels(factor, policy, Y)
+        sp.tag(grid=telemetry.rung_tag(g))
+        yd, ya = _split_rhs(g, Y)
+        if start is not None:
+            xd, xa = _backward_impl(ctsf.Dr, ctsf.R, ctsf.C, yd, ya, g, impl,
+                                    start)
+        else:
+            xd, xa = _backward_impl(ctsf.Dr, ctsf.R, ctsf.C, yd, ya, g, impl)
+        return restrict(_merge_panels(xd, xa))
 
 
 def _refine_panels(fDr, fR, fC, mDr, mR, mC, bd, ba, xd, xa, g, impl, start):
@@ -338,17 +345,20 @@ def solve_many(factor: CholeskyFactor, B: jnp.ndarray,
     *original* A, correcting most of the O(tau) bias the diagonal
     perturbation introduced; clean factors skip it entirely.
     """
-    ctsf, _, g, B, start, restrict = _embedded_panels(factor, policy, B)
-    bd, ba = _split_rhs(g, B)
-    xd, xa = _solve_panels(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g, impl, start)
-    info = factor.info
-    if (info is not None and info.matrix is not None
-            and info.matrix.grid == g and np.asarray(info.tau).ndim == 0
-            and bool(np.asarray(info.tau) > 0)):
-        m = info.matrix
-        xd, xa = _refine_panels(ctsf.Dr, ctsf.R, ctsf.C, m.Dr, m.R, m.C,
-                                bd, ba, xd, xa, g, impl, start)
-    return restrict(_merge_panels(xd, xa))
+    with telemetry.span("solve.solve_many", k=B.shape[-1]) as sp:
+        ctsf, _, g, B, start, restrict = _embedded_panels(factor, policy, B)
+        sp.tag(grid=telemetry.rung_tag(g))
+        bd, ba = _split_rhs(g, B)
+        xd, xa = _solve_panels(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g, impl,
+                               start)
+        info = factor.info
+        if (info is not None and info.matrix is not None
+                and info.matrix.grid == g and np.asarray(info.tau).ndim == 0
+                and bool(np.asarray(info.tau) > 0)):
+            m = info.matrix
+            xd, xa = _refine_panels(ctsf.Dr, ctsf.R, ctsf.C, m.Dr, m.R, m.C,
+                                    bd, ba, xd, xa, g, impl, start)
+        return restrict(_merge_panels(xd, xa))
 
 
 def forward_solve(factor: CholeskyFactor, b: jnp.ndarray,
@@ -398,9 +408,10 @@ def sample_gmrf_many(factor: CholeskyFactor, key: jax.Array, num: int,
     For embedded factors ``z`` is drawn in the source layout, so a
     bucketed factor reproduces the unbucketed samples bit-for-bit per key.
     """
-    z = jax.random.normal(key, (_rhs_grid(factor).padded_n, num),
-                          dtype=jnp.float32)
-    return backward_solve_many(factor, z, impl)
+    with telemetry.span("solve.sample_gmrf_many", num=num):
+        z = jax.random.normal(key, (_rhs_grid(factor).padded_n, num),
+                              dtype=jnp.float32)
+        return backward_solve_many(factor, z, impl)
 
 
 def _validate_indices(grid, indices) -> np.ndarray:
@@ -460,22 +471,25 @@ def marginal_variances(factor: CholeskyFactor, indices: jnp.ndarray,
     """
     g = _rhs_grid(factor)
     padded = _validate_indices(g, indices)
-    if method == "selinv":
-        from .selinv import selected_inverse
-        sigma = selected_inverse(factor, impl=impl, policy=policy)
-        return jnp.take(sigma.diagonal(padded=True), jnp.asarray(padded),
-                        axis=-1)
-    if method == "panels":
-        k = padded.shape[0]
-        E = jnp.zeros((g.padded_n, k), jnp.float32)
-        E = E.at[jnp.asarray(padded), jnp.arange(k)].set(1.0)
-        # RHS sparsity: unit-vector panels are zero above the selected row,
-        # so the band sweep starts at the first tile holding a nonzero.
-        start = min(int(padded.min()) // g.t, g.n_diag_tiles) if k else 0
-        Y = forward_solve_many(factor, E, impl=impl, start_tile=start,
-                               policy=policy)
-        return jnp.sum(Y * Y, axis=0)
-    raise ValueError(f"unknown method {method!r} (want 'selinv' or 'panels')")
+    with telemetry.span("solve.marginal_variances", method=method,
+                        k=len(padded), grid=telemetry.rung_tag(g)):
+        if method == "selinv":
+            from .selinv import selected_inverse
+            sigma = selected_inverse(factor, impl=impl, policy=policy)
+            return jnp.take(sigma.diagonal(padded=True), jnp.asarray(padded),
+                            axis=-1)
+        if method == "panels":
+            k = padded.shape[0]
+            E = jnp.zeros((g.padded_n, k), jnp.float32)
+            E = E.at[jnp.asarray(padded), jnp.arange(k)].set(1.0)
+            # RHS sparsity: unit-vector panels are zero above the selected
+            # row, so the band sweep starts at the first nonzero tile.
+            start = min(int(padded.min()) // g.t, g.n_diag_tiles) if k else 0
+            Y = forward_solve_many(factor, E, impl=impl, start_tile=start,
+                                   policy=policy)
+            return jnp.sum(Y * Y, axis=0)
+        raise ValueError(
+            f"unknown method {method!r} (want 'selinv' or 'panels')")
 
 
 def _marginal_variances_map(factor: CholeskyFactor,
