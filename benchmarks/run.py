@@ -24,6 +24,12 @@ matrices (long on CPU); the default is structure-preserving scaled versions.
                                       counts for a mixed-grid stream;
                                       writes BENCH_bucketing.json)
 
+  Rung server -> bench_serving       (continuous-batching front-end:
+                                      seeded Poisson replay, throughput +
+                                      latency percentiles, compile-per-rung
+                                      and bit-exact-replay gates; writes
+                                      BENCH_serving.json)
+
 ``--check-only`` validates every committed ``BENCH_*.json`` against its
 embedded thresholds without re-running anything — the fast CI gate
 against landing a record that fails its own pass criteria.  Suites
@@ -49,7 +55,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # suites that emit a BENCH_<name>.json trajectory point; --check-only
 # requires each of these records to exist at the repo root (and pass its
 # own thresholds), so deleting a record cannot silently pass CI
-RECORD_SUITES = ("solve", "selinv", "cholesky", "bucketing", "robustness")
+RECORD_SUITES = ("solve", "selinv", "cholesky", "bucketing", "robustness",
+                 "serving")
 
 
 def _record_failures(record: dict) -> list:
@@ -163,8 +170,9 @@ def main() -> None:
 
     from . import (bench_accumulation, bench_bucketing, bench_cholesky,
                    bench_concurrent, bench_libraries, bench_robustness,
-                   bench_scalability, bench_selinv, bench_solve,
-                   bench_tile_size, bench_tree_reduction, roofline)
+                   bench_scalability, bench_selinv, bench_serving,
+                   bench_solve, bench_tile_size, bench_tree_reduction,
+                   roofline)
     suites = {
         "accumulation": bench_accumulation,
         "libraries": bench_libraries,
@@ -177,6 +185,7 @@ def main() -> None:
         "cholesky": bench_cholesky,
         "bucketing": bench_bucketing,
         "robustness": bench_robustness,
+        "serving": bench_serving,
         "roofline": roofline,
     }
     failures = []  # (suite, [reasons...])

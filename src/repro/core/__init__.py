@@ -8,10 +8,12 @@ from .cholesky import (CholeskyFactor, factorize_tasklist, factorize_window,
 from .tree_reduction import chunked_tree_sum, should_use_tree, tree_combine
 from .solve import (backward_solve, backward_solve_many, forward_solve,
                     forward_solve_many, logdet, marginal_variances,
-                    sample_gmrf, sample_gmrf_many, solve, solve_many)
+                    sample_gmrf, sample_gmrf_many, solve, solve_many,
+                    solve_many_batched)
 from .selinv import SelectedInverse, selected_inverse, selinv_batched
 from .concurrent import concurrent_factorize, concurrent_selinv
-from .gridpolicy import (GridBucketPolicy, embed_ctsf, embed_rhs,
+from .gridpolicy import (GridBucketPolicy, assemble_rung_batch,
+                         assemble_rung_rhs, embed_ctsf, embed_rhs,
                          padded_flop_overhead, restrict_factor, restrict_rhs,
                          restrict_selinv)
 from .robustness import (STATUS_FAILED, STATUS_OK, STATUS_RECOVERED,
@@ -28,9 +30,11 @@ __all__ = [
     "backward_solve", "backward_solve_many", "forward_solve",
     "forward_solve_many", "logdet", "marginal_variances",
     "sample_gmrf", "sample_gmrf_many", "solve", "solve_many",
+    "solve_many_batched",
     "SelectedInverse", "selected_inverse", "selinv_batched",
     "concurrent_factorize", "concurrent_selinv",
-    "GridBucketPolicy", "embed_ctsf", "embed_rhs", "padded_flop_overhead",
+    "GridBucketPolicy", "assemble_rung_batch", "assemble_rung_rhs",
+    "embed_ctsf", "embed_rhs", "padded_flop_overhead",
     "restrict_factor", "restrict_rhs", "restrict_selinv",
     "STATUS_FAILED", "STATUS_OK", "STATUS_RECOVERED",
     "FactorInfo", "RegularizePolicy",

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 from repro.runtime import telemetry
 
-__all__ = ["LRUCache", "bucketed_batched_call", "next_pow2"]
+__all__ = ["LRUCache", "RungQueue", "bucketed_batched_call", "next_pow2"]
 
 
 class LRUCache:
@@ -150,6 +150,46 @@ class LRUCache:
         compiles by diffing snapshots of this set across a workload."""
         with self._lock:
             return list(self._entries.keys())
+
+
+class RungQueue:
+    """Host-side FIFO of pending requests for one canonical rung.
+
+    The per-rung building block of the continuous-batching scheduler
+    (``launch/rung_server.py``): items are appended in arrival order, each
+    with the absolute ``flush_by`` time by which it must leave the queue
+    (``min(arrival + max_delay, request deadline)``).  Deliberately *not*
+    thread-safe and *not* clock-aware — the scheduler serializes access
+    and injects every timestamp, which is what keeps the whole flush state
+    machine replayable without threads or wall-clock sleeps.
+    """
+
+    def __init__(self):
+        self._items: list = []          # (item, flush_by) in arrival order
+
+    def push(self, item: Any, flush_by: float) -> None:
+        self._items.append((item, flush_by))
+
+    def earliest_flush_by(self) -> float:
+        """Earliest ``flush_by`` among pending items (``inf`` when empty) —
+        the next deadline boundary the scheduler must tick at.  FIFO order
+        does not guarantee monotone deadlines (a later arrival may carry a
+        tighter explicit deadline), hence the min over all items."""
+        if not self._items:
+            return float("inf")
+        return min(fb for _, fb in self._items)
+
+    def pop(self, n: Optional[int] = None) -> list:
+        """Remove and return the ``n`` oldest items (all items when None),
+        preserving arrival order — the composition of one flushed batch."""
+        if n is None or n >= len(self._items):
+            taken, self._items = self._items, []
+        else:
+            taken, self._items = self._items[:n], self._items[n:]
+        return [item for item, _ in taken]
+
+    def __len__(self) -> int:
+        return len(self._items)
 
 
 def next_pow2(b: int) -> int:

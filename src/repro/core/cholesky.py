@@ -482,7 +482,8 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
                              bucket: bool = True,
                              sweep: str = "auto",
                              policy=None,
-                             regularize=None) -> CholeskyFactor:
+                             regularize=None,
+                             start_tile=None) -> CholeskyFactor:
     """Factorize a batch of same-grid matrices in one vmapped dispatch.
 
     ``batch`` is either a list of :class:`BandedCTSF` or one whose arrays
@@ -516,7 +517,20 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
     returned ``factor.info`` carries ``(B,)`` status/attempts/tau vectors
     — one poisoned θ-candidate degrades to a flagged element instead of
     sinking the sweep.
+
+    ``start_tile`` is for callers that did the canonical-grid embedding
+    *themselves* (``gridpolicy.assemble_rung_batch`` — the rung server
+    stacks mixed source grids before dispatch): it threads the shared
+    identity-prefix depth through the sweep as a traced scalar, reusing
+    the same ``use_start`` cache entry the ``policy`` path compiles,
+    without re-embedding.  Mutually exclusive with ``policy`` (which
+    computes its own start); the returned factor keeps ``source_grid``
+    None — restriction stays with the caller who owns the embedding.
     """
+    if start_tile is not None and policy is not None:
+        raise ValueError(
+            "start_tile= is for pre-embedded batches and policy= embeds "
+            "itself; pass one or the other")
     if isinstance(batch, (list, tuple)):
         grid = batch[0].grid
         for m in batch:
@@ -543,6 +557,11 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
                                                policy)
             Dr, R, C, grid = emb.Dr, emb.R, emb.C, emb.grid
             sp.tag(rung=telemetry.rung_tag(grid))
+            fn = _batched_window_fn(grid, impl, tree_chunks, sweep,
+                                    use_start=True)
+            call = lambda dr, r, c: fn(dr, r, c, start)
+        elif start_tile is not None:
+            start = jnp.asarray(start_tile, jnp.int32)
             fn = _batched_window_fn(grid, impl, tree_chunks, sweep,
                                     use_start=True)
             call = lambda dr, r, c: fn(dr, r, c, start)

@@ -60,8 +60,9 @@ from .batching import next_pow2
 from .ctsf import BandedCTSF
 from .structure import TileGrid
 
-__all__ = ["GridBucketPolicy", "embed_ctsf", "embed_rhs", "restrict_rhs",
-           "restrict_factor", "restrict_selinv", "padded_flop_overhead"]
+__all__ = ["GridBucketPolicy", "assemble_rung_batch", "assemble_rung_rhs",
+           "embed_ctsf", "embed_rhs", "restrict_rhs", "restrict_factor",
+           "restrict_selinv", "padded_flop_overhead"]
 
 
 def _round_to_rungs(v: int, rungs: Sequence[int]) -> int:
@@ -271,6 +272,45 @@ def restrict_rhs(X: jnp.ndarray, grid: TileGrid, cgrid: TileGrid) -> jnp.ndarray
     return jnp.concatenate(
         [X[..., pad_d * t:(pad_d + ndt) * t, :],
          X[..., off_a:off_a + nat * t, :]], axis=-2)
+
+
+def assemble_rung_batch(mats: Sequence[BandedCTSF],
+                        cgrid: TileGrid) -> Tuple[BandedCTSF, int]:
+    """Embed same-rung matrices (arbitrary source grids) onto ``cgrid``
+    and stack them on a leading batch axis — the batch-assembly step of
+    the continuous-batching rung server.
+
+    Returns ``(batch, start_tile)``: ``start_tile`` is the *minimum*
+    identity-prefix depth over the batch, the deepest shared skip that is
+    correct for every element.  Elements with a deeper prefix have their
+    rows between ``start_tile`` and their own pad depth *computed* rather
+    than skipped, but those rows are exact identity tiles whose factor is
+    themselves, so under-skipping never changes any element's factor —
+    one traced start serves the whole mixed-depth batch.
+    """
+    if not mats:
+        raise ValueError("assemble_rung_batch needs at least one matrix")
+    embedded = [embed_ctsf(m, cgrid) for m in mats]
+    start = min(cgrid.n_diag_tiles - m.grid.n_diag_tiles for m in mats)
+    return BandedCTSF(cgrid,
+                      jnp.stack([e.Dr for e in embedded]),
+                      jnp.stack([e.R for e in embedded]),
+                      jnp.stack([e.C for e in embedded])), start
+
+
+def assemble_rung_rhs(panels: Sequence[jnp.ndarray],
+                      grids: Sequence[TileGrid],
+                      cgrid: TileGrid) -> jnp.ndarray:
+    """Lift per-request RHS panels (each in its own source padded layout)
+    into the canonical layout and stack: ``(B, cgrid.padded_n, k)``.  The
+    RHS-side companion of :func:`assemble_rung_batch`; per-request results
+    come back out through :func:`restrict_rhs`."""
+    if len(panels) != len(grids):
+        raise ValueError(f"{len(panels)} panels for {len(grids)} grids")
+    if not panels:
+        raise ValueError("assemble_rung_rhs needs at least one panel")
+    return jnp.stack([embed_rhs(p, g, cgrid)
+                      for p, g in zip(panels, grids)])
 
 
 def _sweep_tile_matmuls(ndt: int, bt: int, nat: int) -> int:

@@ -127,6 +127,19 @@ class FactorInfo:
         """Host bool array: which elements produced a usable factor."""
         return np.asarray(self.status) != STATUS_FAILED
 
+    def element(self, i: int) -> dict:
+        """Host-side scalar view of one batch element's outcome — the
+        per-request payload a serving future carries
+        (``launch/rung_server.py``): plain Python numbers, no device
+        arrays, so completing a future never re-syncs.  Works on scalar
+        (unbatched) info too, where ``i`` must be 0."""
+        pick = lambda a, cast: cast(np.asarray(a).reshape(-1)[i])
+        return {"status": pick(self.status, int),
+                "attempts": pick(self.attempts, int),
+                "tau": pick(self.tau, float),
+                "min_pivot": pick(self.min_pivot, float),
+                "first_bad_tile": pick(self.first_bad_tile, int)}
+
 
 def diag_scale(Dr: jnp.ndarray, C: jnp.ndarray, grid) -> jnp.ndarray:
     """Per-element diagonal scale: max |A_ii| over band + corner diagonals

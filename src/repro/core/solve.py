@@ -34,12 +34,14 @@ import numpy as np
 
 from repro.kernels import ops
 from repro.runtime import telemetry
+from .batching import LRUCache, bucketed_batched_call
 from .cholesky import CholeskyFactor
 from .ctsf import BandedCTSF
 
 __all__ = ["forward_solve", "backward_solve", "solve", "logdet",
            "forward_solve_many", "backward_solve_many", "solve_many",
-           "sample_gmrf", "sample_gmrf_many", "marginal_variances"]
+           "solve_many_batched", "sample_gmrf", "sample_gmrf_many",
+           "marginal_variances"]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -359,6 +361,130 @@ def solve_many(factor: CholeskyFactor, B: jnp.ndarray,
             xd, xa = _refine_panels(ctsf.Dr, ctsf.R, ctsf.C, m.Dr, m.R, m.C,
                                     bd, ba, xd, xa, g, impl, start)
         return restrict(_merge_panels(xd, xa))
+
+
+# bounded traced-callable cache for the batched solve/refine sweeps —
+# keyed on (grid, impl, use_start[, "refine"]) but NOT on the panel width
+# k or the batch size: k and batch land in XLA's shape-keyed compile
+# cache under the one jit wrapper, so the Python-side key count stays
+# O(#canonical rungs) for mixed serving traffic (cf. _BATCHED_WINDOW_CACHE)
+_BATCHED_SOLVE_CACHE = LRUCache(maxsize=64, name="batched_solve")
+
+
+def _batched_solve_fn(grid, impl, use_start: bool):
+    """One vmapped+jitted ``A X = B`` panel solve per (grid, impl,
+    has-start) — each batch element solves its *own* RHS panel, unlike
+    ``concurrent_solve`` which shares one B across the batch.
+    ``use_start=True`` adds a traced identity-prefix depth broadcast
+    across the batch (the rung-server canonical-grid path)."""
+    key = (grid, impl, use_start)
+
+    def build():
+        if use_start:
+            return jax.jit(jax.vmap(
+                lambda dr, r, c, bd, ba, s: _solve_panels(
+                    dr, r, c, bd, ba, grid, impl, s),
+                in_axes=(0, 0, 0, 0, 0, None)))
+        return jax.jit(jax.vmap(
+            lambda dr, r, c, bd, ba: _solve_panels(dr, r, c, bd, ba, grid,
+                                                   impl)))
+
+    return _BATCHED_SOLVE_CACHE.get_or_create(key, build)
+
+
+def _batched_refine_fn(grid, impl, use_start: bool):
+    """Vmapped per-element-masked refinement step for jitter-recovered
+    batches: each element refines against its own original matrix, and
+    the correction applies only where that element's ``tau > 0``.  Kept a
+    *separate* dispatch from :func:`_batched_solve_fn` so clean batches
+    never run it — and clean elements inside a recovered batch, whose
+    corrections are masked off, stay bit-identical to an all-clean run."""
+    key = (grid, impl, use_start, "refine")
+
+    def build():
+        def one(fdr, fr, fc, mdr, mr, mc, bd, ba, xd, xa, tau, s=None):
+            xd1, xa1 = _refine_panels(fdr, fr, fc, mdr, mr, mc, bd, ba,
+                                      xd, xa, grid, impl, s)
+            use = tau > 0
+            return jnp.where(use, xd1, xd), jnp.where(use, xa1, xa)
+
+        if use_start:
+            return jax.jit(jax.vmap(one, in_axes=(0,) * 11 + (None,)))
+        return jax.jit(jax.vmap(
+            lambda *a: one(*a), in_axes=(0,) * 11))
+
+    return _BATCHED_SOLVE_CACHE.get_or_create(key, build)
+
+
+def solve_many_batched(factor: CholeskyFactor, B: jnp.ndarray,
+                       impl: Optional[str] = None,
+                       start_tile=None, bucket: bool = True) -> jnp.ndarray:
+    """``A_i X_i = B_i`` for a batched factor with *per-element* RHS
+    panels — the rung-batch execution primitive of
+    ``launch/rung_server.py`` (``concurrent_solve`` is the other batched
+    solve, sharing one B across the batch; serving requests each bring
+    their own).
+
+    Args:
+      factor: batched banded-arrowhead factor (leading batch axis on the
+        CTSF arrays, e.g. from ``factorize_window_batched``).
+      B: ``(batch, padded_n, k)`` float32 panels in the padded layout of
+        ``factor.ctsf.grid``.
+      impl: kernel backend forwarded to the sweeps.
+      start_tile: optional shared identity-prefix depth of a pre-embedded
+        canonical batch (``gridpolicy.assemble_rung_batch``), threaded as
+        a traced scalar so mixed pad depths share one compilation.
+      bucket: pow2-pad the batch axis before dispatch (cf.
+        ``factorize_window_batched``).
+
+    Returns: ``(batch, padded_n, k)`` solution panels, still in the
+    factor grid's layout — callers owning an embedding restrict each
+    element with ``gridpolicy.restrict_rhs``.
+
+    Jitter-recovered factors (``factor.info`` with per-element ``tau`` and
+    a retained original matrix) get one residual-checked refinement pass
+    as a separate vmapped dispatch, masked per element to ``tau > 0`` —
+    clean siblings of a recovered element return solutions bit-identical
+    to an uncontaminated batch.
+    """
+    ctsf = factor.ctsf
+    g = ctsf.grid
+    t, ndt, nat = g.t, g.n_diag_tiles, g.n_arrow_tiles
+    if ctsf.Dr.ndim != 5:
+        raise ValueError("solve_many_batched needs a batched factor "
+                         f"(leading batch axis), got Dr.ndim={ctsf.Dr.ndim}")
+    nb = ctsf.Dr.shape[0]
+    if B.ndim != 3 or B.shape[0] != nb or B.shape[1] != g.padded_n:
+        raise ValueError(
+            f"rhs panels must be (batch={nb}, padded_n={g.padded_n}, k), "
+            f"got {B.shape}")
+    k = B.shape[2]
+    with telemetry.span("solve.solve_many_batched", b=nb, k=k,
+                        grid=telemetry.rung_tag(g)):
+        bd = B[:, :ndt * t].reshape(nb, ndt, t, k)
+        ba = B[:, ndt * t:].reshape(nb, nat, t, k)
+        use_start = start_tile is not None
+        fn = _batched_solve_fn(g, impl, use_start)
+        if use_start:
+            s = jnp.asarray(start_tile, jnp.int32)
+            call = lambda dr, r, c, pd, pa: fn(dr, r, c, pd, pa, s)
+        else:
+            call = fn
+        xd, xa = bucketed_batched_call(call, (ctsf.Dr, ctsf.R, ctsf.C,
+                                              bd, ba), bucket)
+        info = factor.info
+        if (info is not None and info.matrix is not None
+                and info.matrix.grid == g
+                and np.asarray(info.tau).shape == (nb,)
+                and bool(np.asarray(info.tau).max() > 0)):
+            m = info.matrix
+            rfn = _batched_refine_fn(g, impl, use_start)
+            rcall = (lambda *a: rfn(*a, s)) if use_start else rfn
+            xd, xa = bucketed_batched_call(
+                rcall, (ctsf.Dr, ctsf.R, ctsf.C, m.Dr, m.R, m.C, bd, ba,
+                        xd, xa, jnp.asarray(info.tau, jnp.float32)), bucket)
+        return jnp.concatenate([xd.reshape(nb, ndt * t, k),
+                                xa.reshape(nb, nat * t, k)], axis=1)
 
 
 def forward_solve(factor: CholeskyFactor, b: jnp.ndarray,

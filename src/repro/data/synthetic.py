@@ -41,7 +41,8 @@ import numpy as np
 import scipy.sparse as sp
 
 __all__ = ["token_batch", "MarkovStream", "indefinite_arrowhead",
-           "near_singular_arrowhead", "nan_contaminated_arrowhead"]
+           "near_singular_arrowhead", "nan_contaminated_arrowhead",
+           "request_stream"]
 
 
 def _base_arrowhead(n, bandwidth, arrow, rho, seed):
@@ -109,6 +110,42 @@ def token_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
            "labels": toks[:, 1:].astype(np.int32)}
     if extras:
         out.update(extras)
+    return out
+
+
+def request_stream(seed: int, cases, num: int, rate: float = 1000.0,
+                   k: int = 4, deadline_budget: Optional[float] = None):
+    """Seeded Poisson mixed-grid arrival stream for the serving harness.
+
+    Emits ``num`` host-side request *specs* (no core imports, no arrays):
+    dicts with ``arrival`` (absolute clock time; exponential
+    inter-arrival gaps at ``rate`` requests per clock unit), ``case``
+    (one of ``cases``, each an ``(n, bandwidth, arrow)`` triple drawn
+    uniformly), ``seed`` (per-request matrix/RHS seed), ``k`` (RHS panel
+    width) and ``deadline`` (``arrival + deadline_budget``, or None).
+    Everything is derived from one ``SeedSequence([seed, ...])`` stream,
+    so the same seed replays the identical arrival process — the
+    determinism contract ``tests/test_serving.py`` and
+    ``benchmarks/bench_serving.py`` are built on.
+    """
+    cases = [tuple(int(v) for v in c) for c in cases]
+    if not cases:
+        raise ValueError("request_stream needs at least one case")
+    if num < 0 or rate <= 0:
+        raise ValueError(f"need num >= 0 and rate > 0, got {num}, {rate}")
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 7]))
+    out = []
+    now = 0.0
+    for i in range(num):
+        now += float(rng.exponential(1.0 / rate))
+        out.append({
+            "arrival": now,
+            "case": cases[int(rng.integers(len(cases)))],
+            "seed": int(rng.integers(2 ** 31)),
+            "k": int(k),
+            "deadline": (now + deadline_budget
+                         if deadline_budget is not None else None),
+        })
     return out
 
 

@@ -1,0 +1,642 @@
+"""Continuous-batching rung server: the serving front-end over the
+canonical-grid bucketing (``core/gridpolicy.py``), batched factorization
+(``core/cholesky.py``) and batched solves (``core/solve.py``).
+
+Mixed-grid factorize/solve requests arrive continuously; each is
+canonicalized by :class:`~repro.core.gridpolicy.GridBucketPolicy` into a
+**rung** (canonical grid × RHS panel width) and queued per rung.  A rung
+queue flushes as one micro-batch when any of three conditions fires:
+
+========  ==========================================================
+reason    trigger
+========  ==========================================================
+full      the queue reached ``max_batch`` pending requests
+deadline  ``now`` passed some queued request's ``flush_by`` time
+          (``min(arrival + max_delay, request deadline)``)
+drain     explicit shutdown/idle drain — everything left flushes
+========  ==========================================================
+
+A flushed batch is embedded onto its canonical grid
+(:func:`~repro.core.gridpolicy.assemble_rung_batch`), factorized through
+the rung-keyed compiled sweep (compile count stays O(#rungs), not
+O(#grids)) under the jitter ladder (``regularize=``), and solved with
+per-request RHS panels (:func:`~repro.core.solve.solve_many_batched`).
+Each request's future resolves with its restricted solution/factor, the
+per-element :class:`~repro.core.robustness.FactorInfo` outcome (a failed
+request degrades to a flagged future, never poisoning its rung siblings)
+and telemetry-tagged latency.
+
+**Determinism is the design center.**  The scheduler
+(:class:`RungScheduler`) is a pure, clock-injected state machine —
+``tick(now, arrivals) -> [RungBatch]`` reads no wall clock, sleeps
+never, and iterates its queues in insertion order — so replaying the
+same arrival stream produces the identical sequence of batch
+compositions and flush reasons, and (since vmap computes batch elements
+independently through one compiled executable) bit-identical numerical
+results.  Tests drive it with :class:`SimClock`; production drives the
+same code with ``time.monotonic``.
+
+**Double buffering.**  The executor keeps one batch in flight: JAX's
+async dispatch returns unblocked device arrays, so the server dispatches
+batch N, assembles and dispatches batch N+1 on the host, and only then
+blocks on N's results (:meth:`RungExecutor.finalize`) — host assembly
+overlaps device execution with no threads in the data path.  (With
+``regularize=`` on, the jitter ladder's one status readback synchronizes
+the *factorization*; the solve sweep — the long stage for wide panels —
+still overlaps.)  The optional threaded pump (:meth:`RungServer.start`)
+only moves the same synchronous ``pump()`` loop off the caller's thread.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import itertools
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batching import RungQueue
+from repro.core.cholesky import CholeskyFactor, factorize_window_batched
+from repro.core.ctsf import BandedCTSF
+from repro.core.gridpolicy import (GridBucketPolicy, assemble_rung_batch,
+                                   assemble_rung_rhs, restrict_rhs)
+from repro.core.robustness import STATUS_FAILED, STATUS_OK, FactorInfo
+from repro.core.solve import solve_many_batched
+from repro.core.structure import TileGrid
+from repro.runtime import telemetry
+
+__all__ = ["FLUSH_FULL", "FLUSH_DEADLINE", "FLUSH_DRAIN", "SimClock",
+           "RungRequest", "RungBatch", "RungScheduler", "RungResult",
+           "RungFuture", "RungExecutor", "RungServer", "replay"]
+
+FLUSH_FULL = "full"          # queue reached max_batch
+FLUSH_DEADLINE = "deadline"  # a queued request's flush_by time passed
+FLUSH_DRAIN = "drain"        # explicit drain (shutdown / idle flush)
+
+_STATUS_NAMES = {0: "ok", 1: "recovered", 2: "failed"}
+
+
+class SimClock:
+    """Deterministic injectable clock for tests, replays and benchmarks:
+    call it for the current time, advance it explicitly.  Time only moves
+    when the driver says so — the scheduler never sleeps — which is what
+    makes deadline-expiry paths unit-testable without wall-clock waits."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot advance by negative dt {dt}")
+        self.now += dt
+        return self.now
+
+    def advance_to(self, t: float) -> float:
+        """Move to absolute time ``t`` (no-op if already past it)."""
+        self.now = max(self.now, float(t))
+        return self.now
+
+
+@dataclasses.dataclass
+class RungRequest:
+    """One queued unit of work: a matrix to factorize, optionally with an
+    RHS panel to solve.  ``deadline`` is an absolute clock time (in the
+    injected clock's units) the request must be flushed by; None means
+    only the scheduler's ``max_delay`` bounds its wait.  ``arrival`` /
+    ``flush_by`` / ``rung`` are stamped by the scheduler at submit."""
+    rid: int
+    matrix: BandedCTSF
+    rhs: Optional[jnp.ndarray] = None
+    deadline: Optional[float] = None
+    future: Optional["RungFuture"] = None
+    submitted_wall: float = 0.0
+    arrival: float = 0.0
+    flush_by: float = 0.0
+    rung: Optional[TileGrid] = None
+
+    @property
+    def grid(self) -> TileGrid:
+        return self.matrix.grid
+
+    @property
+    def k(self) -> Optional[int]:
+        return None if self.rhs is None else int(self.rhs.shape[-1])
+
+
+@dataclasses.dataclass(frozen=True)
+class RungBatch:
+    """One flush decision: the requests (arrival order preserved), the
+    rung key ``(canonical grid, rhs width or None)``, why it flushed and
+    when.  ``signature()`` is the host-comparable composition record the
+    replay tests diff across runs."""
+    key: Tuple[TileGrid, Optional[int]]
+    requests: Tuple[RungRequest, ...]
+    reason: str
+    decided_at: float
+
+    def signature(self) -> Tuple[str, Optional[int], Tuple[int, ...], str]:
+        return (telemetry.rung_tag(self.key[0]), self.key[1],
+                tuple(r.rid for r in self.requests), self.reason)
+
+
+class RungScheduler:
+    """Pure clock-injected micro-batching state machine.
+
+    All methods take ``now`` explicitly; nothing here reads a clock,
+    sleeps, or spawns a thread.  Rung queues live in an insertion-ordered
+    dict and items in arrival order, so for a fixed sequence of
+    ``submit``/``tick``/``drain`` calls the emitted batches — membership,
+    order, and flush reasons — are exactly reproducible.
+    """
+
+    def __init__(self, policy: Optional[GridBucketPolicy] = None,
+                 max_batch: int = 8, max_delay: float = 10e-3):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_delay < 0:
+            raise ValueError(f"max_delay must be >= 0, got {max_delay}")
+        self.policy = policy or GridBucketPolicy()
+        self.max_batch = max_batch
+        self.max_delay = max_delay
+        self._queues: Dict[Tuple[TileGrid, Optional[int]], RungQueue] = {}
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def submit(self, now: float, req: RungRequest) -> Tuple[TileGrid,
+                                                            Optional[int]]:
+        """Enqueue one request under its rung key, stamping arrival and
+        flush-by times.  Returns the key (useful for tests); flushing
+        happens only in :meth:`tick`/:meth:`drain`, so a submit can never
+        reorder ahead of earlier arrivals."""
+        cgrid = self.policy.canonicalize(req.matrix.grid)
+        key = (cgrid, req.k)
+        req.arrival = now
+        req.rung = cgrid
+        req.flush_by = now + self.max_delay
+        if req.deadline is not None:
+            req.flush_by = min(req.flush_by, float(req.deadline))
+        q = self._queues.get(key)
+        if q is None:
+            q = self._queues[key] = RungQueue()
+        q.push(req, req.flush_by)
+        if telemetry.enabled():
+            telemetry.inc("serving.requests")
+            telemetry.gauge("serving.queue_depth", len(q),
+                            rung=telemetry.rung_tag(cgrid))
+        return key
+
+    def next_flush_by(self) -> Optional[float]:
+        """Earliest pending flush-by time across all rungs (None when
+        idle) — the exact boundary a deterministic driver must tick at,
+        and the longest a threaded pump may sleep."""
+        if not self._queues:
+            return None
+        return min(q.earliest_flush_by() for q in self._queues.values())
+
+    def tick(self, now: float,
+             arrivals: Sequence[RungRequest] = ()) -> List[RungBatch]:
+        """Advance the state machine to ``now``: enqueue ``arrivals``,
+        then emit every batch-full and deadline-expired flush, in rung
+        insertion order then arrival order.  Pure function of (state,
+        now, arrivals) — the unit the replay/property tests drive."""
+        for req in arrivals:
+            self.submit(now, req)
+        out: List[RungBatch] = []
+        for key, q in list(self._queues.items()):
+            while len(q) >= self.max_batch:
+                out.append(self._flush(key, q.pop(self.max_batch),
+                                       FLUSH_FULL, now))
+            if len(q) and q.earliest_flush_by() <= now:
+                out.append(self._flush(key, q.pop(), FLUSH_DEADLINE, now))
+            if not len(q):
+                del self._queues[key]
+        return out
+
+    def drain(self, now: float) -> List[RungBatch]:
+        """Flush everything: regular full/deadline flushes first (so a
+        drain at a deadline boundary classifies identically to a tick),
+        then whatever remains as FLUSH_DRAIN batches."""
+        out = self.tick(now)
+        for key, q in list(self._queues.items()):
+            if len(q):
+                out.append(self._flush(key, q.pop(), FLUSH_DRAIN, now))
+            del self._queues[key]
+        return out
+
+    def _flush(self, key, reqs: List[RungRequest], reason: str,
+               now: float) -> RungBatch:
+        if telemetry.enabled():
+            telemetry.inc("serving.flush", reason=reason)
+            telemetry.observe("serving.batch_size", len(reqs))
+            for r in reqs:
+                telemetry.observe("serving.queue_wait", now - r.arrival)
+            q = self._queues.get(key)
+            telemetry.gauge("serving.queue_depth", len(q) if q else 0,
+                            rung=telemetry.rung_tag(key[0]))
+        return RungBatch(key=key, requests=tuple(reqs), reason=reason,
+                         decided_at=now)
+
+
+@dataclasses.dataclass
+class RungResult:
+    """What a resolved future carries: per-request numerical outcome
+    (``status``/``attempts``/``tau`` from the jitter ladder — a FAILED
+    element flags only itself), the solution panel ``x`` in the request's
+    own padded layout (None for factorize-only requests), the restricted
+    per-request ``factor``, and both latency views — ``latency`` in the
+    injected clock's units (deterministic under replay) and
+    ``wall_latency_s`` in real seconds (what the latency histogram and
+    the serving benchmark report)."""
+    rid: int
+    status: int
+    attempts: int
+    tau: float
+    x: Optional[np.ndarray]
+    factor: Optional[CholeskyFactor]
+    latency: float
+    wall_latency_s: float
+    flush_reason: str
+    batch_size: int
+    rung: str
+
+    def ok(self) -> bool:
+        return self.status != STATUS_FAILED
+
+
+class RungFuture:
+    """Per-request completion handle.  ``result()`` blocks (threaded
+    serving) or returns immediately once the synchronous pump finalized
+    the batch; failures arrive as a FAILED-status result, never as an
+    exception leaking from a rung sibling."""
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self._event = threading.Event()
+        self._result: Optional[RungResult] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> RungResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not completed "
+                               f"within {timeout}s")
+        return self._result
+
+    def _resolve(self, result: RungResult) -> None:
+        self._result = result
+        self._event.set()
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched-but-not-finalized batch: unblocked device arrays
+    (JAX async dispatch) plus the metadata to route results home."""
+    batch: RungBatch
+    factor: CholeskyFactor
+    start: int
+    X: Optional[jnp.ndarray]
+
+
+class RungExecutor:
+    """Assembles, dispatches and finalizes rung batches.
+
+    ``dispatch`` embeds+stacks the batch onto its canonical grid and
+    launches factorize (+ solve) — returning promptly with unblocked
+    arrays so the caller can assemble the next batch while the device
+    works.  ``finalize`` blocks on the results, restricts each element
+    back to its source layout, and resolves the futures."""
+
+    def __init__(self, impl: Optional[str] = None, tree_chunks: int = 8,
+                 sweep: str = "auto", regularize=True, bucket: bool = True):
+        self.impl = impl
+        self.tree_chunks = tree_chunks
+        self.sweep = sweep
+        self.regularize = regularize
+        self.bucket = bucket
+
+    def dispatch(self, batch: RungBatch, now: float) -> _Inflight:
+        cgrid, k = batch.key
+        reqs = batch.requests
+        with telemetry.span("serving.dispatch", rung=telemetry.rung_tag(cgrid),
+                            b=len(reqs), reason=batch.reason):
+            stacked, start = assemble_rung_batch(
+                [r.matrix for r in reqs], cgrid)
+            factor = factorize_window_batched(
+                stacked, impl=self.impl, tree_chunks=self.tree_chunks,
+                bucket=self.bucket, sweep=self.sweep,
+                regularize=self.regularize, start_tile=start)
+            X = None
+            if k is not None:
+                B = assemble_rung_rhs([r.rhs for r in reqs],
+                                      [r.grid for r in reqs], cgrid)
+                X = solve_many_batched(factor, B, impl=self.impl,
+                                       start_tile=start, bucket=self.bucket)
+            return _Inflight(batch=batch, factor=factor, start=start, X=X)
+
+    def finalize(self, inflight: _Inflight, now: float) -> List[RungResult]:
+        batch = inflight.batch
+        cgrid = batch.key[0]
+        factor, info = inflight.factor, inflight.factor.info
+        with telemetry.span("serving.finalize",
+                            rung=telemetry.rung_tag(cgrid),
+                            b=len(batch.requests)):
+            Xh = None if inflight.X is None else np.asarray(inflight.X)
+            f = factor.ctsf
+            results = []
+            for i, req in enumerate(batch.requests):
+                elem = info.element(i) if info is not None else {
+                    "status": STATUS_OK, "attempts": 1, "tau": 0.0,
+                    "min_pivot": float("nan"), "first_bad_tile": -1}
+                x = None
+                if Xh is not None:
+                    x = np.asarray(restrict_rhs(Xh[i], req.grid, cgrid))
+                # per-request factor stays on the canonical grid with
+                # source_grid set, so later solve/selinv calls reuse the
+                # rung-keyed compilations; a jittered element keeps its
+                # original matrix so those solves still refine
+                einfo = None
+                if info is not None:
+                    matrix = None
+                    if info.matrix is not None and elem["tau"] > 0:
+                        m = info.matrix
+                        matrix = BandedCTSF(cgrid, m.Dr[i], m.R[i], m.C[i])
+                    einfo = FactorInfo(
+                        status=jnp.int32(elem["status"]),
+                        attempts=jnp.int32(elem["attempts"]),
+                        tau=jnp.float32(elem["tau"]),
+                        min_pivot=jnp.float32(elem["min_pivot"]),
+                        first_bad_tile=jnp.int32(elem["first_bad_tile"]),
+                        matrix=matrix)
+                rf = CholeskyFactor(
+                    BandedCTSF(cgrid, f.Dr[i], f.R[i], f.C[i]),
+                    source_grid=req.grid, info=einfo)
+                wall = time.perf_counter() - req.submitted_wall \
+                    if req.submitted_wall else 0.0
+                res = RungResult(
+                    rid=req.rid, status=elem["status"],
+                    attempts=elem["attempts"], tau=elem["tau"], x=x,
+                    factor=rf, latency=now - req.arrival,
+                    wall_latency_s=wall, flush_reason=batch.reason,
+                    batch_size=len(batch.requests),
+                    rung=telemetry.rung_tag(cgrid))
+                if telemetry.enabled():
+                    telemetry.inc("serving.completed",
+                                  outcome=_STATUS_NAMES.get(
+                                      elem["status"], "unknown"))
+                    telemetry.observe("serving.request_seconds", wall)
+                results.append(res)
+                if req.future is not None:
+                    req.future._resolve(res)
+            return results
+
+
+class RungServer:
+    """The serving front-end: thread-safe submission over the pure
+    scheduler, double-buffered execution, per-request futures.
+
+    Synchronous use (tests, replay benchmarks, ``replay``)::
+
+        clock = SimClock()
+        server = RungServer(clock=clock, max_batch=4, max_delay=2e-3)
+        fut = server.submit(matrix, rhs)
+        clock.advance(2e-3); server.pump()   # deadline flush
+        server.drain()
+        result = fut.result(timeout=0)
+
+    Threaded use (production shape): ``start()`` runs the same ``pump``
+    loop on a background thread against the real clock; ``submit`` from
+    any thread; ``stop()`` drains and joins.  The numerical pipeline is
+    identical — the thread only moves *when* ``pump`` runs.
+    """
+
+    def __init__(self, policy: Optional[GridBucketPolicy] = None,
+                 max_batch: int = 8, max_delay: float = 10e-3,
+                 impl: Optional[str] = None, tree_chunks: int = 8,
+                 sweep: str = "auto", regularize=True, bucket: bool = True,
+                 clock=None, poll_interval: float = 1e-3):
+        self.scheduler = RungScheduler(policy=policy, max_batch=max_batch,
+                                       max_delay=max_delay)
+        self.executor = RungExecutor(impl=impl, tree_chunks=tree_chunks,
+                                     sweep=sweep, regularize=regularize,
+                                     bucket=bucket)
+        self.clock = clock if clock is not None else time.monotonic
+        self.poll_interval = poll_interval
+        self.history: List[tuple] = []      # batch signatures, flush order
+        self._rids = itertools.count()
+        self._lock = threading.RLock()
+        self._inflight: Optional[_Inflight] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, matrix: BandedCTSF, rhs=None,
+               deadline: Optional[float] = None) -> RungFuture:
+        """Queue one request; returns its future.  ``rhs`` is an optional
+        ``(padded_n, k)`` panel in ``matrix.grid``'s padded layout;
+        ``deadline`` an absolute clock time to flush by (the scheduler's
+        ``max_delay`` applies regardless)."""
+        if rhs is not None:
+            rhs = jnp.asarray(rhs)
+            if rhs.ndim != 2 or rhs.shape[0] != matrix.grid.padded_n:
+                raise ValueError(
+                    f"rhs must be (padded_n={matrix.grid.padded_n}, k), "
+                    f"got {rhs.shape}")
+        with self._lock:
+            rid = next(self._rids)
+            fut = RungFuture(rid)
+            req = RungRequest(rid=rid, matrix=matrix, rhs=rhs,
+                              deadline=deadline, future=fut,
+                              submitted_wall=time.perf_counter())
+            self.scheduler.submit(self.clock(), req)
+        return fut
+
+    # -- synchronous pump ---------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self.scheduler.pending
+
+    def next_flush_by(self) -> Optional[float]:
+        with self._lock:
+            return self.scheduler.next_flush_by()
+
+    def pump(self) -> int:
+        """One scheduler step at the current clock: emit due flushes and
+        run them double-buffered.  Returns the number of batches
+        dispatched (0 = nothing was due)."""
+        now = self.clock()
+        with self._lock:
+            batches = self.scheduler.tick(now)
+        self._run(batches)
+        return len(batches)
+
+    def drain(self) -> int:
+        """Flush every queued request and finalize all in-flight work —
+        after this, every submitted future is resolved."""
+        now = self.clock()
+        with self._lock:
+            batches = self.scheduler.drain(now)
+        self._run(batches)
+        self._finalize_inflight()
+        return len(batches)
+
+    def _run(self, batches: List[RungBatch]) -> None:
+        # double buffer: dispatch batch N+1 before blocking on batch N,
+        # so host-side assembly overlaps device execution of the
+        # previous batch (JAX async dispatch carries the rest)
+        for batch in batches:
+            self.history.append(batch.signature())
+            nxt = self.executor.dispatch(batch, batch.decided_at)
+            prev, self._inflight = self._inflight, nxt
+            if prev is not None:
+                self.executor.finalize(prev, batch.decided_at)
+
+    def _finalize_inflight(self) -> None:
+        prev, self._inflight = self._inflight, None
+        if prev is not None:
+            self.executor.finalize(prev, self.clock())
+
+    # -- threaded pump (production shape; the slow e2e smoke test) ----------
+
+    def start(self) -> None:
+        """Run the pump loop on a background thread (real clock)."""
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stop_evt.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="rung-server-pump", daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop_evt.is_set():
+            if self.pump() == 0:
+                # nothing due: settle the in-flight buffer so a lone
+                # trailing batch doesn't wait for the next flush, then
+                # sleep at most to the next deadline boundary
+                self._finalize_inflight()
+                nxt = self.next_flush_by()
+                wait = self.poll_interval if nxt is None else \
+                    max(0.0, min(self.poll_interval, nxt - self.clock()))
+                self._stop_evt.wait(wait)
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the pump thread; by default drain first so every
+        outstanding future resolves before this returns."""
+        if self._thread is None:
+            return
+        self._stop_evt.set()
+        self._thread.join(timeout=120.0)
+        self._thread = None
+        if drain:
+            self.drain()
+
+
+def replay(server: RungServer, clock: SimClock,
+           arrivals: Sequence[tuple]) -> List[RungFuture]:
+    """Drive a server deterministically through a timed arrival list.
+
+    ``arrivals`` is a sequence of ``(arrival_time, matrix, rhs, deadline)``
+    in nondecreasing arrival order (``rhs``/``deadline`` may be None).
+    The clock advances only to arrival times and scheduler flush
+    boundaries — exactly the event points a real-time driver would act
+    at — then the tail is pumped dry and drained.  Returns the futures in
+    submission order, all resolved.  Replaying the same list against a
+    fresh server reproduces ``server.history`` and every numerical result
+    bit for bit."""
+    futures: List[RungFuture] = []
+    for arrival, matrix, rhs, deadline in arrivals:
+        while True:
+            nxt = server.next_flush_by()
+            if nxt is None or nxt > arrival:
+                break
+            clock.advance_to(nxt)
+            server.pump()
+        clock.advance_to(arrival)
+        futures.append(server.submit(matrix, rhs, deadline=deadline))
+        server.pump()
+    while server.pending:
+        nxt = server.next_flush_by()
+        clock.advance_to(nxt)
+        server.pump()
+    server.drain()
+    return futures
+
+
+def _build_arrivals(stream, t: int = 8):
+    """Materialize a ``data.synthetic.request_stream`` spec list into
+    (arrival, matrix, rhs, deadline) tuples for :func:`replay`."""
+    from repro.data.gmrf import make_arrowhead
+    arrivals = []
+    grids: Dict[tuple, Any] = {}
+    for spec in stream:
+        n, bw, ar = spec["case"]
+        A, _st = make_arrowhead(n, bw, ar, rho=0.7, seed=spec["seed"] % 97)
+        key = spec["case"]
+        if key not in grids:
+            grids[key] = TileGrid(_st, t=t)
+        grid = grids[key]
+        mat = BandedCTSF.from_sparse(A, grid)
+        rng = np.random.default_rng(spec["seed"])
+        rhs = None
+        if spec["k"]:
+            rhs = np.zeros((grid.padded_n, spec["k"]), np.float32)
+            rows = np.array([grid.padded_index(i) for i in range(n)])
+            rhs[rows] = rng.standard_normal((n, spec["k"])).astype(np.float32)
+        arrivals.append((spec["arrival"], mat, rhs, spec["deadline"]))
+    return arrivals
+
+
+def main(argv=None) -> None:
+    """CLI driver: replay a seeded Poisson mixed-grid stream through the
+    server and print throughput/latency/flush statistics."""
+    from repro.data.synthetic import request_stream
+    p = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    p.add_argument("--requests", type=int, default=32)
+    p.add_argument("--rate", type=float, default=2000.0,
+                   help="arrivals per clock unit (Poisson)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--k", type=int, default=4, help="RHS panel width")
+    p.add_argument("--max-batch", type=int, default=4)
+    p.add_argument("--max-delay", type=float, default=2e-3)
+    p.add_argument("--impl", default=None)
+    args = p.parse_args(argv)
+
+    cases = [(64, 6, 4), (96, 12, 8), (120, 16, 4), (136, 10, 8)]
+    stream = request_stream(args.seed, cases, args.requests, rate=args.rate,
+                            k=args.k)
+    arrivals = _build_arrivals(stream)
+    clock = SimClock()
+    server = RungServer(max_batch=args.max_batch, max_delay=args.max_delay,
+                        impl=args.impl, clock=clock)
+    t0 = time.perf_counter()
+    futures = replay(server, clock, arrivals)
+    wall = time.perf_counter() - t0
+    results = [f.result(timeout=0) for f in futures]
+    lats = sorted(r.wall_latency_s for r in results)
+    reasons: Dict[str, int] = {}
+    for sig in server.history:
+        reasons[sig[3]] = reasons.get(sig[3], 0) + 1
+    print(f"served {len(results)} requests in {wall:.3f}s "
+          f"({len(results) / wall:.1f} req/s) over "
+          f"{len(server.history)} batches")
+    print(f"flush reasons: {reasons}")
+    print(f"wall latency p50 {lats[len(lats) // 2] * 1e3:.2f} ms, "
+          f"p99 {lats[min(len(lats) - 1, int(0.99 * len(lats)))] * 1e3:.2f} "
+          f"ms")
+    print("statuses:", {s: sum(r.status == s for r in results)
+                        for s in sorted({r.status for r in results})})
+
+
+if __name__ == "__main__":
+    main()

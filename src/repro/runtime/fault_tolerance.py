@@ -99,6 +99,16 @@ class NumericalFaultInjector:
             self.injected.append((idx, mode, tile))
         return type(batch)(g, Dr, batch.R, batch.C)
 
+    def corrupt_one(self, mat, mode: str):
+        """Corrupt a single *unbatched* CTSF matrix — the per-request form
+        the serving tests use (``tests/test_serving.py``) to poison chosen
+        requests before they enter a rung batch.  Same seeded tile/entry
+        choice as :meth:`corrupt` on a singleton batch."""
+        g = mat.grid
+        batch = type(mat)(g, mat.Dr[None], mat.R[None], mat.C[None])
+        out = self.corrupt(batch, {0: mode})
+        return type(mat)(g, out.Dr[0], out.R[0], out.C[0])
+
 
 class StragglerMonitor:
     def __init__(self, factor: float = 3.0, window: int = 50):

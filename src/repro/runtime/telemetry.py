@@ -66,7 +66,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 __all__ = [
     "Telemetry", "KernelReport", "get_registry", "enable", "disable",
     "enabled", "reset", "inc", "gauge", "observe", "span", "capture",
-    "snapshot", "to_prometheus_text", "to_chrome_trace", "rung_tag",
+    "hist_summary", "snapshot", "to_prometheus_text", "to_chrome_trace",
+    "rung_tag",
     "count_pallas_launches", "sweep_cost", "kernel_report",
     "PEAK_FLOPS", "HBM_BW", "ICI_BW",
 ]
@@ -298,6 +299,17 @@ class Telemetry:
             return _NOOP_SPAN
         return _Span(self, name, tags)
 
+    def hist_summary(self, name: str, **labels) -> Optional[Dict[str, float]]:
+        """Summary (count/sum/min/max/mean/p50/p90/p99) of one histogram
+        by exact name + labels, or None if never observed — the typed
+        accessor ``benchmarks/bench_serving.py`` reads request-latency
+        percentiles through, instead of string-matching rendered
+        ``snapshot()`` keys."""
+        key = (name, _labels_key(labels))
+        with self._lock:
+            h = self._hists.get(key)
+            return h.summary() if h is not None else None
+
     def _span_stack(self) -> list:
         st = getattr(self._local, "stack", None)
         if st is None:
@@ -458,6 +470,10 @@ def span(name: str, **tags):
     if not _DEFAULT._enabled:
         return _NOOP_SPAN
     return _Span(_DEFAULT, name, tags)
+
+
+def hist_summary(name: str, **labels) -> Optional[Dict[str, float]]:
+    return _DEFAULT.hist_summary(name, **labels)
 
 
 def snapshot(include_spans: bool = True) -> Dict[str, Any]:

@@ -1,0 +1,118 @@
+"""Hypothesis property tests for the rung-server batcher.
+
+The scheduler in ``launch/rung_server.py`` is a pure, clock-injected
+state machine, so its invariants can be checked over *arbitrary*
+arrival/deadline interleavings with no threads, no device work, and no
+wall-clock time — requests here are lightweight stand-ins that carry
+only a grid.  The invariants:
+
+* conservation — no request is lost or duplicated across any
+  interleaving of batch-full, deadline-expiry, and drain flushes;
+* deadline budget — every request leaves its queue no later than the
+  flush-by time committed at submit (``min(now + max_delay,
+  deadline)``), unless an earlier batch-full flush takes it sooner;
+* rung keying — each flushed batch's key equals
+  ``GridBucketPolicy.canonicalize`` of every member's grid (plus the
+  shared RHS width);
+* determinism — the same plan replayed twice emits identical batch
+  signatures in identical order.
+"""
+import types
+
+import pytest
+
+from repro.core import GridBucketPolicy, TileGrid
+from repro.launch.rung_server import FLUSH_FULL, RungRequest, RungScheduler
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+pytestmark = pytest.mark.serving
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _fake_request(rid, grid, k=None, deadline=None):
+    import numpy as np
+    rhs = None if k is None else np.zeros((1, k), np.float32)
+    return RungRequest(rid=rid, matrix=types.SimpleNamespace(grid=grid),
+                       rhs=rhs, deadline=deadline)
+
+
+def _grid(ndt):
+    return TileGrid.from_tile_counts(8, ndt, 1, 1)
+
+
+@st.composite
+def arrival_plan(draw):
+    """(max_batch, max_delay, [(gap, ndt, k, rel_deadline)...]) — arbitrary
+    mixed-rung arrivals with optional per-request deadlines."""
+    max_batch = draw(st.integers(1, 4))
+    max_delay = draw(st.sampled_from([0.0, 0.5, 2.0]))
+    events = draw(st.lists(st.tuples(
+        st.floats(0.0, 1.0, allow_nan=False, allow_infinity=False),
+        st.integers(3, 10),                       # source ndt
+        st.sampled_from([None, 1, 3]),            # rhs width
+        st.sampled_from([None, 0.0, 0.25, 1.0]),  # deadline - arrival
+    ), min_size=1, max_size=16))
+    return max_batch, max_delay, events
+
+
+@given(arrival_plan())
+@settings(max_examples=25, deadline=None)
+def test_scheduler_invariants(plan):
+    """Conservation + deadline budget + rung keying, in one sweep."""
+    max_batch, max_delay, events = plan
+    policy = GridBucketPolicy()
+    s = RungScheduler(policy=policy, max_batch=max_batch,
+                      max_delay=max_delay)
+    flushed = []
+    now, rid = 0.0, 0
+    requests = {}
+    for gap, ndt, k, rel_dl in events:
+        now += gap
+        req = _fake_request(rid, _grid(ndt), k=k,
+                            deadline=None if rel_dl is None else now + rel_dl)
+        requests[rid] = req
+        rid += 1
+        flushed += s.tick(now, [req])
+        nxt = s.next_flush_by()
+        if nxt is not None and nxt <= now:
+            # a zero-budget deadline flushes on the very next tick
+            flushed += s.tick(now)
+    end = now + max_delay + 1.0
+    flushed += s.tick(end)
+    flushed += s.drain(end)
+
+    seen = [r.rid for b in flushed for r in b.requests]
+    assert sorted(seen) == sorted(requests)       # no loss, no duplication
+    for b in flushed:
+        cgrid, k = b.key
+        for r in b.requests:
+            assert cgrid == policy.canonicalize(r.matrix.grid)
+            assert r.k == k
+            # flushed no later than the committed flush-by time (drain at
+            # `end` is past every budget, so this covers it too)
+            assert b.decided_at <= r.flush_by or b.reason == FLUSH_FULL
+
+
+@given(arrival_plan())
+@settings(**SETTINGS)
+def test_scheduler_replay_identical(plan):
+    """The state machine itself is deterministic: the same plan replayed
+    twice emits the same batch signatures in the same order."""
+    max_batch, max_delay, events = plan
+
+    def run():
+        s = RungScheduler(max_batch=max_batch, max_delay=max_delay)
+        out, now = [], 0.0
+        for i, (gap, ndt, k, rel_dl) in enumerate(events):
+            now += gap
+            out += s.tick(now, [_fake_request(
+                i, _grid(ndt), k=k,
+                deadline=None if rel_dl is None else now + rel_dl)])
+        out += s.drain(now + max_delay + 1.0)
+        return [b.signature() for b in out]
+
+    assert run() == run()
