@@ -1,0 +1,209 @@
+"""Chaos benchmark: the rung server under seeded faults and overload.
+
+Replays one *bursty* :func:`repro.data.request_stream` (Markov-modulated
+Poisson overload mode) through :class:`repro.launch.RungServer` with the
+full resilience stack armed — admission bounds, degradation policy,
+per-rung circuit breakers — and a seeded
+:class:`~repro.runtime.fault_tolerance.DispatchFaultInjector` raising
+transient faults, poisoning one whole canonical rung, and injecting
+stragglers.  Two identical passes on injected ``SimClock``\\ s drill the
+resilience contract:
+
+* **conservation** — every submitted future resolves exactly once:
+  nothing lost, duplicated, or stuck (gated at 1.0);
+* **closed taxonomy** — every terminal status is one of
+  OK/RECOVERED/FAILED/SHED, and every shed result names its reason
+  (``explicit_shed_ratio`` gated at 1.0): load shedding is always an
+  explicit result, never a dropped future;
+* **breaker isolation** — the poisoned rung's breaker opens within
+  ``failure_threshold`` dispatched flushes and no request *outside*
+  that rung ever fails (transients must recover via the retry ladder,
+  overload resolves as shed) — gated at 1.0;
+* **replay determinism** — batch history, resilience events (retries,
+  bisects, quarantines, breaker transitions), statuses and result bytes
+  are bit-identical across the two passes (gated at 1.0): the chaos
+  schedule itself is replayable, which is what makes any failure this
+  suite ever surfaces debuggable offline.
+
+Emits a ``BENCH_chaos.json`` trajectory point at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import GridBucketPolicy
+from repro.launch.rung_server import (STATUS_FAILED, STATUS_OK,
+                                      STATUS_RECOVERED, STATUS_SHED)
+from repro.launch.rung_server import (DegradationPolicy, RungServer,
+                                      SimClock, _build_arrivals, replay)
+from repro.runtime import telemetry
+from repro.runtime.fault_tolerance import DispatchFaultInjector
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CASES = [(64, 6, 4), (96, 12, 8), (120, 16, 4), (136, 10, 8)]
+_SEED = 23
+_BREAKER_THRESHOLD = 3
+
+
+def _poison_tag(arrivals) -> str:
+    """Canonical-rung tag of the first arrival — the rung the injector
+    poisons permanently (its breaker must open and contain the blast)."""
+    policy = GridBucketPolicy()
+    return telemetry.rung_tag(policy.canonicalize(arrivals[0][1].grid))
+
+
+def _run_pass(arrivals, poison):
+    clock = SimClock()
+    injector = DispatchFaultInjector(
+        seed=_SEED, transient_rate=0.25, transient_attempts=1,
+        poison_rungs=(poison,), straggler_rate=0.15, straggler_extra=3e-3)
+    server = RungServer(
+        clock=clock, max_batch=4, max_delay=2e-3, max_queue=4,
+        on_overload="shed",
+        degradation=DegradationPolicy(step_dwell=1e-3),
+        max_retries=1, backoff_base=1e-3, seed=_SEED,
+        breaker_threshold=_BREAKER_THRESHOLD, breaker_reset=10.0,
+        injector=injector)
+    t0 = time.perf_counter()
+    futures = replay(server, clock, arrivals)
+    wall = time.perf_counter() - t0
+    return server, futures, wall
+
+
+def _fingerprint(server, futures):
+    """Everything that must be bit-identical across chaos passes."""
+    results = [f.result(timeout=0) if f.done() else None for f in futures]
+    return (list(server.history), list(server.events),
+            [None if r is None else
+             (r.rid, r.status, r.detail, r.flush_reason,
+              None if r.x is None else r.x.tobytes())
+             for r in results])
+
+
+def run(quick: bool = True):
+    from repro.data import request_stream
+
+    num = 24 if quick else 48
+    stream = request_stream(_SEED, _CASES, num, rate=2000.0, k=4,
+                            deadline_budget=8e-3, burst_factor=6.0,
+                            burst_len=2e-3, normal_len=8e-3)
+    arrivals = _build_arrivals(stream)
+    poison = _poison_tag(arrivals)
+
+    server1, fut1, pass1_s = _run_pass(arrivals, poison)
+    server2, fut2, pass2_s = _run_pass(arrivals, poison)
+
+    deterministic = _fingerprint(server1, fut1) == _fingerprint(server2,
+                                                                fut2)
+
+    results = [f.result(timeout=0) if f.done() else None for f in fut2]
+    resolved = sum(1 for r in results if r is not None)
+    duplicates = sum(f.duplicate_resolves for f in fut2)
+    conservation = 1.0 if (resolved == len(fut2) == num
+                           and duplicates == 0) else 0.0
+
+    closed = {STATUS_OK, STATUS_RECOVERED, STATUS_FAILED, STATUS_SHED}
+    statuses = [r.status for r in results if r is not None]
+    taxonomy_closed = 1.0 if all(s in closed for s in statuses) else 0.0
+
+    shed = [r for r in results if r is not None and r.status == STATUS_SHED]
+    explicit_shed_ratio = (sum(1 for r in shed if r.detail) / len(shed)
+                           if shed else 1.0)
+
+    # breaker isolation: the poisoned rung burned at most
+    # failure_threshold dispatched flushes before its breaker opened
+    # (attempt-0 failures count top-level dispatches), and every FAILED
+    # result lives on the poisoned rung — transients recovered, overload
+    # shed, nothing else broke
+    poison_dispatches = sum(1 for e in server2.events
+                            if e[0] == "fail" and e[1] == poison
+                            and e[3] == 0)
+    breaker_opened = any(e[0] == "breaker" and e[1] == poison
+                         and e[2] == "open" for e in server2.events)
+    failed_off_rung = sum(1 for r in results
+                          if r is not None and r.status == STATUS_FAILED
+                          and r.rung != poison)
+    breaker_isolation = 1.0 if (breaker_opened
+                                and poison_dispatches <= _BREAKER_THRESHOLD
+                                and failed_off_rung == 0) else 0.0
+
+    counts = {name: sum(1 for s in statuses if s == code)
+              for name, code in (("ok", STATUS_OK),
+                                 ("recovered", STATUS_RECOVERED),
+                                 ("failed", STATUS_FAILED),
+                                 ("shed", STATUS_SHED))}
+    shed_details = {}
+    for r in shed:
+        shed_details[r.detail] = shed_details.get(r.detail, 0) + 1
+    event_kinds = {}
+    for e in server2.events:
+        event_kinds[e[0]] = event_kinds.get(e[0], 0) + 1
+
+    # coverage sanity: the chaos schedule must actually exercise the
+    # paths it claims to gate — retries fired, load was shed, the
+    # poisoned rung both quarantined and tripped its breaker
+    coverage = bool(event_kinds.get("retry", 0) > 0
+                    and event_kinds.get("quarantine", 0) > 0
+                    and breaker_opened and len(shed) > 0)
+
+    rows = [
+        ("chaos_conservation", conservation,
+         f"resolved={resolved}/{num};duplicates={duplicates}"),
+        ("chaos_taxonomy_closed", taxonomy_closed,
+         ";".join(f"{k}={v}" for k, v in counts.items())),
+        ("chaos_explicit_shed_ratio", explicit_shed_ratio,
+         ";".join(f"{k}={v}" for k, v in sorted(shed_details.items()))),
+        ("chaos_breaker_isolation", breaker_isolation,
+         f"poison_dispatches={poison_dispatches};"
+         f"threshold={_BREAKER_THRESHOLD};off_rung_failed={failed_off_rung}"),
+        ("chaos_replay_determinism", 1.0 if deterministic else 0.0,
+         f"events={len(server2.events)};batches={len(server2.history)}"),
+    ]
+
+    record = {
+        "bench": "chaos",
+        "quick": quick,
+        "seed": _SEED,
+        "requests": num,
+        "cases": [{"n": n, "bandwidth": bw, "arrow": ar}
+                  for n, bw, ar in _CASES],
+        "poison_rung": poison,
+        "status_counts": counts,
+        "shed_details": shed_details,
+        "event_counts": event_kinds,
+        "batches": len(server2.history),
+        "conservation": conservation,
+        "taxonomy_closed": taxonomy_closed,
+        "explicit_shed_ratio": explicit_shed_ratio,
+        "breaker_isolation": breaker_isolation,
+        "replay_determinism": 1.0 if deterministic else 0.0,
+        # the gates: no future lost/duplicated/stuck, every terminal
+        # status in the closed set with sheds explicit, the poisoned
+        # rung contained within its breaker budget, and the whole chaos
+        # schedule bit-identical on replay
+        "thresholds": {"conservation_min": 1.0,
+                       "taxonomy_closed_min": 1.0,
+                       "explicit_shed_ratio_min": 1.0,
+                       "breaker_isolation_min": 1.0,
+                       "replay_determinism_min": 1.0},
+        "pass": bool(conservation == 1.0 and taxonomy_closed == 1.0
+                     and explicit_shed_ratio == 1.0
+                     and breaker_isolation == 1.0 and deterministic
+                     and coverage),
+    }
+    record["interpret_diagnostics"] = {
+        "pass1_s": pass1_s,
+        "pass2_s": pass2_s,
+    }
+    with open(os.path.join(_ROOT, "BENCH_chaos.json"), "w") as f:
+        json.dump(record, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run(quick=True):
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

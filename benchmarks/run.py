@@ -30,6 +30,12 @@ matrices (long on CPU); the default is structure-preserving scaled versions.
                                       and bit-exact-replay gates; writes
                                       BENCH_serving.json)
 
+  Chaos       -> bench_chaos         (rung server under seeded faults +
+                                      burst overload: conservation, closed
+                                      status taxonomy, breaker isolation,
+                                      bit-exact chaos replay; writes
+                                      BENCH_chaos.json)
+
 ``--check-only`` validates every committed ``BENCH_*.json`` against its
 embedded thresholds without re-running anything — the fast CI gate
 against landing a record that fails its own pass criteria.  Suites
@@ -56,7 +62,7 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # requires each of these records to exist at the repo root (and pass its
 # own thresholds), so deleting a record cannot silently pass CI
 RECORD_SUITES = ("solve", "selinv", "cholesky", "bucketing", "robustness",
-                 "serving")
+                 "serving", "chaos")
 
 
 def _record_failures(record: dict) -> list:
@@ -168,11 +174,11 @@ def main() -> None:
     if args.telemetry:
         telemetry.enable()
 
-    from . import (bench_accumulation, bench_bucketing, bench_cholesky,
-                   bench_concurrent, bench_libraries, bench_robustness,
-                   bench_scalability, bench_selinv, bench_serving,
-                   bench_solve, bench_tile_size, bench_tree_reduction,
-                   roofline)
+    from . import (bench_accumulation, bench_bucketing, bench_chaos,
+                   bench_cholesky, bench_concurrent, bench_libraries,
+                   bench_robustness, bench_scalability, bench_selinv,
+                   bench_serving, bench_solve, bench_tile_size,
+                   bench_tree_reduction, roofline)
     suites = {
         "accumulation": bench_accumulation,
         "libraries": bench_libraries,
@@ -186,6 +192,7 @@ def main() -> None:
         "bucketing": bench_bucketing,
         "robustness": bench_robustness,
         "serving": bench_serving,
+        "chaos": bench_chaos,
         "roofline": roofline,
     }
     failures = []  # (suite, [reasons...])

@@ -17,7 +17,7 @@ from .gridpolicy import (GridBucketPolicy, assemble_rung_batch,
                          padded_flop_overhead, restrict_factor, restrict_rhs,
                          restrict_selinv)
 from .robustness import (STATUS_FAILED, STATUS_OK, STATUS_RECOVERED,
-                         FactorInfo, RegularizePolicy)
+                         STATUS_SHED, FactorInfo, RegularizePolicy)
 
 __all__ = [
     "ArrowheadStructure", "TileGrid", "measure_arrowhead",
@@ -36,6 +36,6 @@ __all__ = [
     "GridBucketPolicy", "assemble_rung_batch", "assemble_rung_rhs",
     "embed_ctsf", "embed_rhs", "padded_flop_overhead",
     "restrict_factor", "restrict_rhs", "restrict_selinv",
-    "STATUS_FAILED", "STATUS_OK", "STATUS_RECOVERED",
+    "STATUS_FAILED", "STATUS_OK", "STATUS_RECOVERED", "STATUS_SHED",
     "FactorInfo", "RegularizePolicy",
 ]

@@ -34,7 +34,22 @@ import jax.numpy as jnp
 
 from repro.runtime import telemetry
 
-__all__ = ["LRUCache", "RungQueue", "bucketed_batched_call", "next_pow2"]
+__all__ = ["LRUCache", "RungQueue", "RungQueueFull", "bucketed_batched_call",
+           "next_pow2"]
+
+
+class RungQueueFull(RuntimeError):
+    """Raised by :meth:`RungQueue.push` when the queue is at ``maxlen``.
+
+    The low-level half of serving admission control: the scheduler
+    translates this into its typed backpressure signal
+    (``launch.rung_server.RungOverloadError``) or — under a degradation
+    policy — into shedding the lowest-slack queued request instead."""
+
+    def __init__(self, depth: int, maxlen: int):
+        super().__init__(f"rung queue full ({depth}/{maxlen})")
+        self.depth = depth
+        self.maxlen = maxlen
 
 
 class LRUCache:
@@ -162,12 +177,28 @@ class RungQueue:
     thread-safe and *not* clock-aware — the scheduler serializes access
     and injects every timestamp, which is what keeps the whole flush state
     machine replayable without threads or wall-clock sleeps.
+
+    A ``maxlen`` bounds the queue: ``push`` beyond it raises
+    :class:`RungQueueFull` (the admission-control hook — an unbounded
+    rung queue under sustained overload turns every deadline into a miss
+    before the server ever sheds).  ``remove_if`` / ``evict_min`` are the
+    shedding primitives: drop expired requests, or make room by evicting
+    the pending request with the least slack.
     """
 
-    def __init__(self):
+    def __init__(self, maxlen: Optional[int] = None):
+        if maxlen is not None and maxlen < 1:
+            raise ValueError(f"maxlen must be >= 1 or None, got {maxlen}")
+        self.maxlen = maxlen
         self._items: list = []          # (item, flush_by) in arrival order
 
+    @property
+    def full(self) -> bool:
+        return self.maxlen is not None and len(self._items) >= self.maxlen
+
     def push(self, item: Any, flush_by: float) -> None:
+        if self.full:
+            raise RungQueueFull(len(self._items), self.maxlen)
         self._items.append((item, flush_by))
 
     def earliest_flush_by(self) -> float:
@@ -187,6 +218,28 @@ class RungQueue:
         else:
             taken, self._items = self._items[:n], self._items[n:]
         return [item for item, _ in taken]
+
+    def remove_if(self, pred: Callable[[Any], bool]) -> list:
+        """Remove and return every item with ``pred(item)`` true,
+        preserving arrival order among both the removed and the kept —
+        the deadline-expiry shedding sweep (expired requests leave as one
+        shed batch; survivors keep their queue positions)."""
+        taken = [(it, fb) for it, fb in self._items if pred(it)]
+        if taken:
+            self._items = [(it, fb) for it, fb in self._items
+                           if not pred(it)]
+        return [item for item, _ in taken]
+
+    def evict_min(self, keyfn: Callable[[Any], float]) -> Any:
+        """Remove and return the single item minimizing ``keyfn(item)``
+        (first in arrival order on ties) — shed-lowest-slack-first under
+        a degradation policy.  Raises on an empty queue."""
+        if not self._items:
+            raise IndexError("evict_min on empty RungQueue")
+        idx = min(range(len(self._items)),
+                  key=lambda i: keyfn(self._items[i][0]))
+        item, _ = self._items.pop(idx)
+        return item
 
     def __len__(self) -> int:
         return len(self._items)

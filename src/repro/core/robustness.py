@@ -41,7 +41,7 @@ import numpy as np
 from repro.runtime import telemetry
 from .ctsf import BandedCTSF
 
-__all__ = ["STATUS_OK", "STATUS_RECOVERED", "STATUS_FAILED",
+__all__ = ["STATUS_OK", "STATUS_RECOVERED", "STATUS_FAILED", "STATUS_SHED",
            "RegularizePolicy", "FactorInfo", "diag_scale", "status_ok",
            "gershgorin_shift", "add_diagonal_jitter", "fold_corner_status",
            "run_ladder", "ctsf_matvec"]
@@ -51,6 +51,11 @@ _HI = jax.lax.Precision.HIGHEST
 STATUS_OK = 0          # factorized clean, no jitter
 STATUS_RECOVERED = 1   # breakdown detected, recovered with diagonal jitter
 STATUS_FAILED = 2      # ladder exhausted (non-finite input); factor unusable
+# Serving-layer terminal status: the request was never computed — shed by
+# admission control, deadline expiry, an open circuit breaker, or server
+# shutdown (``launch/rung_server.py``).  It completes the closed status
+# taxonomy every resolved RungFuture draws from: OK/RECOVERED/FAILED/SHED.
+STATUS_SHED = 3
 
 
 @dataclasses.dataclass(frozen=True)

@@ -114,7 +114,9 @@ def token_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
 
 
 def request_stream(seed: int, cases, num: int, rate: float = 1000.0,
-                   k: int = 4, deadline_budget: Optional[float] = None):
+                   k: int = 4, deadline_budget: Optional[float] = None,
+                   burst_factor: float = 1.0, burst_len: float = 10e-3,
+                   normal_len: float = 50e-3):
     """Seeded Poisson mixed-grid arrival stream for the serving harness.
 
     Emits ``num`` host-side request *specs* (no core imports, no arrays):
@@ -127,17 +129,56 @@ def request_stream(seed: int, cases, num: int, rate: float = 1000.0,
     so the same seed replays the identical arrival process — the
     determinism contract ``tests/test_serving.py`` and
     ``benchmarks/bench_serving.py`` are built on.
+
+    **Burst/overload mode** (``burst_factor > 1``): arrivals follow a
+    two-state Markov-modulated Poisson process — exponential sojourns of
+    mean ``normal_len`` at ``rate`` alternate with sojourns of mean
+    ``burst_len`` at ``rate * burst_factor``.  Implemented as a time
+    change of the unit-rate process (each base exponential draw is
+    integrated through the piecewise-constant rate, with state flips from
+    an independent ``SeedSequence([seed, 17])`` stream), which is exact
+    by memorylessness *and* leaves the base RNG draw sequence untouched:
+    ``burst_factor=1`` reproduces today's stream bit for bit, so the
+    serving benchmark's recorded arrivals never shift.  The chaos
+    harness uses bursts to drive the server through its admission bounds
+    and degradation ladder deterministically.
     """
     cases = [tuple(int(v) for v in c) for c in cases]
     if not cases:
         raise ValueError("request_stream needs at least one case")
     if num < 0 or rate <= 0:
         raise ValueError(f"need num >= 0 and rate > 0, got {num}, {rate}")
+    burst = burst_factor != 1.0
+    if burst and (burst_factor <= 0 or burst_len <= 0 or normal_len <= 0):
+        raise ValueError(
+            f"burst mode needs burst_factor > 0 and positive sojourn "
+            f"means, got {burst_factor}, {burst_len}, {normal_len}")
     rng = np.random.default_rng(np.random.SeedSequence([seed, 7]))
+    if burst:
+        mrng = np.random.default_rng(np.random.SeedSequence([seed, 17]))
+        state = 0                                    # 0 = normal, 1 = burst
+        flip_at = float(mrng.exponential(normal_len))
     out = []
     now = 0.0
     for i in range(num):
-        now += float(rng.exponential(1.0 / rate))
+        gap = float(rng.exponential(1.0 / rate))
+        if not burst:
+            now += gap
+        else:
+            # integrate the unit-rate exponential through the
+            # piecewise-constant modulated rate
+            work = gap * rate
+            while True:
+                r = rate * (burst_factor if state else 1.0)
+                dt = work / r
+                if now + dt <= flip_at:
+                    now += dt
+                    break
+                work -= (flip_at - now) * r
+                now = flip_at
+                state = 1 - state
+                flip_at = now + float(mrng.exponential(
+                    burst_len if state else normal_len))
         out.append({
             "arrival": now,
             "case": cases[int(rng.integers(len(cases)))],

@@ -45,12 +45,44 @@ overlaps device execution with no threads in the data path.  (With
 the *factorization*; the solve sweep — the long stage for wide panels —
 still overlaps.)  The optional threaded pump (:meth:`RungServer.start`)
 only moves the same synchronous ``pump()`` loop off the caller's thread.
+
+**Failure domains & overload.**  Progress never hinges on one request,
+one batch, or one rung completing cleanly:
+
+* *Admission control* — per-rung (``max_queue``) and global
+  (``max_pending``) queue-depth bounds; an over-bound ``submit`` raises
+  the typed :class:`RungOverloadError` (or, with ``on_overload="shed"``,
+  resolves the future immediately with a ``STATUS_SHED`` result).
+* *Deadline shedding* — a request whose deadline has already passed at
+  flush-decision time (or on arrival) is never embedded or computed: it
+  leaves as a ``FLUSH_SHED`` batch and its future resolves with
+  ``STATUS_SHED`` / ``SHED_DEADLINE``.
+* *Dispatch-failure isolation* — :class:`ResilientRungExecutor` wraps
+  the raw executor: a throwing dispatch/finalize fails only its batch
+  (retried with seeded exponential backoff + jitter, then bisected so
+  poison requests are quarantined as ``STATUS_FAILED`` while survivors
+  resolve normally), and a per-rung clock-injected
+  :class:`CircuitBreaker` sheds load from a rung whose dispatches keep
+  failing while healthy rungs serve on.
+* *Graceful degradation* — under sustained overload (queue utilization
+  past the high watermark, or flagged stragglers) a
+  :class:`DegradationPolicy` shrinks ``max_delay``, caps batch size and
+  sheds the lowest-slack queued request first, recovering hysteretically
+  once utilization stays below the low watermark.
+
+Every path stays deterministic under the injected clock: backoff burns
+time through ``SimClock.advance`` offline (``time.sleep`` on the wall),
+the breaker and degradation state machines read only injected ``now``s,
+and fault decisions (``runtime.fault_tolerance.DispatchFaultInjector``)
+hash the batch composition — so a chaos schedule replays bit-identically
+(``benchmarks/bench_chaos.py`` gates it).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import itertools
+import os
 import threading
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -63,20 +95,51 @@ from repro.core.cholesky import CholeskyFactor, factorize_window_batched
 from repro.core.ctsf import BandedCTSF
 from repro.core.gridpolicy import (GridBucketPolicy, assemble_rung_batch,
                                    assemble_rung_rhs, restrict_rhs)
-from repro.core.robustness import STATUS_FAILED, STATUS_OK, FactorInfo
+from repro.core.robustness import (STATUS_FAILED, STATUS_OK,
+                                   STATUS_RECOVERED, STATUS_SHED, FactorInfo)
 from repro.core.solve import solve_many_batched
 from repro.core.structure import TileGrid
 from repro.runtime import telemetry
+from repro.runtime.fault_tolerance import (DispatchFaultInjector,
+                                           StragglerMonitor)
 
-__all__ = ["FLUSH_FULL", "FLUSH_DEADLINE", "FLUSH_DRAIN", "SimClock",
+__all__ = ["FLUSH_FULL", "FLUSH_DEADLINE", "FLUSH_DRAIN", "FLUSH_SHED",
+           "SHED_DEADLINE", "SHED_OVERLOAD", "SHED_BREAKER", "SHED_SLACK",
+           "SHED_SHUTDOWN", "RungOverloadError", "DegradationPolicy",
+           "CircuitBreaker", "SimClock",
            "RungRequest", "RungBatch", "RungScheduler", "RungResult",
-           "RungFuture", "RungExecutor", "RungServer", "replay"]
+           "RungFuture", "RungExecutor", "ResilientRungExecutor",
+           "RungServer", "replay"]
 
 FLUSH_FULL = "full"          # queue reached max_batch
 FLUSH_DEADLINE = "deadline"  # a queued request's flush_by time passed
 FLUSH_DRAIN = "drain"        # explicit drain (shutdown / idle flush)
+FLUSH_SHED = "shed"          # never dispatched: resolved with STATUS_SHED
 
-_STATUS_NAMES = {0: "ok", 1: "recovered", 2: "failed"}
+# shed details (RungBatch.detail / RungResult.detail): why a request was
+# shed — every STATUS_SHED result carries exactly one of these
+SHED_DEADLINE = "deadline_expired"   # deadline passed before flush/arrival
+SHED_OVERLOAD = "overload"           # admission bound hit (shed mode)
+SHED_BREAKER = "breaker_open"        # rung circuit breaker open
+SHED_SLACK = "low_slack"             # degradation evicted lowest slack
+SHED_SHUTDOWN = "shutdown"           # server stopped with work pending
+
+_STATUS_NAMES = {0: "ok", 1: "recovered", 2: "failed", 3: "shed"}
+
+
+class RungOverloadError(RuntimeError):
+    """Typed backpressure signal raised by ``submit`` when an admission
+    bound is hit: carries which bound (``scope`` is ``"rung"`` or
+    ``"global"``), the rung tag, the observed depth and the limit, so a
+    client can back off or retarget without string-matching a message."""
+
+    def __init__(self, scope: str, rung: str, depth: int, limit: int):
+        super().__init__(f"{scope} queue bound hit for rung {rung}: "
+                         f"{depth}/{limit} pending")
+        self.scope = scope
+        self.rung = rung
+        self.depth = depth
+        self.limit = limit
 
 
 class SimClock:
@@ -101,6 +164,139 @@ class SimClock:
         """Move to absolute time ``t`` (no-op if already past it)."""
         self.now = max(self.now, float(t))
         return self.now
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationPolicy:
+    """How the scheduler degrades under sustained overload, and how it
+    recovers.  All inputs are clock-injected and queue-derived, so the
+    state trajectory is a pure function of the arrival schedule.
+
+    Entering degradation: when queue utilization (global pending over
+    ``max_pending``, or the worst per-rung depth over ``max_queue``)
+    reaches ``high_watermark`` — or ``straggler_trigger`` straggler flags
+    accumulate — the level steps up (at most once per ``step_dwell``).
+    At level L the effective ``max_delay`` is scaled by
+    ``delay_shrink**L`` (flush sooner, trade batch occupancy for
+    latency), the effective ``max_batch`` by ``batch_shrink**L`` (cap
+    batch size so one flush never monopolizes the device), and an
+    over-bound submit sheds the lowest-slack queued request instead of
+    rejecting the newcomer.
+
+    Recovering: hysteretic — the level steps down one rung only after
+    utilization has stayed at or below ``low_watermark`` for
+    ``recover_dwell`` (a single quiet tick never flaps the policy)."""
+    high_watermark: float = 0.75
+    low_watermark: float = 0.25
+    delay_shrink: float = 0.5
+    batch_shrink: float = 0.5
+    max_level: int = 2
+    step_dwell: float = 1e-3
+    recover_dwell: float = 5e-3
+    straggler_trigger: int = 3
+
+
+class _DegradationState:
+    """Mutable level tracker for one scheduler (policy stays frozen)."""
+
+    def __init__(self, policy: Optional[DegradationPolicy]):
+        self.policy = policy
+        self.level = 0
+        self._last_step = float("-inf")
+        self._below_since: Optional[float] = None
+        self._stragglers = 0
+
+    def _step_up(self, now: float) -> None:
+        p = self.policy
+        if self.level < p.max_level and now - self._last_step >= p.step_dwell:
+            self.level += 1
+            self._last_step = now
+            self._below_since = None
+            if telemetry.enabled():
+                telemetry.inc("serving.degradation_step", direction="up")
+                telemetry.gauge("serving.degradation_level", self.level)
+
+    def update(self, now: float, utilization: float) -> None:
+        p = self.policy
+        if p is None:
+            return
+        if utilization >= p.high_watermark:
+            self._below_since = None
+            self._step_up(now)
+        elif utilization <= p.low_watermark:
+            if self._below_since is None:
+                self._below_since = now
+            elif (self.level > 0
+                  and now - self._below_since >= p.recover_dwell):
+                self.level -= 1
+                self._below_since = now
+                if telemetry.enabled():
+                    telemetry.inc("serving.degradation_step",
+                                  direction="down")
+                    telemetry.gauge("serving.degradation_level", self.level)
+        else:
+            self._below_since = None
+
+    def note_straggler(self, now: float) -> None:
+        if self.policy is None:
+            return
+        self._stragglers += 1
+        if self._stragglers >= self.policy.straggler_trigger:
+            self._stragglers = 0
+            self._step_up(now)
+
+
+class CircuitBreaker:
+    """Per-rung closed/open/half-open breaker, clock-injected.
+
+    ``failure_threshold`` consecutive raw dispatch failures open the
+    breaker; while open, :meth:`allow` is False and the server sheds the
+    rung's batches (``SHED_BREAKER``) without touching the device.  After
+    ``reset_timeout`` the next :meth:`allow` transitions to half-open and
+    admits one trial batch: success closes the breaker, failure reopens
+    it for another full timeout.  All timestamps come from the caller,
+    so breaker trajectories replay deterministically under SimClock."""
+
+    def __init__(self, failure_threshold: int = 5, reset_timeout: float = 0.1,
+                 on_transition=None):
+        if failure_threshold < 1:
+            raise ValueError(f"failure_threshold must be >= 1, "
+                             f"got {failure_threshold}")
+        if reset_timeout < 0:
+            raise ValueError(f"reset_timeout must be >= 0, "
+                             f"got {reset_timeout}")
+        self.failure_threshold = failure_threshold
+        self.reset_timeout = reset_timeout
+        self.state = "closed"
+        self.failures = 0                 # consecutive, since last success
+        self.opened_at: Optional[float] = None
+        self._on_transition = on_transition
+
+    def _transition(self, state: str, now: float) -> None:
+        if state != self.state:
+            self.state = state
+            if self._on_transition is not None:
+                self._on_transition(state, now)
+
+    def allow(self, now: float) -> bool:
+        """May a batch be dispatched at ``now``?  (Open -> half-open once
+        the reset timeout elapses, admitting the trial batch.)"""
+        if self.state == "open":
+            if now - self.opened_at >= self.reset_timeout:
+                self._transition("half_open", now)
+                return True
+            return False
+        return True
+
+    def record_success(self, now: float) -> None:
+        self.failures = 0
+        self._transition("closed", now)
+
+    def record_failure(self, now: float) -> None:
+        self.failures += 1
+        if self.state == "half_open" or self.failures >= self.failure_threshold:
+            self.opened_at = now
+            self._transition("open", now)
 
 
 @dataclasses.dataclass
@@ -133,16 +329,21 @@ class RungRequest:
 class RungBatch:
     """One flush decision: the requests (arrival order preserved), the
     rung key ``(canonical grid, rhs width or None)``, why it flushed and
-    when.  ``signature()`` is the host-comparable composition record the
-    replay tests diff across runs."""
+    when.  ``detail`` refines ``FLUSH_SHED`` batches with the shed reason
+    (``SHED_DEADLINE`` / ``SHED_OVERLOAD`` / ``SHED_SLACK``).
+    ``signature()`` is the host-comparable composition record the replay
+    tests diff across runs."""
     key: Tuple[TileGrid, Optional[int]]
     requests: Tuple[RungRequest, ...]
     reason: str
     decided_at: float
+    detail: str = ""
 
-    def signature(self) -> Tuple[str, Optional[int], Tuple[int, ...], str]:
+    def signature(self) -> Tuple[str, Optional[int], Tuple[int, ...], str,
+                                 str]:
         return (telemetry.rung_tag(self.key[0]), self.key[1],
-                tuple(r.rid for r in self.requests), self.reason)
+                tuple(r.rid for r in self.requests), self.reason,
+                self.detail)
 
 
 class RungScheduler:
@@ -153,42 +354,137 @@ class RungScheduler:
     dict and items in arrival order, so for a fixed sequence of
     ``submit``/``tick``/``drain`` calls the emitted batches — membership,
     order, and flush reasons — are exactly reproducible.
+
+    Admission control: ``max_queue`` bounds each rung queue and
+    ``max_pending`` bounds the global backlog (None = unbounded).  An
+    over-bound ``submit`` raises :class:`RungOverloadError` — unless a
+    :class:`DegradationPolicy` is active at level > 0, in which case the
+    lowest-slack request (queued or the newcomer) is shed instead.
+    Requests whose deadline has already passed — on arrival or at
+    flush-decision time — leave as ``FLUSH_SHED`` batches, never
+    consuming device time; the server resolves them with ``STATUS_SHED``.
     """
 
     def __init__(self, policy: Optional[GridBucketPolicy] = None,
-                 max_batch: int = 8, max_delay: float = 10e-3):
+                 max_batch: int = 8, max_delay: float = 10e-3,
+                 max_queue: Optional[int] = None,
+                 max_pending: Optional[int] = None,
+                 degradation: Optional[DegradationPolicy] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_delay < 0:
             raise ValueError(f"max_delay must be >= 0, got {max_delay}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 or None, "
+                             f"got {max_queue}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1 or None, "
+                             f"got {max_pending}")
         self.policy = policy or GridBucketPolicy()
         self.max_batch = max_batch
         self.max_delay = max_delay
+        self.max_queue = max_queue
+        self.max_pending = max_pending
+        self.degradation = degradation
+        self._deg = _DegradationState(degradation)
         self._queues: Dict[Tuple[TileGrid, Optional[int]], RungQueue] = {}
+        # requests shed outside tick (arrival-expired, slack eviction):
+        # grouped into FLUSH_SHED batches on the next tick
+        self._shed_buffer: List[Tuple[tuple, RungRequest, str]] = []
 
     @property
     def pending(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        return (sum(len(q) for q in self._queues.values())
+                + len(self._shed_buffer))
+
+    @property
+    def level(self) -> int:
+        """Current degradation level (0 = healthy)."""
+        return self._deg.level
+
+    def utilization(self) -> float:
+        """Backlog relative to the admission bounds in [0, 1+]: global
+        pending over ``max_pending`` when set, else the worst per-rung
+        depth over ``max_queue``; 0.0 when unbounded."""
+        if self.max_pending is not None:
+            return self.pending / self.max_pending
+        if self.max_queue is not None and self._queues:
+            return max(len(q) for q in self._queues.values()) / self.max_queue
+        return 0.0
+
+    def effective_max_delay(self) -> float:
+        if self.degradation is None or self._deg.level == 0:
+            return self.max_delay
+        return self.max_delay * self.degradation.delay_shrink ** self._deg.level
+
+    def effective_max_batch(self) -> int:
+        if self.degradation is None or self._deg.level == 0:
+            return self.max_batch
+        shrink = self.degradation.batch_shrink ** self._deg.level
+        return max(1, int(self.max_batch * shrink))
+
+    def note_straggler(self, now: float) -> None:
+        """Feed one straggler flag (from the executor's monitor) to the
+        degradation policy — repeated flags step the level up."""
+        self._deg.note_straggler(now)
+
+    @staticmethod
+    def _slack(req: RungRequest, now: float) -> float:
+        return float("inf") if req.deadline is None else req.deadline - now
 
     def submit(self, now: float, req: RungRequest) -> Tuple[TileGrid,
                                                             Optional[int]]:
         """Enqueue one request under its rung key, stamping arrival and
         flush-by times.  Returns the key (useful for tests); flushing
         happens only in :meth:`tick`/:meth:`drain`, so a submit can never
-        reorder ahead of earlier arrivals."""
+        reorder ahead of earlier arrivals.  Raises
+        :class:`RungOverloadError` when an admission bound is hit (and no
+        degradation level is active to shed slack instead); a request
+        whose deadline already passed is buffer-shed, never queued."""
+        self._deg.update(now, self.utilization())
         cgrid = self.policy.canonicalize(req.matrix.grid)
         key = (cgrid, req.k)
         req.arrival = now
         req.rung = cgrid
-        req.flush_by = now + self.max_delay
+        req.flush_by = now + self.effective_max_delay()
         if req.deadline is not None:
             req.flush_by = min(req.flush_by, float(req.deadline))
-        q = self._queues.get(key)
-        if q is None:
-            q = self._queues[key] = RungQueue()
-        q.push(req, req.flush_by)
         if telemetry.enabled():
             telemetry.inc("serving.requests")
+        if req.deadline is not None and now > req.deadline:
+            # dead on arrival: shed without ever occupying a queue slot
+            self._shed_buffer.append((key, req, SHED_DEADLINE))
+            return key
+        q = self._queues.get(key)
+        if q is None:
+            q = self._queues[key] = RungQueue(maxlen=self.max_queue)
+        over_rung = q.full
+        over_global = (self.max_pending is not None
+                       and self.pending >= self.max_pending)
+        if over_rung or over_global:
+            scope = "rung" if over_rung else "global"
+            depth = len(q) if over_rung else self.pending
+            limit = self.max_queue if over_rung else self.max_pending
+            if self.degradation is not None and self._deg.level > 0:
+                # degraded: make room by shedding whoever can least
+                # afford to wait — the lowest-slack request, newcomer
+                # included (ties keep the oldest, i.e. evict it first)
+                victim = q.evict_min(lambda r: self._slack(r, now)) \
+                    if len(q) else None
+                if victim is None or (self._slack(req, now)
+                                      < self._slack(victim, now)):
+                    if victim is not None:
+                        q.push(victim, victim.flush_by)
+                    self._shed_buffer.append((key, req, SHED_SLACK))
+                    return key
+                self._shed_buffer.append((key, victim, SHED_SLACK))
+            else:
+                if telemetry.enabled():
+                    telemetry.inc("serving.overload_reject", scope=scope)
+                raise RungOverloadError(scope, telemetry.rung_tag(cgrid),
+                                        depth, limit)
+        q.push(req, req.flush_by)
+        if telemetry.enabled():
             telemetry.gauge("serving.queue_depth", len(q),
                             rung=telemetry.rung_tag(cgrid))
         return key
@@ -196,7 +492,10 @@ class RungScheduler:
     def next_flush_by(self) -> Optional[float]:
         """Earliest pending flush-by time across all rungs (None when
         idle) — the exact boundary a deterministic driver must tick at,
-        and the longest a threaded pump may sleep."""
+        and the longest a threaded pump may sleep.  Buffered sheds are
+        already due (they resolve on the next tick)."""
+        if self._shed_buffer:
+            return float("-inf")
         if not self._queues:
             return None
         return min(q.earliest_flush_by() for q in self._queues.values())
@@ -204,15 +503,23 @@ class RungScheduler:
     def tick(self, now: float,
              arrivals: Sequence[RungRequest] = ()) -> List[RungBatch]:
         """Advance the state machine to ``now``: enqueue ``arrivals``,
-        then emit every batch-full and deadline-expired flush, in rung
-        insertion order then arrival order.  Pure function of (state,
-        now, arrivals) — the unit the replay/property tests drive."""
+        shed expired/buffered requests, then emit every batch-full and
+        deadline-expired flush, in rung insertion order then arrival
+        order.  Pure function of (state, now, arrivals) — the unit the
+        replay/property tests drive."""
         for req in arrivals:
             self.submit(now, req)
-        out: List[RungBatch] = []
+        self._deg.update(now, self.utilization())
+        out: List[RungBatch] = self._drain_shed_buffer(now)
+        eff_batch = self.effective_max_batch()
         for key, q in list(self._queues.items()):
-            while len(q) >= self.max_batch:
-                out.append(self._flush(key, q.pop(self.max_batch),
+            expired = q.remove_if(
+                lambda r: r.deadline is not None and now > r.deadline)
+            if expired:
+                out.append(self._flush(key, expired, FLUSH_SHED, now,
+                                       detail=SHED_DEADLINE))
+            while len(q) >= eff_batch:
+                out.append(self._flush(key, q.pop(eff_batch),
                                        FLUSH_FULL, now))
             if len(q) and q.earliest_flush_by() <= now:
                 out.append(self._flush(key, q.pop(), FLUSH_DEADLINE, now))
@@ -231,8 +538,32 @@ class RungScheduler:
             del self._queues[key]
         return out
 
+    def abort(self) -> List[RungRequest]:
+        """Tear down the state machine without flushing: remove and
+        return every queued or buffer-shed request (the server resolves
+        them terminally on shutdown).  After this, ``pending`` is 0."""
+        reqs: List[RungRequest] = []
+        for key, q in list(self._queues.items()):
+            reqs.extend(q.pop())
+            del self._queues[key]
+        reqs.extend(r for _, r, _ in self._shed_buffer)
+        self._shed_buffer = []
+        return reqs
+
+    def _drain_shed_buffer(self, now: float) -> List[RungBatch]:
+        """Group buffered sheds into FLUSH_SHED batches per (key, detail),
+        preserving buffer order."""
+        if not self._shed_buffer:
+            return []
+        groups: Dict[Tuple[tuple, str], List[RungRequest]] = {}
+        for key, req, detail in self._shed_buffer:
+            groups.setdefault((key, detail), []).append(req)
+        self._shed_buffer = []
+        return [self._flush(key, reqs, FLUSH_SHED, now, detail=detail)
+                for (key, detail), reqs in groups.items()]
+
     def _flush(self, key, reqs: List[RungRequest], reason: str,
-               now: float) -> RungBatch:
+               now: float, detail: str = "") -> RungBatch:
         if telemetry.enabled():
             telemetry.inc("serving.flush", reason=reason)
             telemetry.observe("serving.batch_size", len(reqs))
@@ -242,7 +573,7 @@ class RungScheduler:
             telemetry.gauge("serving.queue_depth", len(q) if q else 0,
                             rung=telemetry.rung_tag(key[0]))
         return RungBatch(key=key, requests=tuple(reqs), reason=reason,
-                         decided_at=now)
+                         decided_at=now, detail=detail)
 
 
 @dataclasses.dataclass
@@ -254,7 +585,13 @@ class RungResult:
     per-request ``factor``, and both latency views — ``latency`` in the
     injected clock's units (deterministic under replay) and
     ``wall_latency_s`` in real seconds (what the latency histogram and
-    the serving benchmark report)."""
+    the serving benchmark report).
+
+    ``status`` is always one of the closed set ``STATUS_OK`` /
+    ``STATUS_RECOVERED`` (ladder-jittered, or served only after dispatch
+    retries/bisection) / ``STATUS_FAILED`` (numerically failed, or
+    quarantined as dispatch poison — ``x``/``factor`` are None) /
+    ``STATUS_SHED`` (never computed; ``detail`` says why)."""
     rid: int
     status: int
     attempts: int
@@ -266,21 +603,28 @@ class RungResult:
     flush_reason: str
     batch_size: int
     rung: str
+    detail: str = ""
 
     def ok(self) -> bool:
-        return self.status != STATUS_FAILED
+        return self.status in (STATUS_OK, STATUS_RECOVERED)
 
 
 class RungFuture:
     """Per-request completion handle.  ``result()`` blocks (threaded
     serving) or returns immediately once the synchronous pump finalized
     the batch; failures arrive as a FAILED-status result, never as an
-    exception leaking from a rung sibling."""
+    exception leaking from a rung sibling.
+
+    Resolution is strictly once: the first ``_resolve`` wins, later ones
+    are counted (``duplicate_resolves``) and dropped — the conservation
+    invariant the chaos harness and property tests assert on."""
 
     def __init__(self, rid: int):
         self.rid = rid
         self._event = threading.Event()
         self._result: Optional[RungResult] = None
+        self._resolve_lock = threading.Lock()
+        self.duplicate_resolves = 0
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -291,9 +635,14 @@ class RungFuture:
                                f"within {timeout}s")
         return self._result
 
-    def _resolve(self, result: RungResult) -> None:
-        self._result = result
-        self._event.set()
+    def _resolve(self, result: RungResult) -> bool:
+        with self._resolve_lock:
+            if self._event.is_set():
+                self.duplicate_resolves += 1
+                return False
+            self._result = result
+            self._event.set()
+            return True
 
 
 @dataclasses.dataclass
@@ -399,6 +748,256 @@ class RungExecutor:
             return results
 
 
+@dataclasses.dataclass
+class _RInflight:
+    """Resilient wrapper around one in-flight batch.  ``raw`` is None
+    when the first dispatch attempt failed (or was never made) — the
+    recovery ladder then runs entirely inside ``finalize``."""
+    batch: RungBatch
+    raw: Optional[_Inflight]
+    dispatched_at: float
+
+
+class ResilientRungExecutor:
+    """Dispatch-failure isolation around a raw :class:`RungExecutor`.
+
+    A throwing ``dispatch``/``finalize`` fails only its batch, and a
+    failed batch walks a recovery ladder instead of raising to the pump:
+
+    1. **Retry** the whole batch up to ``max_retries`` times with seeded
+       exponential backoff + jitter (delays burn through ``sleep_fn`` —
+       ``SimClock.advance`` offline, ``time.sleep`` on the wall — so
+       replays stay bit-identical).
+    2. **Bisect**: split the batch and execute the halves independently,
+       recursing on failures, so poison requests are isolated in
+       O(log batch) dispatches while healthy siblings resolve normally.
+    3. **Quarantine**: a singleton that still fails resolves with a
+       ``STATUS_FAILED`` result (``detail="dispatch_failed"``, no
+       solution/factor) — never an exception.
+
+    A per-rung :class:`CircuitBreaker` counts consecutive raw failures;
+    while open, :meth:`allow` tells the server to shed the rung's batches
+    (``SHED_BREAKER``) without touching the device.  A
+    :class:`~repro.runtime.fault_tolerance.StragglerMonitor` watches
+    clock-accounted per-batch device time and feeds flags to the
+    scheduler's degradation policy via ``on_straggler``.  An optional
+    :class:`~repro.runtime.fault_tolerance.DispatchFaultInjector` (the
+    chaos harness) raises seeded faults and injects stragglers ahead of
+    real dispatches.
+
+    Every decision — backoff jitter, fault draws — hashes the batch
+    composition (rung tag + member rids + attempt), never a call counter
+    or wall clock, so a chaos schedule replays exactly.  Noteworthy
+    transitions append to the shared ``events`` list the server exposes
+    (and the chaos benchmark diffs across replay passes).
+    """
+
+    def __init__(self, inner: RungExecutor, clock, sleep_fn,
+                 events: Optional[List[tuple]] = None, max_retries: int = 2,
+                 backoff_base: float = 1e-3, backoff_factor: float = 2.0,
+                 seed: int = 0, breaker_threshold: int = 5,
+                 breaker_reset: float = 0.1,
+                 injector: Optional[DispatchFaultInjector] = None,
+                 straggler_factor: float = 3.0, on_straggler=None):
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.inner = inner
+        self.clock = clock
+        self.sleep_fn = sleep_fn
+        self.events = events if events is not None else []
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
+        self.backoff_factor = backoff_factor
+        self.seed = seed
+        self.breaker_threshold = breaker_threshold
+        self.breaker_reset = breaker_reset
+        self.injector = injector
+        self.monitor = StragglerMonitor(factor=straggler_factor)
+        self.on_straggler = on_straggler
+        self._breakers: Dict[tuple, CircuitBreaker] = {}
+        self._step = 0
+
+    # -- breaker ------------------------------------------------------------
+
+    def breaker(self, key) -> CircuitBreaker:
+        br = self._breakers.get(key)
+        if br is None:
+            tag = telemetry.rung_tag(key[0])
+
+            def on_transition(state, now, _tag=tag):
+                self.events.append(("breaker", _tag, state, round(now, 9)))
+                if telemetry.enabled():
+                    telemetry.inc("serving.breaker_transition", state=state,
+                                  rung=_tag)
+
+            br = self._breakers[key] = CircuitBreaker(
+                failure_threshold=self.breaker_threshold,
+                reset_timeout=self.breaker_reset,
+                on_transition=on_transition)
+        return br
+
+    def allow(self, key, now: float) -> bool:
+        """May a batch for ``key`` be dispatched at ``now``?  False means
+        the rung's breaker is open — the server sheds the batch."""
+        return self.breaker(key).allow(now)
+
+    # -- deterministic backoff ---------------------------------------------
+
+    def _backoff(self, tag: str, rids: Tuple[int, ...], attempt: int) -> float:
+        """attempt-th retry delay: exponential base with a jitter factor
+        in [0, 1) drawn from a hash of (seed, batch composition, attempt)
+        — same batch, same delays, every replay."""
+        ss = np.random.SeedSequence(
+            [self.seed, 29, attempt, len(rids), *rids,
+             *(ord(c) for c in tag[:16])])
+        jitter = float(np.random.default_rng(ss).random())
+        return self.backoff_base * self.backoff_factor ** (attempt - 1) \
+            * (1.0 + jitter)
+
+    # -- raw attempts -------------------------------------------------------
+
+    def _raw_dispatch(self, batch: RungBatch, now: float,
+                      attempt: int) -> _Inflight:
+        if self.injector is not None:
+            self.injector.before_dispatch(
+                telemetry.rung_tag(batch.key[0]),
+                tuple(r.rid for r in batch.requests), attempt)
+        return self.inner.dispatch(batch, now)
+
+    def _raw_finalize(self, batch: RungBatch, raw,
+                      now: float) -> List[RungResult]:
+        tag = telemetry.rung_tag(batch.key[0])
+        rids = tuple(r.rid for r in batch.requests)
+        t0 = self.clock()
+        if self.injector is not None:
+            extra = self.injector.straggler_extra_for(tag, rids)
+            if extra > 0:
+                self.sleep_fn(extra)  # the injected stall burns clock time
+        results = self.inner.finalize(raw, now)
+        dt = self.clock() - t0
+        self._step += 1
+        if telemetry.enabled():
+            telemetry.observe("serving.device_seconds", dt, rung=tag)
+        if self.monitor.record(self._step, dt):
+            self.events.append(("straggler", tag, self._step, round(dt, 9)))
+            if telemetry.enabled():
+                telemetry.inc("serving.straggler", rung=tag)
+                telemetry.gauge("serving.straggler_seconds", dt, rung=tag)
+            if self.on_straggler is not None:
+                self.on_straggler(self.clock())
+        return results
+
+    def _note_failure(self, batch: RungBatch, now: float, err: Exception,
+                      attempt: int) -> None:
+        tag = telemetry.rung_tag(batch.key[0])
+        rids = tuple(r.rid for r in batch.requests)
+        self.events.append(("fail", tag, rids, attempt,
+                            type(err).__name__))
+        self.breaker(batch.key).record_failure(now)
+        if telemetry.enabled():
+            telemetry.inc("serving.dispatch_failure", kind=type(err).__name__,
+                          rung=tag)
+
+    # -- executor interface -------------------------------------------------
+
+    def dispatch(self, batch: RungBatch, now: float) -> _RInflight:
+        """First dispatch attempt.  On success the raw in-flight batch
+        rides along (double buffering preserved); on failure the error is
+        recorded and recovery is deferred to :meth:`finalize`."""
+        try:
+            raw = self._raw_dispatch(batch, now, attempt=0)
+            return _RInflight(batch=batch, raw=raw, dispatched_at=now)
+        except Exception as e:  # noqa: BLE001 — isolation boundary
+            self._note_failure(batch, now, e, attempt=0)
+            return _RInflight(batch=batch, raw=None, dispatched_at=now)
+
+    def finalize(self, rin: _RInflight, now: float) -> List[RungResult]:
+        """Block on the in-flight batch; on any failure run the recovery
+        ladder.  Always returns one result per request, all futures
+        resolved — exceptions stop at this boundary."""
+        batch = rin.batch
+        if rin.raw is not None:
+            try:
+                results = self._raw_finalize(batch, rin.raw, now)
+                self.breaker(batch.key).record_success(self.clock())
+                return results
+            except Exception as e:  # noqa: BLE001 — isolation boundary
+                self._note_failure(batch, self.clock(), e, attempt=0)
+        return self._recover(batch, self.max_retries)
+
+    # -- recovery ladder ----------------------------------------------------
+
+    def _try_once(self, batch: RungBatch, attempt: int) -> List[RungResult]:
+        now = self.clock()
+        raw = self._raw_dispatch(batch, now, attempt)
+        return self._raw_finalize(batch, raw, self.clock())
+
+    @staticmethod
+    def _mark_recovered(results: List[RungResult]) -> List[RungResult]:
+        # served, but only after dispatch retries/bisection — surface
+        # that in the status (OK -> RECOVERED; ladder RECOVERED stays)
+        for res in results:
+            if res.status == STATUS_OK:
+                res.status = STATUS_RECOVERED
+        return results
+
+    def _quarantine(self, batch: RungBatch, attempts: int) -> RungResult:
+        req = batch.requests[0]
+        tag = telemetry.rung_tag(batch.key[0])
+        t = self.clock()
+        self.events.append(("quarantine", tag, req.rid, round(t, 9)))
+        if telemetry.enabled():
+            telemetry.inc("serving.quarantine", rung=tag)
+            telemetry.inc("serving.completed", outcome="failed")
+        wall = time.perf_counter() - req.submitted_wall \
+            if req.submitted_wall else 0.0
+        res = RungResult(rid=req.rid, status=STATUS_FAILED,
+                         attempts=attempts, tau=0.0, x=None, factor=None,
+                         latency=t - req.arrival, wall_latency_s=wall,
+                         flush_reason=batch.reason, batch_size=1, rung=tag,
+                         detail="dispatch_failed")
+        if req.future is not None:
+            req.future._resolve(res)
+        return res
+
+    def _recover(self, batch: RungBatch, retries: int) -> List[RungResult]:
+        """The batch's initial attempt already failed.  Retry whole with
+        backoff, then bisect, then quarantine the singleton."""
+        tag = telemetry.rung_tag(batch.key[0])
+        rids = tuple(r.rid for r in batch.requests)
+        for attempt in range(1, retries + 1):
+            self.sleep_fn(self._backoff(tag, rids, attempt))
+            self.events.append(("retry", tag, rids, attempt,
+                                round(self.clock(), 9)))
+            if telemetry.enabled():
+                telemetry.inc("serving.retry", rung=tag)
+            try:
+                results = self._try_once(batch, attempt)
+                self.breaker(batch.key).record_success(self.clock())
+                return self._mark_recovered(results)
+            except Exception as e:  # noqa: BLE001 — isolation boundary
+                self._note_failure(batch, self.clock(), e, attempt)
+        if len(batch.requests) == 1:
+            return [self._quarantine(batch, attempts=retries + 1)]
+        self.events.append(("bisect", tag, rids, round(self.clock(), 9)))
+        if telemetry.enabled():
+            telemetry.inc("serving.bisect", rung=tag)
+        mid = len(batch.requests) // 2
+        out: List[RungResult] = []
+        for part in (batch.requests[:mid], batch.requests[mid:]):
+            sub = dataclasses.replace(batch, requests=tuple(part))
+            try:
+                # past the transient window (attempt > max_retries): only
+                # genuinely poison sub-batches keep failing here
+                results = self._try_once(sub, attempt=retries + 1)
+                self.breaker(batch.key).record_success(self.clock())
+                out.extend(self._mark_recovered(results))
+            except Exception as e:  # noqa: BLE001 — isolation boundary
+                self._note_failure(sub, self.clock(), e, attempt=retries + 1)
+                out.extend(self._recover(sub, retries=1))
+        return out
+
+
 class RungServer:
     """The serving front-end: thread-safe submission over the pure
     scheduler, double-buffered execution, per-request futures.
@@ -422,42 +1021,98 @@ class RungServer:
                  max_batch: int = 8, max_delay: float = 10e-3,
                  impl: Optional[str] = None, tree_chunks: int = 8,
                  sweep: str = "auto", regularize=True, bucket: bool = True,
-                 clock=None, poll_interval: float = 1e-3):
+                 clock=None, poll_interval: float = 1e-3,
+                 max_queue: Optional[int] = None,
+                 max_pending: Optional[int] = None,
+                 degradation: Optional[DegradationPolicy] = None,
+                 on_overload: str = "raise", max_retries: int = 2,
+                 backoff_base: float = 1e-3, backoff_factor: float = 2.0,
+                 breaker_threshold: int = 5, breaker_reset: float = 0.1,
+                 injector="auto", straggler_factor: float = 3.0,
+                 seed: int = 0, executor: Optional[RungExecutor] = None):
+        if on_overload not in ("raise", "shed"):
+            raise ValueError(f"on_overload must be 'raise' or 'shed', "
+                             f"got {on_overload!r}")
         self.scheduler = RungScheduler(policy=policy, max_batch=max_batch,
-                                       max_delay=max_delay)
-        self.executor = RungExecutor(impl=impl, tree_chunks=tree_chunks,
-                                     sweep=sweep, regularize=regularize,
-                                     bucket=bucket)
+                                       max_delay=max_delay,
+                                       max_queue=max_queue,
+                                       max_pending=max_pending,
+                                       degradation=degradation)
         self.clock = clock if clock is not None else time.monotonic
+        self.on_overload = on_overload
         self.poll_interval = poll_interval
         self.history: List[tuple] = []      # batch signatures, flush order
+        self.events: List[tuple] = []       # resilience events, in order
+        if injector == "auto":
+            # opt-in chaos for CI legs / soak runs: REPRO_CHAOS_SEED=<int>
+            # arms a seeded transient+straggler injector on every server
+            cseed = os.environ.get("REPRO_CHAOS_SEED")
+            injector = None if cseed is None else DispatchFaultInjector(
+                seed=int(cseed), transient_rate=0.1, transient_attempts=1,
+                straggler_rate=0.05, straggler_extra=5e-3)
+        # offline (SimClock) runs burn waits by advancing the clock —
+        # deterministic; wall-clock runs really sleep
+        sleep_fn = clock.advance if isinstance(clock, SimClock) \
+            else time.sleep
+        inner = executor if executor is not None else RungExecutor(
+            impl=impl, tree_chunks=tree_chunks, sweep=sweep,
+            regularize=regularize, bucket=bucket)
+        self.executor = ResilientRungExecutor(
+            inner, clock=self.clock, sleep_fn=sleep_fn, events=self.events,
+            max_retries=max_retries, backoff_base=backoff_base,
+            backoff_factor=backoff_factor, seed=seed,
+            breaker_threshold=breaker_threshold, breaker_reset=breaker_reset,
+            injector=injector, straggler_factor=straggler_factor,
+            on_straggler=self._on_straggler)
         self._rids = itertools.count()
         self._lock = threading.RLock()
-        self._inflight: Optional[_Inflight] = None
+        self._outstanding: Dict[int, RungFuture] = {}
+        self._inflight: Optional[_RInflight] = None
         self._thread: Optional[threading.Thread] = None
         self._stop_evt = threading.Event()
+
+    def _on_straggler(self, now: float) -> None:
+        with self._lock:
+            self.scheduler.note_straggler(now)
 
     # -- submission ---------------------------------------------------------
 
     def submit(self, matrix: BandedCTSF, rhs=None,
-               deadline: Optional[float] = None) -> RungFuture:
+               deadline: Optional[float] = None,
+               on_overload: Optional[str] = None) -> RungFuture:
         """Queue one request; returns its future.  ``rhs`` is an optional
         ``(padded_n, k)`` panel in ``matrix.grid``'s padded layout;
         ``deadline`` an absolute clock time to flush by (the scheduler's
-        ``max_delay`` applies regardless)."""
+        ``max_delay`` applies regardless).
+
+        When an admission bound is hit, ``on_overload`` (per-call, else
+        the server default) decides: ``"raise"`` propagates the typed
+        :class:`RungOverloadError`; ``"shed"`` returns a future already
+        resolved with ``STATUS_SHED`` / ``SHED_OVERLOAD``."""
         if rhs is not None:
             rhs = jnp.asarray(rhs)
             if rhs.ndim != 2 or rhs.shape[0] != matrix.grid.padded_n:
                 raise ValueError(
                     f"rhs must be (padded_n={matrix.grid.padded_n}, k), "
                     f"got {rhs.shape}")
+        mode = on_overload if on_overload is not None else self.on_overload
         with self._lock:
             rid = next(self._rids)
             fut = RungFuture(rid)
             req = RungRequest(rid=rid, matrix=matrix, rhs=rhs,
                               deadline=deadline, future=fut,
                               submitted_wall=time.perf_counter())
-            self.scheduler.submit(self.clock(), req)
+            now = self.clock()
+            try:
+                self.scheduler.submit(now, req)
+            except RungOverloadError:
+                if mode == "raise":
+                    raise
+                fut._resolve(self._shed_result(req, SHED_OVERLOAD, now))
+                if telemetry.enabled():
+                    telemetry.inc("serving.shed", detail=SHED_OVERLOAD)
+                return fut
+            self._outstanding[rid] = fut
         return fut
 
     # -- synchronous pump ---------------------------------------------------
@@ -474,10 +1129,15 @@ class RungServer:
     def pump(self) -> int:
         """One scheduler step at the current clock: emit due flushes and
         run them double-buffered.  Returns the number of batches
-        dispatched (0 = nothing was due)."""
+        emitted (0 = nothing was due; shed batches count too)."""
         now = self.clock()
         with self._lock:
             batches = self.scheduler.tick(now)
+            if len(self._outstanding) > 4 * max(
+                    1, self.scheduler.max_batch):
+                self._outstanding = {rid: f for rid, f
+                                     in self._outstanding.items()
+                                     if not f.done()}
         self._run(batches)
         return len(batches)
 
@@ -491,12 +1151,52 @@ class RungServer:
         self._finalize_inflight()
         return len(batches)
 
+    def _shed_result(self, req: RungRequest, detail: str,
+                     now: float) -> RungResult:
+        wall = time.perf_counter() - req.submitted_wall \
+            if req.submitted_wall else 0.0
+        rung = telemetry.rung_tag(req.rung) if req.rung is not None \
+            else telemetry.rung_tag(req.matrix.grid)
+        return RungResult(rid=req.rid, status=STATUS_SHED, attempts=0,
+                          tau=0.0, x=None, factor=None,
+                          latency=now - req.arrival, wall_latency_s=wall,
+                          flush_reason=FLUSH_SHED, batch_size=1, rung=rung,
+                          detail=detail)
+
+    def _resolve_shed(self, batch: RungBatch,
+                      detail: Optional[str] = None) -> None:
+        """Resolve every request of a never-dispatched batch with an
+        explicit STATUS_SHED result — shedding is always a result, never
+        a dropped or hanging future."""
+        detail = detail if detail is not None else \
+            (batch.detail or SHED_DEADLINE)
+        for req in batch.requests:
+            res = self._shed_result(req, detail, batch.decided_at)
+            if req.future is not None:
+                req.future._resolve(res)
+        if telemetry.enabled():
+            telemetry.inc("serving.shed", len(batch.requests), detail=detail)
+            telemetry.inc("serving.completed", len(batch.requests),
+                          outcome="shed")
+
     def _run(self, batches: List[RungBatch]) -> None:
         # double buffer: dispatch batch N+1 before blocking on batch N,
         # so host-side assembly overlaps device execution of the
         # previous batch (JAX async dispatch carries the rest)
         for batch in batches:
             self.history.append(batch.signature())
+            if batch.reason == FLUSH_SHED:
+                self._resolve_shed(batch)
+                continue
+            if not self.executor.allow(batch.key, batch.decided_at):
+                # rung breaker open: shed without touching the device —
+                # healthy rungs keep dispatching around it
+                self.events.append(
+                    ("breaker_shed", telemetry.rung_tag(batch.key[0]),
+                     tuple(r.rid for r in batch.requests),
+                     round(batch.decided_at, 9)))
+                self._resolve_shed(batch, detail=SHED_BREAKER)
+                continue
             nxt = self.executor.dispatch(batch, batch.decided_at)
             prev, self._inflight = self._inflight, nxt
             if prev is not None:
@@ -530,16 +1230,51 @@ class RungServer:
                     max(0.0, min(self.poll_interval, nxt - self.clock()))
                 self._stop_evt.wait(wait)
 
-    def stop(self, drain: bool = True) -> None:
-        """Stop the pump thread; by default drain first so every
-        outstanding future resolves before this returns."""
+    def stop(self, drain: bool = True, timeout: float = 120.0) -> None:
+        """Stop the pump thread and leave **no future unresolved**.
+
+        By default the queue is drained first so pending work completes
+        normally.  If the pump thread does not join within ``timeout``
+        (a wedged executor — e.g. a dispatch stuck in a device call),
+        draining would wedge this caller too: instead the scheduler is
+        aborted and every still-unresolved future — queued, in-flight,
+        or mid-dispatch — resolves with a terminal ``STATUS_SHED`` /
+        ``SHED_SHUTDOWN`` result.  Either way ``stop`` returns with zero
+        outstanding futures (asserted), so no client blocks forever on a
+        server that no longer exists."""
         if self._thread is None:
             return
         self._stop_evt.set()
-        self._thread.join(timeout=120.0)
+        self._thread.join(timeout=timeout)
+        wedged = self._thread.is_alive()
         self._thread = None
-        if drain:
+        if drain and not wedged:
             self.drain()
+        # terminal sweep: whatever is still unresolved (everything, when
+        # wedged; shed buffers and races otherwise) resolves as shed
+        with self._lock:
+            now = self.clock()
+            for req in self.scheduler.abort():
+                if req.future is not None and not req.future.done():
+                    req.future._resolve(
+                        self._shed_result(req, SHED_SHUTDOWN, now))
+            unresolved = [f for f in self._outstanding.values()
+                          if not f.done()]
+            for fut in unresolved:
+                res = RungResult(
+                    rid=fut.rid, status=STATUS_SHED, attempts=0, tau=0.0,
+                    x=None, factor=None, latency=0.0, wall_latency_s=0.0,
+                    flush_reason=FLUSH_SHED, batch_size=1, rung="",
+                    detail=SHED_SHUTDOWN)
+                fut._resolve(res)
+            if unresolved and telemetry.enabled():
+                telemetry.inc("serving.shed", len(unresolved),
+                              detail=SHED_SHUTDOWN)
+            leftover = [f.rid for f in self._outstanding.values()
+                        if not f.done()]
+            assert not leftover, \
+                f"stop() left futures unresolved: {leftover}"
+            self._outstanding = {}
 
 
 def replay(server: RungServer, clock: SimClock,

@@ -22,19 +22,24 @@ Failure model for thousands of nodes (DESIGN.md §7):
 raising, it corrupts chosen elements of a CTSF matrix batch (indefinite
 shift or NaN poke) so the breakdown-detection + jitter-ladder machinery in
 ``core/robustness.py`` can be exercised deterministically end to end.
+`DispatchFaultInjector` is the *serving* sibling: seeded dispatch raises
+(transient or permanent) and injected stragglers keyed on the batch
+composition itself, so a rung-server chaos schedule replays bit-identically
+(``benchmarks/bench_chaos.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 
-__all__ = ["FailureInjector", "NumericalFaultInjector", "StragglerMonitor",
-           "TrainLoop"]
+__all__ = ["FailureInjector", "NumericalFaultInjector",
+           "InjectedDispatchError", "DispatchFaultInjector",
+           "StragglerMonitor", "TrainLoop"]
 
 
 class FailureInjector:
@@ -110,19 +115,127 @@ class NumericalFaultInjector:
         return type(mat)(g, out.Dr[0], out.R[0], out.C[0])
 
 
+class InjectedDispatchError(RuntimeError):
+    """The exception :class:`DispatchFaultInjector` raises in place of a
+    real dispatch failure (compile OOM, device loss, runtime abort).  A
+    resilient executor must treat it exactly like any other throwing
+    dispatch — retry, bisect, quarantine — which is what makes the chaos
+    harness a faithful drill of the production failure paths."""
+
+    def __init__(self, kind: str, tag: str, rids: Tuple[int, ...],
+                 attempt: int):
+        super().__init__(f"injected {kind} dispatch fault "
+                         f"(rung={tag}, rids={rids}, attempt={attempt})")
+        self.kind = kind
+        self.tag = tag
+        self.rids = rids
+        self.attempt = attempt
+
+
+class DispatchFaultInjector:
+    """Seeded *dispatch*-level fault injection for the rung server — the
+    process-fault sibling of :class:`NumericalFaultInjector`.  Where that
+    one corrupts matrix entries (exercising the in-sweep jitter ladder),
+    this one makes the executor itself misbehave, in three seeded modes:
+
+    * **transient** — ``before_dispatch`` raises for a seeded fraction of
+      batches, but only for attempts ``< transient_attempts``: a retry
+      ladder must recover these without any request noticing;
+    * **permanent** — raises on *every* attempt for batches containing a
+      poisoned request id (``poison_rids``) or landing on a poisoned rung
+      tag (``poison_rungs``): bisection must quarantine the poison and a
+      circuit breaker must stop feeding the rung;
+    * **straggler** — ``straggler_extra_for`` returns extra device
+      seconds for a seeded fraction of batches, which the executor burns
+      through its injected clock (``SimClock.advance`` offline,
+      ``time.sleep`` on the wall) so the straggler monitor and the
+      degradation policy see it.
+
+    Every decision hashes ``(seed, rung tag, member rids)`` — never a
+    call counter or wall clock — so the same schedule replayed through
+    the same injector makes identical decisions in any order, which is
+    the bit-identical-replay contract ``benchmarks/bench_chaos.py``
+    gates.  Raises and straggler grants are recorded in ``injected``.
+    """
+
+    def __init__(self, seed: int = 0, transient_rate: float = 0.0,
+                 transient_attempts: int = 1,
+                 poison_rids: Iterable[int] = (),
+                 poison_rungs: Iterable[str] = (),
+                 straggler_rate: float = 0.0,
+                 straggler_extra: float = 0.05):
+        if not 0.0 <= transient_rate <= 1.0:
+            raise ValueError(f"transient_rate must be in [0, 1], "
+                             f"got {transient_rate}")
+        if not 0.0 <= straggler_rate <= 1.0:
+            raise ValueError(f"straggler_rate must be in [0, 1], "
+                             f"got {straggler_rate}")
+        self.seed = seed
+        self.transient_rate = transient_rate
+        self.transient_attempts = transient_attempts
+        self.poison_rids = frozenset(int(r) for r in poison_rids)
+        self.poison_rungs = frozenset(str(r) for r in poison_rungs)
+        self.straggler_rate = straggler_rate
+        self.straggler_extra = straggler_extra
+        self.injected: List[tuple] = []
+
+    def _draw(self, salt: int, tag: str, rids: Tuple[int, ...]) -> float:
+        """Uniform [0,1) deterministic in (seed, salt, tag, rids) only."""
+        tag_key = [ord(c) for c in tag[:16]]
+        seq = np.random.SeedSequence([self.seed, salt, len(rids),
+                                      *[int(r) for r in rids], *tag_key])
+        return float(np.random.default_rng(seq).random())
+
+    def before_dispatch(self, tag: str, rids, attempt: int) -> None:
+        """Call at the top of every dispatch attempt; raises
+        :class:`InjectedDispatchError` when this (batch, attempt) draws a
+        fault.  ``tag`` is the canonical rung tag, ``rids`` the member
+        request ids in batch order."""
+        rids = tuple(int(r) for r in rids)
+        if tag in self.poison_rungs or self.poison_rids & set(rids):
+            self.injected.append(("permanent", tag, rids, attempt))
+            raise InjectedDispatchError("permanent", tag, rids, attempt)
+        if (self.transient_rate > 0.0 and attempt < self.transient_attempts
+                and self._draw(11, tag, rids) < self.transient_rate):
+            self.injected.append(("transient", tag, rids, attempt))
+            raise InjectedDispatchError("transient", tag, rids, attempt)
+
+    def straggler_extra_for(self, tag: str, rids) -> float:
+        """Extra device seconds to inject for this batch (0.0 for most)."""
+        rids = tuple(int(r) for r in rids)
+        if (self.straggler_rate > 0.0
+                and self._draw(13, tag, rids) < self.straggler_rate):
+            self.injected.append(("straggler", tag, rids,
+                                  self.straggler_extra))
+            return float(self.straggler_extra)
+        return 0.0
+
+
 class StragglerMonitor:
-    def __init__(self, factor: float = 3.0, window: int = 50):
+    """Per-step/per-batch wall-time watchdog: a recording slower than
+    ``factor`` x the running median (over the last ``window`` records,
+    once ``min_history`` records exist) is flagged.  Used by the training
+    loop (per-step wall times) and the rung server (per-batch
+    clock-accounted device times feeding the degradation policy)."""
+
+    def __init__(self, factor: float = 3.0, window: int = 50,
+                 min_history: int = 5):
         self.factor = factor
         self.window = window
+        self.min_history = min_history
         self.times: List[float] = []
         self.flagged: List[tuple] = []
 
-    def record(self, step: int, dt: float):
-        if len(self.times) >= 5:
+    def record(self, step: int, dt: float) -> bool:
+        """Record one duration; returns True when it was flagged."""
+        hit = False
+        if len(self.times) >= self.min_history:
             med = float(np.median(self.times[-self.window:]))
             if dt > self.factor * med:
                 self.flagged.append((step, dt, med))
+                hit = True
         self.times.append(dt)
+        return hit
 
     @property
     def median(self) -> float:

@@ -31,6 +31,25 @@ disabled, and :func:`span` returns a shared no-op context manager — the
 tier-1 guard test asserts the disabled-mode cost of a fully instrumented
 ``solve_many`` dispatch stays under 5%.
 
+**Serving resilience metrics** — the rung server's failure domains
+(``launch/rung_server.py``) report through this registry so chaos runs
+and production traces read identically.  Alongside the baseline serving
+metrics (``serving.requests``, ``serving.flush {reason=}``,
+``serving.batch_size``, ``serving.queue_wait``, ``serving.queue_depth
+{rung=}``, ``serving.completed {outcome=ok|recovered|failed|shed}``,
+``serving.request_seconds`` and the ``serving.dispatch`` /
+``serving.finalize`` spans), the resilience layer emits counters
+``serving.shed {detail=}`` (one per explicitly shed request, labeled
+with the shed reason), ``serving.overload_reject {scope=rung|global}``
+(typed admission rejections), ``serving.retry {rung=}`` /
+``serving.bisect {rung=}`` / ``serving.quarantine {rung=}`` (the
+recovery ladder), ``serving.dispatch_failure {kind=, rung=}``,
+``serving.breaker_transition {state=, rung=}``, ``serving.straggler
+{rung=}`` and ``serving.degradation_step {direction=up|down}``; gauges
+``serving.degradation_level`` and ``serving.straggler_seconds {rung=}``;
+and the per-batch device-time histogram ``serving.device_seconds
+{rung=}`` that feeds the straggler monitor.
+
 **Static half** — :func:`kernel_report` inspects a function *without
 running it*: it traces to a jaxpr, counts ``pallas_call`` launch sites
 (:func:`count_pallas_launches`, the gate behind ``BENCH_cholesky.json``),

@@ -7,22 +7,37 @@ wall-clock time — requests here are lightweight stand-ins that carry
 only a grid.  The invariants:
 
 * conservation — no request is lost or duplicated across any
-  interleaving of batch-full, deadline-expiry, and drain flushes;
-* deadline budget — every request leaves its queue no later than the
-  flush-by time committed at submit (``min(now + max_delay,
-  deadline)``), unless an earlier batch-full flush takes it sooner;
+  interleaving of batch-full, deadline-expiry, shed, and drain flushes;
+* deadline budget — every request leaves its queue at the driver's
+  first opportunity at or past the flush-by time committed at submit
+  (``min(now + max_delay, deadline)``): no later than the first tick at
+  or after flush-by, unless an earlier batch-full flush takes it sooner
+  or its deadline expired between ticks (then it leaves as an explicit
+  ``FLUSH_SHED`` batch, never silently);
 * rung keying — each flushed batch's key equals
   ``GridBucketPolicy.canonicalize`` of every member's grid (plus the
   shared RHS width);
 * determinism — the same plan replayed twice emits identical batch
   signatures in identical order.
+
+The full-server property drives a complete :class:`RungServer` (fake
+executor, injected faults, admission bounds) through arbitrary
+interleavings and asserts the end-to-end resilience contract: every
+submitted request resolves exactly once — never lost, duplicated, or
+left unresolved — and every terminal status is in the closed set
+{OK, RECOVERED, FAILED, SHED}.
 """
 import types
 
 import pytest
 
-from repro.core import GridBucketPolicy, TileGrid
-from repro.launch.rung_server import FLUSH_FULL, RungRequest, RungScheduler
+from repro.core import (STATUS_FAILED, STATUS_OK, STATUS_RECOVERED,
+                        STATUS_SHED, GridBucketPolicy, TileGrid)
+from repro.launch.rung_server import (FLUSH_FULL, FLUSH_SHED, SHED_DEADLINE,
+                                      DegradationPolicy, RungOverloadError,
+                                      RungRequest, RungResult, RungScheduler,
+                                      RungServer, SimClock)
+from repro.runtime import telemetry
 
 pytest.importorskip("hypothesis",
                     reason="property tests need the hypothesis package")
@@ -70,6 +85,7 @@ def test_scheduler_invariants(plan):
     flushed = []
     now, rid = 0.0, 0
     requests = {}
+    ticks = []
     for gap, ndt, k, rel_dl in events:
         now += gap
         req = _fake_request(rid, _grid(ndt), k=k,
@@ -77,13 +93,16 @@ def test_scheduler_invariants(plan):
         requests[rid] = req
         rid += 1
         flushed += s.tick(now, [req])
+        ticks.append(now)
         nxt = s.next_flush_by()
         if nxt is not None and nxt <= now:
             # a zero-budget deadline flushes on the very next tick
             flushed += s.tick(now)
+            ticks.append(now)
     end = now + max_delay + 1.0
     flushed += s.tick(end)
     flushed += s.drain(end)
+    ticks.append(end)
 
     seen = [r.rid for b in flushed for r in b.requests]
     assert sorted(seen) == sorted(requests)       # no loss, no duplication
@@ -92,9 +111,19 @@ def test_scheduler_invariants(plan):
         for r in b.requests:
             assert cgrid == policy.canonicalize(r.matrix.grid)
             assert r.k == k
-            # flushed no later than the committed flush-by time (drain at
-            # `end` is past every budget, so this covers it too)
-            assert b.decided_at <= r.flush_by or b.reason == FLUSH_FULL
+            if b.reason == FLUSH_SHED:
+                # shedding is always explicit and justified: only a
+                # request whose deadline truly passed between ticks may
+                # leave this way
+                assert b.detail == SHED_DEADLINE
+                assert r.deadline is not None and b.decided_at > r.deadline
+            else:
+                # flushed at the driver's first opportunity at or past
+                # flush-by (a tick may land late; the scheduler must not
+                # hold the request past the *next* tick), unless an
+                # earlier batch-full flush took it sooner
+                first_due = min(t for t in ticks if t >= r.flush_by)
+                assert b.decided_at <= first_due or b.reason == FLUSH_FULL
 
 
 @given(arrival_plan())
@@ -116,3 +145,103 @@ def test_scheduler_replay_identical(plan):
         return [b.signature() for b in out]
 
     assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# full-server resilience property: conservation under faults + overload
+# ---------------------------------------------------------------------------
+
+TERMINAL = {STATUS_OK, STATUS_RECOVERED, STATUS_FAILED, STATUS_SHED}
+
+
+class _ChaoticExecutor:
+    """Fake device: resolves futures with OK results, but fails dispatch
+    for scripted rids — ``poison`` forever, ``flaky`` once each."""
+
+    def __init__(self, poison, flaky):
+        self.poison = set(poison)
+        self.flaky = dict.fromkeys(flaky, 1)
+
+    def dispatch(self, batch, now):
+        for r in batch.requests:
+            if r.rid in self.poison:
+                raise RuntimeError(f"poison {r.rid}")
+        for r in batch.requests:
+            if self.flaky.get(r.rid, 0) > 0:
+                self.flaky[r.rid] -= 1
+                raise RuntimeError(f"flaky {r.rid}")
+        return batch
+
+    def finalize(self, batch, now):
+        out = []
+        for r in batch.requests:
+            res = RungResult(rid=r.rid, status=STATUS_OK, attempts=1,
+                             tau=0.0, x=None, factor=None,
+                             latency=now - r.arrival, wall_latency_s=0.0,
+                             flush_reason=batch.reason,
+                             batch_size=len(batch.requests),
+                             rung=telemetry.rung_tag(batch.key[0]))
+            if r.future is not None:
+                r.future._resolve(res)
+            out.append(res)
+        return out
+
+
+@st.composite
+def server_plan(draw):
+    """Arbitrary interleaving of arrivals (gap, rung, deadline, fault)
+    with server-shape knobs: queue bounds, overload mode, degradation."""
+    events = draw(st.lists(st.tuples(
+        st.sampled_from([0.0, 4e-4, 1.1e-3, 6e-3]),   # inter-arrival gap
+        st.sampled_from([6, 9]),                       # rung (source ndt)
+        st.sampled_from([None, 0.0, 1e-3, 5e-3]),      # deadline - arrival
+        st.sampled_from([None, "flaky", "poison"]),    # dispatch fault
+    ), min_size=1, max_size=24))
+    max_queue = draw(st.sampled_from([None, 1, 2, 4]))
+    on_overload = draw(st.sampled_from(["raise", "shed"]))
+    degrade = draw(st.booleans())
+    max_batch = draw(st.integers(1, 3))
+    return events, max_queue, on_overload, degrade, max_batch
+
+
+@given(server_plan())
+@settings(max_examples=20, deadline=None)
+def test_server_conservation_under_faults_and_overload(plan):
+    """No request is ever lost, duplicated, or left unresolved — across
+    arbitrary interleavings of arrivals, deadline expiries, dispatch
+    faults (transient and poison), queue-bound rejections, and shutdown
+    — and every terminal status is in the closed taxonomy."""
+    events, max_queue, on_overload, degrade, max_batch = plan
+    poison = {i for i, e in enumerate(events) if e[3] == "poison"}
+    flaky = {i for i, e in enumerate(events) if e[3] == "flaky"}
+    clock = SimClock()
+    server = RungServer(
+        clock=clock, executor=_ChaoticExecutor(poison, flaky),
+        injector=None, max_batch=max_batch, max_delay=2e-3,
+        max_queue=max_queue, on_overload=on_overload,
+        degradation=DegradationPolicy(step_dwell=0.0) if degrade else None,
+        max_retries=1, backoff_base=1e-5, breaker_threshold=3,
+        breaker_reset=5e-3)
+    futures, rejected = {}, 0
+    for i, (gap, ndt, rel_dl, _fault) in enumerate(events):
+        clock.advance(gap)
+        dl = None if rel_dl is None else clock.now + rel_dl
+        try:
+            futures[i] = server.submit(
+                types.SimpleNamespace(grid=_grid(ndt)), deadline=dl)
+        except RungOverloadError:
+            rejected += 1                  # typed backpressure, no future
+        server.pump()
+    server.drain()
+
+    assert len(futures) + rejected == len(events)  # every event accounted
+    for i, fut in futures.items():
+        assert fut.done()                          # nothing left hanging
+        r = fut.result(timeout=0)
+        assert r.rid == fut.rid
+        assert r.status in TERMINAL                # closed status taxonomy
+        assert fut.duplicate_resolves == 0         # resolved exactly once
+        if i in poison and r.status not in (STATUS_SHED,):
+            assert r.status == STATUS_FAILED       # poison never "succeeds"
+        if r.status == STATUS_SHED:
+            assert r.detail                        # shed always says why

@@ -1,0 +1,549 @@
+"""Resilience tests for the rung server: admission control, shedding,
+dispatch-failure isolation, circuit breaking, graceful degradation, and
+shutdown.
+
+Everything except the wedged-shutdown regression runs thread-free on a
+``SimClock`` with fake executors (no device work), so every failure path
+is driven deterministically: faults are injected as exceptions from a
+scripted executor or via the seeded
+:class:`~repro.runtime.fault_tolerance.DispatchFaultInjector`, and the
+contracts are exact — shed is always an explicit ``STATUS_SHED`` result,
+a poison request quarantines alone, a broken rung never starves a
+healthy one, and ``stop()`` leaves no future unresolved even when the
+executor is wedged inside a dispatch.
+"""
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import STATUS_FAILED, STATUS_OK, STATUS_RECOVERED, \
+    STATUS_SHED, TileGrid
+from repro.core.batching import RungQueue, RungQueueFull
+from repro.data.synthetic import request_stream
+from repro.launch.rung_server import (FLUSH_DEADLINE, FLUSH_SHED,
+                                      SHED_BREAKER, SHED_DEADLINE,
+                                      SHED_OVERLOAD, SHED_SHUTDOWN,
+                                      SHED_SLACK, CircuitBreaker,
+                                      DegradationPolicy, RungOverloadError,
+                                      RungRequest, RungResult, RungScheduler,
+                                      RungServer, SimClock)
+from repro.runtime import telemetry
+from repro.runtime.fault_tolerance import (DispatchFaultInjector,
+                                           InjectedDispatchError,
+                                           StragglerMonitor)
+
+pytestmark = pytest.mark.serving
+
+
+def _grid(ndt=6):
+    return TileGrid.from_tile_counts(8, ndt, 1, 1)
+
+
+def _fake_request(rid, grid, deadline=None):
+    return RungRequest(rid=rid, matrix=types.SimpleNamespace(grid=grid),
+                       rhs=None, deadline=deadline)
+
+
+def _stub_matrix(ndt=6):
+    return types.SimpleNamespace(grid=_grid(ndt))
+
+
+class ScriptedExecutor:
+    """Duck-typed RungExecutor whose failures are scripted per rid:
+    ``poison`` rids raise on every dispatch, ``flaky[rid] = n`` raises on
+    the first ``n`` dispatches that include the rid.  Counts dispatches
+    so tests can assert shed batches never touch the 'device'."""
+
+    def __init__(self, poison=(), flaky=None):
+        self.poison = set(poison)
+        self.flaky = dict(flaky or {})
+        self.dispatches = 0
+        self.dispatched_rids = []
+
+    def dispatch(self, batch, now):
+        self.dispatches += 1
+        rids = [r.rid for r in batch.requests]
+        for rid in rids:
+            if rid in self.poison:
+                raise RuntimeError(f"poison rid {rid}")
+        for rid in rids:
+            if self.flaky.get(rid, 0) > 0:
+                self.flaky[rid] -= 1
+                raise RuntimeError(f"flaky rid {rid}")
+        self.dispatched_rids.extend(rids)
+        return batch
+
+    def finalize(self, batch, now):
+        results = []
+        for r in batch.requests:
+            res = RungResult(rid=r.rid, status=STATUS_OK, attempts=1,
+                             tau=0.0, x=None, factor=None,
+                             latency=now - r.arrival, wall_latency_s=0.0,
+                             flush_reason=batch.reason,
+                             batch_size=len(batch.requests),
+                             rung=telemetry.rung_tag(batch.key[0]))
+            if r.future is not None:
+                r.future._resolve(res)
+            results.append(res)
+        return results
+
+
+def _server(clock=None, executor=None, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_delay", 1e-3)
+    kw.setdefault("injector", None)
+    kw.setdefault("backoff_base", 1e-6)
+    return RungServer(clock=clock or SimClock(),
+                      executor=executor or ScriptedExecutor(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# bounded queues (core/batching.py)
+# ---------------------------------------------------------------------------
+
+def test_rung_queue_bound_and_shedding_primitives():
+    q = RungQueue(maxlen=2)
+    q.push("a", 1.0)
+    q.push("b", 2.0)
+    assert q.full
+    with pytest.raises(RungQueueFull) as ei:
+        q.push("c", 3.0)
+    assert ei.value.depth == 2 and ei.value.maxlen == 2
+    assert q.remove_if(lambda it: it == "a") == ["a"]
+    q.push("c", 0.5)
+    # evict_min takes the minimizer; ties go to the oldest
+    assert q.evict_min(lambda it: 0.0) == "b"
+    assert q.pop() == ["c"]
+
+
+# ---------------------------------------------------------------------------
+# admission control + typed backpressure
+# ---------------------------------------------------------------------------
+
+def test_submit_raises_typed_overload_on_rung_bound():
+    server = _server(max_queue=2, max_delay=10.0)
+    for _ in range(2):
+        server.submit(_stub_matrix())
+    with pytest.raises(RungOverloadError) as ei:
+        server.submit(_stub_matrix())
+    assert ei.value.scope == "rung"
+    assert ei.value.depth == 2 and ei.value.limit == 2
+    # other rungs are unaffected by one rung's bound
+    server.submit(_stub_matrix(ndt=12))
+
+
+def test_submit_raises_on_global_bound():
+    server = _server(max_pending=2, max_delay=10.0)
+    server.submit(_stub_matrix(ndt=6))
+    server.submit(_stub_matrix(ndt=12))
+    with pytest.raises(RungOverloadError) as ei:
+        server.submit(_stub_matrix(ndt=9))
+    assert ei.value.scope == "global"
+
+
+def test_overload_shed_mode_resolves_future_immediately():
+    server = _server(max_queue=1, max_delay=10.0, on_overload="shed")
+    server.submit(_stub_matrix())
+    fut = server.submit(_stub_matrix())
+    r = fut.result(timeout=0)
+    assert r.status == STATUS_SHED and r.detail == SHED_OVERLOAD
+    assert not r.ok()
+    # per-call override beats the server default
+    server2 = _server(max_queue=1, max_delay=10.0)
+    server2.submit(_stub_matrix())
+    r2 = server2.submit(_stub_matrix(), on_overload="shed").result(timeout=0)
+    assert r2.status == STATUS_SHED
+
+
+# ---------------------------------------------------------------------------
+# deadline-expiry shedding
+# ---------------------------------------------------------------------------
+
+def test_expired_requests_shed_never_dispatch():
+    s = RungScheduler(max_batch=8, max_delay=10.0)
+    g = _grid()
+    s.submit(0.0, _fake_request(0, g, deadline=1.0))
+    s.submit(0.0, _fake_request(1, g))
+    # strictly past the deadline: 0 is swept out as a shed batch; 1 (its
+    # own flush_by is arrival + max_delay = 10) keeps its queue slot
+    # instead of being dragged out with the expired sibling
+    batches = s.tick(1.5)
+    assert [b.reason for b in batches] == [FLUSH_SHED]
+    assert batches[0].detail == SHED_DEADLINE
+    assert tuple(r.rid for r in batches[0].requests) == (0,)
+    assert s.pending == 1
+    (late,) = s.tick(10.0)
+    assert late.reason == FLUSH_DEADLINE
+    assert tuple(r.rid for r in late.requests) == (1,)
+
+
+def test_flush_at_exact_deadline_still_serves():
+    # at exactly the deadline the request is served (FLUSH_DEADLINE), not
+    # shed — the boundary the pre-existing deadline tests rely on
+    s = RungScheduler(max_batch=8, max_delay=10.0)
+    s.submit(0.0, _fake_request(0, _grid(), deadline=2.0))
+    (b,) = s.tick(2.0)
+    assert b.reason == FLUSH_DEADLINE
+
+
+def test_dead_on_arrival_is_shed():
+    s = RungScheduler(max_batch=8, max_delay=10.0)
+    s.submit(5.0, _fake_request(0, _grid(), deadline=1.0))
+    (b,) = s.tick(5.0)
+    assert b.reason == FLUSH_SHED and b.detail == SHED_DEADLINE
+
+
+def test_shed_future_resolves_with_status_shed_and_no_device_time():
+    clock = SimClock()
+    ex = ScriptedExecutor()
+    server = _server(clock=clock, executor=ex, max_delay=10.0)
+    fut = server.submit(_stub_matrix(), deadline=1.0)
+    clock.advance(2.0)
+    server.pump()
+    r = fut.result(timeout=0)
+    assert r.status == STATUS_SHED and r.detail == SHED_DEADLINE
+    assert r.flush_reason == FLUSH_SHED
+    assert r.x is None and r.factor is None
+    assert ex.dispatches == 0                     # never touched the device
+    # shed batches are part of the replayable flush history
+    assert server.history[-1][3] == FLUSH_SHED
+    assert server.history[-1][4] == SHED_DEADLINE
+
+
+# ---------------------------------------------------------------------------
+# dispatch-failure isolation: retry, bisect, quarantine
+# ---------------------------------------------------------------------------
+
+def test_transient_failure_retries_and_recovers():
+    clock = SimClock()
+    ex = ScriptedExecutor(flaky={0: 1})
+    server = _server(clock=clock, executor=ex, max_retries=2)
+    futs = [server.submit(_stub_matrix()) for _ in range(2)]
+    clock.advance(1e-3)
+    server.pump()
+    server.drain()
+    rs = [f.result(timeout=0) for f in futs]
+    # served after one retry: both marked RECOVERED, nothing failed
+    assert [r.status for r in rs] == [STATUS_RECOVERED] * 2
+    assert all(r.ok() for r in rs)
+    kinds = [e[0] for e in server.events]
+    assert "retry" in kinds and "quarantine" not in kinds
+
+
+def test_poison_request_quarantined_siblings_survive():
+    clock = SimClock()
+    ex = ScriptedExecutor(poison={2})
+    server = _server(clock=clock, executor=ex, max_retries=1)
+    futs = [server.submit(_stub_matrix()) for _ in range(4)]
+    clock.advance(1e-3)
+    server.pump()
+    server.drain()
+    rs = [f.result(timeout=0) for f in futs]
+    assert rs[2].status == STATUS_FAILED
+    assert rs[2].detail == "dispatch_failed"
+    assert rs[2].x is None and rs[2].factor is None
+    for i in (0, 1, 3):
+        assert rs[i].status == STATUS_RECOVERED and rs[i].ok()
+    kinds = [e[0] for e in server.events]
+    assert "bisect" in kinds and "quarantine" in kinds
+    # exceptions never leak: every future resolved exactly once
+    assert all(f.duplicate_resolves == 0 for f in futs)
+
+
+def test_backoff_burns_injected_clock_deterministically():
+    def run():
+        clock = SimClock()
+        server = _server(clock=clock, executor=ScriptedExecutor(flaky={0: 2}),
+                         max_retries=3, backoff_base=1e-3)
+        fut = server.submit(_stub_matrix())
+        clock.advance(1e-3)
+        server.pump()
+        server.drain()
+        return fut.result(timeout=0), clock.now, list(server.events)
+
+    r1, t1, e1 = run()
+    r2, t2, e2 = run()
+    assert r1.status == STATUS_RECOVERED
+    assert t1 == t2 and e1 == e2                  # backoff replays exactly
+    assert t1 > 2e-3                              # retries actually waited
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker
+# ---------------------------------------------------------------------------
+
+def test_breaker_state_machine():
+    br = CircuitBreaker(failure_threshold=2, reset_timeout=1.0)
+    assert br.allow(0.0) and br.state == "closed"
+    br.record_failure(0.0)
+    assert br.state == "closed"
+    br.record_failure(0.1)
+    assert br.state == "open"
+    assert not br.allow(0.5)                      # still open
+    assert br.allow(1.2) and br.state == "half_open"
+    br.record_failure(1.3)                        # trial failed: reopen
+    assert br.state == "open" and not br.allow(1.4)
+    assert br.allow(2.4) and br.state == "half_open"
+    br.record_success(2.5)
+    assert br.state == "closed" and br.failures == 0
+
+
+def test_open_breaker_sheds_rung_but_not_neighbors():
+    clock = SimClock()
+    ex = ScriptedExecutor(poison={0, 1, 2})      # rung ndt=6 always fails
+    server = _server(clock=clock, executor=ex, max_retries=0,
+                     breaker_threshold=2, breaker_reset=100.0, max_batch=1)
+    bad = [server.submit(_stub_matrix(ndt=6)) for _ in range(3)]
+    good = [server.submit(_stub_matrix(ndt=12)) for _ in range(3)]
+    clock.advance(1e-3)
+    server.pump()
+    server.drain()
+    rb = [f.result(timeout=0) for f in bad]
+    rg = [f.result(timeout=0) for f in good]
+    # first two poison batches fail through the ladder and trip the
+    # breaker; the third is shed without a dispatch attempt
+    assert [r.status for r in rb] == [STATUS_FAILED, STATUS_FAILED,
+                                      STATUS_SHED]
+    assert rb[2].detail == SHED_BREAKER
+    # the healthy rung keeps serving throughout
+    assert all(r.status == STATUS_OK for r in rg)
+    states = [e[2] for e in server.events if e[0] == "breaker"]
+    assert states == ["open"]
+
+
+def test_breaker_recovers_through_half_open_trial():
+    clock = SimClock()
+    ex = ScriptedExecutor(flaky={0: 1, 1: 1})     # each first try fails
+    server = _server(clock=clock, executor=ex, max_retries=0,
+                     breaker_threshold=2, breaker_reset=0.5, max_batch=1,
+                     max_delay=1e-3)
+    f0 = server.submit(_stub_matrix())
+    f1 = server.submit(_stub_matrix())
+    clock.advance(1e-3)
+    server.pump()                                 # two failures: breaker opens
+    server.drain()                                # settle the double buffer
+    assert f0.result(timeout=0).status == STATUS_FAILED
+    assert f1.result(timeout=0).status == STATUS_FAILED
+    f2 = server.submit(_stub_matrix())            # while open: shed
+    clock.advance(2e-3)
+    server.pump()
+    assert f2.result(timeout=0).detail == SHED_BREAKER
+    clock.advance(0.5)                            # past reset_timeout
+    f3 = server.submit(_stub_matrix())
+    clock.advance(1e-3)
+    server.pump()                                 # half-open trial succeeds
+    server.drain()
+    assert f3.result(timeout=0).status == STATUS_OK
+    states = [e[2] for e in server.events if e[0] == "breaker"]
+    assert states == ["open", "half_open", "closed"]
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation
+# ---------------------------------------------------------------------------
+
+def test_degradation_steps_up_and_sheds_lowest_slack():
+    pol = DegradationPolicy(high_watermark=0.5, low_watermark=0.1,
+                            step_dwell=0.0, recover_dwell=1.0)
+    s = RungScheduler(max_batch=8, max_delay=1.0, max_queue=4,
+                      degradation=pol)
+    g = _grid()
+    # fill to the watermark: level steps up, effective knobs shrink
+    for i in range(4):
+        s.submit(float(i) * 1e-3, _fake_request(i, g, deadline=10.0 + i))
+    assert s.level >= 1
+    assert s.effective_max_delay() < 1.0
+    assert s.effective_max_batch() < 8
+    # at the bound under degradation: lowest-slack victim is shed, the
+    # newcomer (more slack) is admitted
+    s.submit(4e-3, _fake_request(9, g, deadline=99.0))
+    batches = [b for b in s.tick(5e-3) if b.reason == FLUSH_SHED]
+    assert len(batches) == 1 and batches[0].detail == SHED_SLACK
+    assert tuple(r.rid for r in batches[0].requests) == (0,)
+
+
+def test_degradation_recovers_hysteretically():
+    pol = DegradationPolicy(high_watermark=0.5, low_watermark=0.25,
+                            step_dwell=0.0, recover_dwell=1.0, max_level=1)
+    s = RungScheduler(max_batch=8, max_delay=1.0, max_queue=4,
+                      degradation=pol)
+    g = _grid()
+    for i in range(4):
+        s.submit(0.0, _fake_request(i, g))
+    assert s.level == 1
+    s.tick(1.0)                                   # queue flushes: idle now
+    assert s.level == 1                           # no instant flap
+    s.tick(1.5)
+    assert s.level == 1                           # dwell not yet served
+    s.tick(2.5)                                   # >= recover_dwell below low
+    assert s.level == 0
+
+
+def test_straggler_flags_feed_degradation():
+    pol = DegradationPolicy(straggler_trigger=2, step_dwell=0.0)
+    s = RungScheduler(max_batch=8, max_delay=1.0, degradation=pol)
+    s.note_straggler(0.0)
+    assert s.level == 0
+    s.note_straggler(0.1)
+    assert s.level == 1
+
+
+def test_straggler_monitor_flags_outliers():
+    m = StragglerMonitor(factor=3.0, window=8, min_history=3)
+    for i in range(5):
+        assert not m.record(i, 1.0)
+    assert m.record(5, 10.0)                      # 10x the median
+    assert not m.record(6, 1.1)
+
+
+# ---------------------------------------------------------------------------
+# chaos injector determinism
+# ---------------------------------------------------------------------------
+
+def test_injector_decisions_hash_composition_not_call_order():
+    a = DispatchFaultInjector(seed=3, transient_rate=0.5)
+    b = DispatchFaultInjector(seed=3, transient_rate=0.5)
+    probe = [("ndt6.bt1.nat1.t8", (0, 1)), ("ndt12.bt1.nat1.t8", (2,)),
+             ("ndt6.bt1.nat1.t8", (3, 4, 5))]
+
+    def outcomes(inj, order):
+        out = []
+        for tag, rids in order:
+            try:
+                inj.before_dispatch(tag, rids, attempt=0)
+                out.append((tag, rids, None))
+            except InjectedDispatchError as e:
+                out.append((tag, rids, e.kind))
+        return out
+
+    fwd = outcomes(a, probe)
+    rev = outcomes(b, list(reversed(probe)))
+    assert sorted(fwd) == sorted(rev)             # order-independent draws
+
+
+def test_injector_poison_and_transient_modes():
+    inj = DispatchFaultInjector(seed=0, transient_rate=1.0,
+                                transient_attempts=1, poison_rids=(7,))
+    with pytest.raises(InjectedDispatchError) as ei:
+        inj.before_dispatch("t", (0, 1), attempt=0)
+    assert ei.value.kind == "transient"
+    inj.before_dispatch("t", (0, 1), attempt=1)   # transient clears
+    for attempt in range(3):                      # poison never clears
+        with pytest.raises(InjectedDispatchError) as ei:
+            inj.before_dispatch("t", (6, 7), attempt=attempt)
+        assert ei.value.kind == "permanent"
+
+
+def test_chaos_replay_is_bit_identical():
+    def run():
+        clock = SimClock()
+        inj = DispatchFaultInjector(seed=11, transient_rate=0.4,
+                                    transient_attempts=1, poison_rids=(3,),
+                                    straggler_rate=0.3, straggler_extra=2e-3)
+        server = _server(clock=clock, executor=ScriptedExecutor(),
+                         injector=inj, max_retries=2, backoff_base=1e-4,
+                         max_batch=2, max_delay=1e-3)
+        futs = [server.submit(_stub_matrix(ndt=6 + 3 * (i % 2)),
+                              deadline=clock.now + 5e-3)
+                for i in range(8)]
+        for _ in range(8):
+            clock.advance(1e-3)
+            server.pump()
+        server.drain()
+        rs = [f.result(timeout=0) for f in futs]
+        return (list(server.history), list(server.events),
+                [(r.rid, r.status, r.detail) for r in rs])
+
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# burst arrivals (data/synthetic.py)
+# ---------------------------------------------------------------------------
+
+def test_burst_mode_off_is_bit_compatible():
+    base = request_stream(3, [(64, 6, 4)], 32, rate=500.0)
+    off = request_stream(3, [(64, 6, 4)], 32, rate=500.0, burst_factor=1.0)
+    assert base == off
+
+
+def test_burst_mode_is_seeded_and_compresses_arrivals():
+    kw = dict(rate=500.0, burst_factor=8.0, burst_len=20e-3,
+              normal_len=20e-3)
+    a = request_stream(3, [(64, 6, 4)], 64, **kw)
+    b = request_stream(3, [(64, 6, 4)], 64, **kw)
+    assert a == b                                 # seeded, replayable
+    arr = [s["arrival"] for s in a]
+    assert all(x < y for x, y in zip(arr, arr[1:]))
+    base = [s["arrival"] for s in request_stream(3, [(64, 6, 4)], 64,
+                                                 rate=500.0)]
+    # bursts only ever accelerate the modulated clock
+    assert arr[-1] < base[-1]
+    # everything but arrival times (cases, seeds, k) is draw-identical
+    strip = lambda specs: [{k: v for k, v in s.items()
+                            if k not in ("arrival", "deadline")}
+                           for s in specs]
+    assert strip(a) == strip(request_stream(3, [(64, 6, 4)], 64, rate=500.0))
+
+
+# ---------------------------------------------------------------------------
+# shutdown: no future left behind
+# ---------------------------------------------------------------------------
+
+class WedgedExecutor(ScriptedExecutor):
+    """Dispatch parks forever — the stuck-device regression case."""
+
+    def __init__(self):
+        super().__init__()
+        self.entered = threading.Event()
+
+    def dispatch(self, batch, now):
+        self.entered.set()
+        time.sleep(3600.0)
+
+
+def test_stop_resolves_all_futures_when_executor_wedges():
+    ex = WedgedExecutor()
+    server = RungServer(executor=ex, injector=None, max_batch=1,
+                        max_delay=1e-3, poll_interval=1e-3)
+    server.start()
+    futs = [server.submit(_stub_matrix()) for _ in range(3)]
+    assert ex.entered.wait(timeout=30.0)          # pump is now wedged
+    t0 = time.perf_counter()
+    server.stop(timeout=0.2)                      # must not hang on drain
+    assert time.perf_counter() - t0 < 30.0
+    for f in futs:
+        r = f.result(timeout=0)                   # already resolved
+        assert r.status == STATUS_SHED and r.detail == SHED_SHUTDOWN
+    assert server._thread is None
+
+
+def test_stop_without_thread_is_noop():
+    server = _server()
+    server.stop()                                 # never started: fine
+
+
+def test_env_var_arms_default_chaos_injector(monkeypatch):
+    """REPRO_CHAOS_SEED arms a seeded injector on servers built with the
+    default ``injector="auto"`` — and the armed server still conserves
+    every future (transients recover through the retry ladder)."""
+    monkeypatch.setenv("REPRO_CHAOS_SEED", "23")
+    clock = SimClock()
+    server = RungServer(clock=clock, executor=ScriptedExecutor(),
+                        max_batch=2, max_delay=1e-3, backoff_base=1e-6)
+    assert server.executor.injector is not None
+    assert server.executor.injector.seed == 23
+    futs = [server.submit(_stub_matrix()) for _ in range(6)]
+    clock.advance(2e-3)
+    server.pump()
+    server.drain()
+    for f in futs:
+        assert f.done() and f.duplicate_resolves == 0
+        assert f.result(timeout=0).status in (STATUS_OK, STATUS_RECOVERED)
+
+    # explicit pins always win over the env var
+    monkeypatch.setenv("REPRO_CHAOS_SEED", "99")
+    assert _server().executor.injector is None
