@@ -35,6 +35,7 @@ from repro.core import (BandedCTSF, GridBucketPolicy, TileGrid,
                         factorize_window_batched, padded_flop_overhead,
                         restrict_factor)
 from repro.core import cholesky as _cholesky
+from repro.core.options import SolverOptions
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -72,8 +73,7 @@ def run(quick: bool = True):
         t0 = time.perf_counter()
         factors = []
         for _, m in problems:
-            f = factorize_window_batched([m, m], impl=None,
-                                         policy=policy_arg)
+            f = factorize_window_batched([m, m], options=SolverOptions(impl=None, policy=policy_arg))
             jax.block_until_ready(f.ctsf.Dr)
             factors.append(f)
         dt = time.perf_counter() - t0

@@ -36,6 +36,7 @@ import numpy as np
 from repro.core import (BandedCTSF, TileGrid, factorize_window_batched,
                         STATUS_FAILED, STATUS_OK, STATUS_RECOVERED)
 from repro.runtime.fault_tolerance import NumericalFaultInjector
+from repro.core.options import SolverOptions
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -76,8 +77,7 @@ def run(quick: bool = True):
     nans = [i for i, m in modes.items() if m == "nan"]
     healthy = [i for i in range(B) if i not in modes and i != B - 1]
 
-    f = factorize_window_batched(corrupted, impl=None, bucket=False,
-                                 regularize=True)
+    f = factorize_window_batched(corrupted, bucket=False, options=SolverOptions(impl=None, regularize=True))
     status = np.asarray(f.info.status)
     attempts = np.asarray(f.info.attempts)
 
@@ -90,7 +90,7 @@ def run(quick: bool = True):
     # graceful degradation: NaN elements flagged FAILED, never raising
     nan_flagged = all(status[i] == STATUS_FAILED for i in nans)
     # containment: healthy elements bit-identical to the unregularized call
-    f_plain = factorize_window_batched(corrupted, impl=None, bucket=False)
+    f_plain = factorize_window_batched(corrupted, bucket=False, options=SolverOptions(impl=None))
     contained = all(
         np.array_equal(np.asarray(f.ctsf.Dr[i]), np.asarray(f_plain.ctsf.Dr[i]))
         and np.array_equal(np.asarray(f.ctsf.R[i]), np.asarray(f_plain.ctsf.R[i]))
@@ -106,11 +106,11 @@ def run(quick: bool = True):
 
     def plain():
         jax.block_until_ready(factorize_window_batched(
-            clean, impl=None, bucket=False).ctsf.Dr)
+            clean, bucket=False, options=SolverOptions(impl=None)).ctsf.Dr)
 
     def robust():
         jax.block_until_ready(factorize_window_batched(
-            clean, impl=None, bucket=False, regularize=True).ctsf.Dr)
+            clean, bucket=False, options=SolverOptions(impl=None, regularize=True)).ctsf.Dr)
 
     t_plain = _time(plain)
     t_robust = _time(robust)

@@ -6,7 +6,7 @@ factor, timed at full-diagonal selection (k = n, the INLA serving case):
 
 * :func:`selected_inverse` — one backward tile sweep, cost independent of k
   (and it yields the whole band + arrow block of Σ, not just the diagonal).
-* ``marginal_variances(method="panels")`` — k unit-vector RHS riding one
+* ``marginal_variances(options=SolverOptions(method="panels"))`` — k unit-vector RHS riding one
   blocked forward sweep; cost grows with k (the (t, t) @ (t, k) band steps).
 * ``np.linalg.inv`` of the densified matrix — the O(n³) strawman.
 
@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import (BandedCTSF, TileGrid, factorize_window,
                         marginal_variances, selected_inverse)
+from repro.core.options import SolverOptions
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -60,11 +61,11 @@ def run(quick: bool = True):
     # --- dense unit-vector panels at full-diagonal selection ---------------
     def panels_full():
         jax.block_until_ready(
-            marginal_variances(factor, full_idx, method="panels"))
+            marginal_variances(factor, full_idx, options=SolverOptions(method="panels")))
 
     def panels_small():
         jax.block_until_ready(
-            marginal_variances(factor, small_idx, method="panels"))
+            marginal_variances(factor, small_idx, options=SolverOptions(method="panels")))
 
     t_selinv = _time(selinv)
     t_panels_full = _time(panels_full)

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core import GridBucketPolicy, factorize_window, solve_many
 from repro.launch.rung_server import (RungServer, SimClock, _build_arrivals,
                                       replay)
+from repro.core.options import SolverOptions
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -95,7 +96,7 @@ def run(quick: bool = True):
     parity = 0.0
     for i in range(0, len(arrivals), max(1, len(arrivals) // 6)):
         _, m, b, _ = arrivals[i]
-        f = factorize_window(m, regularize=True)
+        f = factorize_window(m, options=SolverOptions(regularize=True))
         x = np.asarray(solve_many(f, b))
         parity = max(parity, float(np.abs(res2[i].x - x).max()))
 

@@ -34,6 +34,7 @@ from repro.core import (BandedCTSF, TileGrid, factorize_window,
                         factorize_window_batched, marginal_variances, solve,
                         solve_many)
 from repro.core.solve import _marginal_variances_map
+from repro.core.options import SolverOptions
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -84,7 +85,7 @@ def run(quick: bool = True):
 
     def mv_batched():
         jax.block_until_ready(
-            marginal_variances(factor, idx, method="panels"))
+            marginal_variances(factor, idx, options=SolverOptions(method="panels")))
 
     def mv_map():
         jax.block_until_ready(_marginal_variances_map(factor, idx))
@@ -102,10 +103,10 @@ def run(quick: bool = True):
     Bf = B[:, :kf]
 
     def sweep_fused():
-        jax.block_until_ready(solve_many(factor, Bf, impl="pallas"))
+        jax.block_until_ready(solve_many(factor, Bf, options=SolverOptions(impl="pallas")))
 
     def sweep_looped():
-        jax.block_until_ready(solve_many(factor, Bf, impl="ref"))
+        jax.block_until_ready(solve_many(factor, Bf, options=SolverOptions(impl="ref")))
 
     t_fused = _time(sweep_fused, reps=2)
     t_looped = _time(sweep_looped, reps=2)

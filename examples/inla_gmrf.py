@@ -39,12 +39,10 @@ import jax.numpy as jnp
 import numpy as np
 import scipy.sparse as sp
 
-from repro.core import (BandedCTSF, TileGrid, factorize_window_batched,
-                        sample_gmrf_many, selected_inverse)
-from repro.core.cholesky import CholeskyFactor
-from repro.core.concurrent import (concurrent_logdet,
-                                   concurrent_quadratic_forms, stack_ctsf)
-from repro.core.structure import ArrowheadStructure
+from repro.api import (ArrowheadStructure, BandedCTSF, CholeskyFactor,
+                       TileGrid, concurrent_logdet,
+                       concurrent_quadratic_forms, factorize_window_batched,
+                       sample_gmrf_many, selected_inverse, stack_ctsf)
 from repro.data.gmrf import ar1_precision, lattice_precision
 
 

@@ -13,10 +13,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (BandedCTSF, TileGrid, TileMatrix, factorize_tasklist,
-                        factorize_window, logdet, marginal_variances,
-                        measure_arrowhead, sample_gmrf, solve,
-                        symbolic_factorize, tile_pattern_from_coo)
+from repro.api import (BandedCTSF, TileGrid, factorize_window, logdet,
+                       marginal_variances, measure_arrowhead, sample_gmrf,
+                       solve)
+from repro.core import (TileMatrix, factorize_tasklist, symbolic_factorize,
+                        tile_pattern_from_coo)
 from repro.core.ordering import best_ordering
 from repro.data import make_arrowhead
 

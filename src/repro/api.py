@@ -1,0 +1,103 @@
+"""Stable public facade for the solver stack.
+
+Applications import from here — ``from repro import api`` (or
+``from repro.api import ...``) — instead of reaching into submodules.
+Everything in ``__all__`` is covered by the API-snapshot test
+(``tests/test_options_api.py``): names are added deliberately and never
+silently removed or re-signatured.
+
+The surface is one matrix type (:class:`BandedCTSF` on a
+:class:`TileGrid`), one knob object (:class:`SolverOptions`, accepted as
+``options=`` by every entry point), and the entry points themselves:
+
+* factorize: :func:`factorize_window` / :func:`factorize_window_batched`
+  / :func:`concurrent_factorize`
+* solve: :func:`solve` / :func:`solve_many` / :func:`solve_many_batched`
+  (+ the triangular-sweep halves and GMRF sampling)
+* selected inversion: :func:`selected_inverse` / :func:`selinv_batched`
+  / :func:`marginal_variances`
+* serving: :class:`RungServer` (+ :class:`SimClock` for deterministic
+  replay)
+
+Per-call ``impl=`` / ``policy=`` / ``regularize=`` / ``sweep=`` /
+``method=`` kwargs on the entry points are deprecated shims; pass
+``options=SolverOptions(...)``.
+"""
+from __future__ import annotations
+
+from repro.core.cholesky import (CholeskyFactor, factorize_window,
+                                 factorize_window_batched)
+from repro.core.concurrent import (concurrent_factorize, concurrent_logdet,
+                                   concurrent_quadratic_forms,
+                                   concurrent_selinv, concurrent_solve,
+                                   stack_ctsf)
+from repro.core.ctsf import BandedCTSF
+from repro.core.gridpolicy import GridBucketPolicy
+from repro.core.options import SolverOptions
+from repro.core.ordering import (PartitionPlan, adaptive_nd_ordering,
+                                 detect_partition_plan,
+                                 partition_plan_from_ordering)
+from repro.core.robustness import (STATUS_FAILED, STATUS_OK, STATUS_RECOVERED,
+                                   STATUS_SHED, FactorInfo, RegularizePolicy)
+from repro.core.selinv import (SelectedInverse, selected_inverse,
+                               selinv_batched)
+from repro.core.solve import (backward_solve, backward_solve_many,
+                              forward_solve, forward_solve_many, logdet,
+                              marginal_variances, sample_gmrf,
+                              sample_gmrf_many, solve, solve_many,
+                              solve_many_batched)
+from repro.core.structure import (ArrowheadStructure, TileGrid,
+                                  measure_arrowhead)
+from repro.launch.rung_server import RungServer, SimClock
+
+__all__ = [
+    # matrix + grid types
+    "ArrowheadStructure",
+    "BandedCTSF",
+    "TileGrid",
+    "measure_arrowhead",
+    # the one knob object + its ingredients
+    "SolverOptions",
+    "GridBucketPolicy",
+    "PartitionPlan",
+    "RegularizePolicy",
+    # orderings / partition detection
+    "adaptive_nd_ordering",
+    "detect_partition_plan",
+    "partition_plan_from_ordering",
+    # factorization
+    "CholeskyFactor",
+    "FactorInfo",
+    "factorize_window",
+    "factorize_window_batched",
+    "concurrent_factorize",
+    "stack_ctsf",
+    # solves
+    "solve",
+    "solve_many",
+    "solve_many_batched",
+    "forward_solve",
+    "forward_solve_many",
+    "backward_solve",
+    "backward_solve_many",
+    "concurrent_solve",
+    "concurrent_quadratic_forms",
+    "logdet",
+    "concurrent_logdet",
+    "sample_gmrf",
+    "sample_gmrf_many",
+    # selected inversion
+    "SelectedInverse",
+    "selected_inverse",
+    "selinv_batched",
+    "concurrent_selinv",
+    "marginal_variances",
+    # per-element status codes on FactorInfo
+    "STATUS_OK",
+    "STATUS_RECOVERED",
+    "STATUS_FAILED",
+    "STATUS_SHED",
+    # serving
+    "RungServer",
+    "SimClock",
+]

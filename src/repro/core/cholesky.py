@@ -41,7 +41,8 @@ from .robustness import (FactorInfo, RegularizePolicy, fold_corner_status,
                          run_ladder)
 from .structure import TileGrid
 from .symbolic import Task, TaskType
-from .tree_reduction import chunked_tree_sum, should_use_tree
+from .options import SolverOptions, UNSET, resolve_options
+from .tree_reduction import chunked_tree_sum, should_use_tree, tree_combine
 
 __all__ = ["factorize_tasklist", "factorize_window",
            "factorize_window_batched", "CholeskyFactor"]
@@ -306,13 +307,16 @@ def _corner_schur(R_L: jnp.ndarray, tree_chunks: int) -> jnp.ndarray:
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("grid", "impl", "tree_chunks", "sweep"))
+                   static_argnames=("grid", "impl", "tree_chunks", "sweep",
+                                    "plan"))
 def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto",
-                           start_tile=0):
+                           start_tile=0, plan=None):
     """Window factorization with sweep-mode dispatch:
 
-    * ``"auto"`` (default) — ``"fused"`` on the Pallas backend (native TPU
-      or an explicit ``impl="pallas"``), else ``"ring"``: every caller
+    * ``"auto"`` (default) — ``"partitioned"`` when ``plan`` (a
+      :class:`~repro.core.ordering.PartitionPlan`) has more than one
+      partition; else ``"fused"`` on the Pallas backend (native TPU or an
+      explicit ``impl="pallas"``), else ``"ring"``: every caller
       (:func:`factorize_window`, :func:`factorize_window_batched`,
       ``concurrent_factorize``) rides the fused kernel wherever Pallas is
       the kernel backend.
@@ -321,6 +325,13 @@ def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto",
     * ``"ring"`` — force the ring-buffer ``lax.scan`` reference.
     * ``"window"`` — the legacy dynamic-slice window sweep
       (``kernels.band_update`` per panel), kept for comparison.
+    * ``"partitioned"`` — the multi-partition fused sweep
+      (``kernels.ops.band_cholesky_partitioned_sweep``): one 2D-grid
+      launch over all of ``plan``'s independent band partitions, their
+      per-partition corner-Schur leaves tree-combined before the shared
+      corner factorization.  Requires a ``plan``; a trivial
+      single-partition plan stays on the fused/ring path so its factor is
+      bit-identical to a plan-less call.
 
     The fused/ring paths read the corner Schur complement from the sweep's
     per-chunk partial sums (accumulated on the fly in the fused kernel)
@@ -338,9 +349,9 @@ def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto",
     carried in-graph with no host sync; the jitter ladder
     (``core/robustness.py``) is the consumer."""
     nat = grid.n_arrow_tiles
-    if sweep not in ("auto", "fused", "ring", "window"):
+    if sweep not in ("auto", "fused", "ring", "window", "partitioned"):
         raise ValueError(f"unknown sweep {sweep!r} (want 'auto', 'fused', "
-                         "'ring' or 'window')")
+                         "'ring', 'window' or 'partitioned')")
     # "ring" is the jnp scan and "fused" the Pallas kernel by definition —
     # an explicit impl pointing the other way would silently run a
     # different backend than asked, so refuse the contradiction.
@@ -350,9 +361,36 @@ def _factorize_window_impl(Dr, R, C, grid, impl, tree_chunks, sweep="auto",
             f"sweep={sweep!r} contradicts impl={impl!r}: the ring sweep is "
             "the jnp reference scan and the fused sweep is the Pallas "
             "kernel; use sweep='auto' to dispatch by impl")
+    if sweep == "partitioned" and plan is None:
+        raise ValueError(
+            "sweep='partitioned' needs a partition plan: pass "
+            "options=SolverOptions(partition_plan=...) (see "
+            "core.ordering.detect_partition_plan)")
+    if plan is not None and plan.n_tiles != grid.n_diag_tiles:
+        raise ValueError(
+            f"partition plan covers {plan.n_tiles} diagonal tiles but the "
+            f"grid has {grid.n_diag_tiles}; rebuild the plan for this grid "
+            "(PartitionPlan.shifted embeds a plan into a canonical grid)")
     mode = sweep
     if mode == "auto":
-        mode = "fused" if (impl or ops.default_impl()) == "pallas" else "ring"
+        if plan is not None and plan.n_partitions > 1:
+            mode = "partitioned"
+        else:
+            mode = "fused" if (impl or ops.default_impl()) == "pallas" \
+                else "ring"
+    if mode == "partitioned":
+        panels, R_out, schur, status = ops.band_cholesky_partitioned_sweep(
+            band_row_to_col(Dr), R, plan.boundaries, start_tile=start_tile,
+            impl=impl)
+        Dr_out = band_col_to_row(panels)
+        if nat:
+            # one Schur leaf per partition: combine them with the Alg. 3
+            # binary tree before the shared separator/corner factorization
+            C_out = _corner_dense_cholesky(C - tree_combine(schur), impl)
+        else:
+            C_out = C
+        return Dr_out, R_out, C_out, fold_corner_status(
+            status, C_out, grid.n_diag_tiles, nat)
     if mode == "window":
         Dr_out, R_out = _band_arrow_sweep(Dr, R, grid, impl, start_tile)
         # legacy sweep predates the in-sweep status carry: fold the same
@@ -395,16 +433,26 @@ def _embed_matrix(m: BandedCTSF, policy):
     return embed_ctsf(m, cgrid), m.grid, start
 
 
-def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
+def factorize_window(m: BandedCTSF, impl=UNSET,
                      tree_chunks: int = 8,
-                     sweep: str = "auto", policy=None,
-                     regularize=None) -> CholeskyFactor:
+                     sweep=UNSET, policy=UNSET,
+                     regularize=UNSET,
+                     options: Optional[SolverOptions] = None) -> CholeskyFactor:
     """Banded-arrowhead factorization (window backend).
 
-    ``impl="pallas"`` (or running natively on TPU) factorizes the whole
-    band + arrow block in **one fused Pallas launch**
-    (``kernels.ops.band_cholesky_sweep``); ``sweep`` overrides the
-    dispatch (see :func:`_factorize_window_impl`).
+    ``options`` (a :class:`~repro.core.options.SolverOptions`) carries the
+    solver knobs — backend, sweep mode, bucketing policy, regularization
+    and the partition plan; the bare ``impl=``/``sweep=``/``policy=``/
+    ``regularize=`` kwargs are deprecated aliases for the matching fields
+    (legacy wins when both are given, with a ``DeprecationWarning``).
+
+    With ``options.impl="pallas"`` (or running natively on TPU) the whole
+    band + arrow block factorizes in **one fused Pallas launch**
+    (``kernels.ops.band_cholesky_sweep``); ``options.sweep`` overrides the
+    dispatch (see :func:`_factorize_window_impl`).  An
+    ``options.partition_plan`` with more than one partition upgrades the
+    launch to the 2D partition-parallel sweep — critical path
+    O(max partition tiles) instead of O(ndt).
 
     With a :class:`~repro.core.gridpolicy.GridBucketPolicy` the matrix is
     first embedded into its canonical grid (identity-diagonal padding) and
@@ -421,18 +469,29 @@ def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
     :class:`~repro.core.robustness.FactorInfo` to the returned factor
     instead of ever raising; an SPD input factorizes on the first attempt
     and its factor is bit-identical to the unregularized call."""
+    opts = resolve_options(options, _where="factorize_window", impl=impl,
+                           sweep=sweep, policy=policy, regularize=regularize)
     with telemetry.span("factorize.window",
                         grid=telemetry.rung_tag(m.grid)) as sp:
-        pol = RegularizePolicy.resolve(regularize)
+        pol = RegularizePolicy.resolve(opts.regularize)
+        plan = opts.partition_plan
         source = None
-        if policy is not None:
-            m, source, start = _embed_matrix(m, policy)
+        if opts.policy is not None:
+            src_ndt = m.grid.n_diag_tiles
+            m, source, start = _embed_matrix(m, opts.policy)
             sp.tag(rung=telemetry.rung_tag(m.grid))
+            if plan is not None:
+                # the canonical-grid identity prefix joins partition 0;
+                # the pad depth is a Python int, so each (rung, pad) pair
+                # is one compilation — same as the plan-less policy path
+                plan = plan.shifted(m.grid.n_diag_tiles - src_ndt)
             call = lambda dr, r, c: _factorize_window_impl(
-                dr, r, c, m.grid, impl, tree_chunks, sweep, start)
+                dr, r, c, m.grid, opts.impl, tree_chunks, opts.sweep, start,
+                plan=plan)
         else:
             call = lambda dr, r, c: _factorize_window_impl(
-                dr, r, c, m.grid, impl, tree_chunks, sweep)
+                dr, r, c, m.grid, opts.impl, tree_chunks, opts.sweep,
+                plan=plan)
         if pol is None:
             Dr, R, C, _status = call(m.Dr, m.R, m.C)
             info = None
@@ -452,39 +511,53 @@ def factorize_window(m: BandedCTSF, impl: Optional[str] = None,
 _BATCHED_WINDOW_CACHE = LRUCache(maxsize=64, name="batched_window")
 
 
-def _batched_window_fn(grid, impl, tree_chunks, sweep="auto",
+def _batched_window_fn(grid, opts: SolverOptions, tree_chunks,
                        use_start=False):
-    """One vmapped+jitted window factorization per (grid, impl, chunks,
-    sweep) — cached on the Python side so repeated θ-sweeps reuse the same
-    traced function object (and therefore XLA's compile cache).
+    """One vmapped+jitted window factorization per (grid,
+    ``opts.compile_key()``, chunks) — cached on the Python side so
+    repeated θ-sweeps reuse the same traced function object (and
+    therefore XLA's compile cache).  Keying on the options object's
+    compile-relevant subset means option-equal calls share an entry no
+    matter which construction path (legacy kwargs, facade, replace())
+    produced them.
 
     ``use_start=True`` (the canonical-grid path) adds a *traced*
     ``start_tile`` argument broadcast across the batch, so every source
     grid embedding into ``grid`` — whatever its pad depth — shares this
     one cache entry; the plain path keeps its static-zero trace."""
-    key = (grid, impl, tree_chunks, sweep, use_start)
+    key = (grid, opts.compile_key(), tree_chunks, use_start)
+    impl, sweep, plan = opts.impl, opts.sweep, opts.partition_plan
 
     def build():
         if use_start:
             return jax.jit(jax.vmap(
                 lambda dr, r, c, s: _factorize_window_impl(
-                    dr, r, c, grid, impl, tree_chunks, sweep, s),
+                    dr, r, c, grid, impl, tree_chunks, sweep, s, plan=plan),
                 in_axes=(0, 0, 0, None)))
         return jax.jit(jax.vmap(
             lambda dr, r, c: _factorize_window_impl(dr, r, c, grid, impl,
-                                                    tree_chunks, sweep)))
+                                                    tree_chunks, sweep,
+                                                    plan=plan)))
 
     return _BATCHED_WINDOW_CACHE.get_or_create(key, build)
 
 
-def factorize_window_batched(batch, impl: Optional[str] = None,
+def factorize_window_batched(batch, impl=UNSET,
                              tree_chunks: int = 8,
                              bucket: bool = True,
-                             sweep: str = "auto",
-                             policy=None,
-                             regularize=None,
-                             start_tile=None) -> CholeskyFactor:
+                             sweep=UNSET,
+                             policy=UNSET,
+                             regularize=UNSET,
+                             start_tile=None,
+                             options: Optional[SolverOptions] = None
+                             ) -> CholeskyFactor:
     """Factorize a batch of same-grid matrices in one vmapped dispatch.
+
+    ``options`` (a :class:`~repro.core.options.SolverOptions`) is the
+    preferred way to pass the solver knobs; the bare ``impl=``/``sweep=``/
+    ``policy=``/``regularize=`` kwargs are deprecated aliases (legacy
+    wins, with a ``DeprecationWarning``).  ``tree_chunks``, ``bucket`` and
+    ``start_tile`` are per-call arguments, not options.
 
     ``batch`` is either a list of :class:`BandedCTSF` or one whose arrays
     carry a leading batch axis (cf. ``concurrent.stack_ctsf``).  This is the
@@ -527,10 +600,13 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
     computes its own start); the returned factor keeps ``source_grid``
     None — restriction stays with the caller who owns the embedding.
     """
-    if start_tile is not None and policy is not None:
+    opts = resolve_options(options, _where="factorize_window_batched",
+                           impl=impl, sweep=sweep, policy=policy,
+                           regularize=regularize)
+    if start_tile is not None and opts.policy is not None:
         raise ValueError(
-            "start_tile= is for pre-embedded batches and policy= embeds "
-            "itself; pass one or the other")
+            "start_tile= is for pre-embedded batches and the bucketing "
+            "policy embeds itself; pass one or the other")
     if isinstance(batch, (list, tuple)):
         grid = batch[0].grid
         for m in batch:
@@ -552,22 +628,24 @@ def factorize_window_batched(batch, impl: Optional[str] = None,
     with telemetry.span("factorize.window_batched", b=Dr.shape[0],
                         grid=telemetry.rung_tag(grid)) as sp:
         source = None
-        if policy is not None:
+        if opts.policy is not None:
+            src_ndt = grid.n_diag_tiles
             emb, source, start = _embed_matrix(BandedCTSF(grid, Dr, R, C),
-                                               policy)
+                                               opts.policy)
             Dr, R, C, grid = emb.Dr, emb.R, emb.C, emb.grid
             sp.tag(rung=telemetry.rung_tag(grid))
-            fn = _batched_window_fn(grid, impl, tree_chunks, sweep,
-                                    use_start=True)
+            if opts.partition_plan is not None:
+                opts = opts.replace(partition_plan=opts.partition_plan
+                                    .shifted(grid.n_diag_tiles - src_ndt))
+            fn = _batched_window_fn(grid, opts, tree_chunks, use_start=True)
             call = lambda dr, r, c: fn(dr, r, c, start)
         elif start_tile is not None:
             start = jnp.asarray(start_tile, jnp.int32)
-            fn = _batched_window_fn(grid, impl, tree_chunks, sweep,
-                                    use_start=True)
+            fn = _batched_window_fn(grid, opts, tree_chunks, use_start=True)
             call = lambda dr, r, c: fn(dr, r, c, start)
         else:
-            call = _batched_window_fn(grid, impl, tree_chunks, sweep)
-        pol = RegularizePolicy.resolve(regularize)
+            call = _batched_window_fn(grid, opts, tree_chunks)
+        pol = RegularizePolicy.resolve(opts.regularize)
         if pol is None:
             dr, r, c, _status = bucketed_batched_call(call, (Dr, R, C),
                                                       bucket)

@@ -19,6 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .cholesky import (CholeskyFactor, _factorize_window_impl,
                        factorize_window_batched)
 from .ctsf import BandedCTSF
+from .options import UNSET, resolve_options
 from .selinv import SelectedInverse, _selinv_impl, selinv_batched
 from .structure import TileGrid
 
@@ -65,9 +66,10 @@ def stack_ctsf(mats: list, policy=None) -> BandedCTSF:
 
 
 def concurrent_factorize(batch: BandedCTSF, mesh: Optional[Mesh] = None,
-                         axis: str = "data", impl: Optional[str] = None,
+                         axis: str = "data", impl=UNSET,
                          tree_chunks: int = 8,
-                         policy=None, regularize=None) -> CholeskyFactor:
+                         policy=UNSET, regularize=UNSET,
+                         options=None) -> CholeskyFactor:
     """Factorize a batch of matrices concurrently.
 
     With ``mesh``, the batch axis is sharded over ``axis`` — one factorization
@@ -89,24 +91,28 @@ def concurrent_factorize(batch: BandedCTSF, mesh: Optional[Mesh] = None,
     ``factor.info`` flags each element OK / RECOVERED / FAILED instead of
     one bad θ-candidate raising mid-sweep.
     """
+    opts = resolve_options(options, _where="concurrent_factorize",
+                           impl=impl, policy=policy, regularize=regularize)
     if mesh is None:
-        return factorize_window_batched(batch, impl=impl,
-                                        tree_chunks=tree_chunks,
-                                        bucket=False, policy=policy,
-                                        regularize=regularize)
+        return factorize_window_batched(batch, tree_chunks=tree_chunks,
+                                        bucket=False, options=opts)
     from .robustness import RegularizePolicy, run_ladder
-    pol = RegularizePolicy.resolve(regularize)
+    pol = RegularizePolicy.resolve(opts.regularize)
+    impl, sweep, plan = opts.impl, opts.sweep, opts.partition_plan
     source = None
-    if policy is not None:
+    if opts.policy is not None:
         from .cholesky import _embed_matrix
-        batch, source, start = _embed_matrix(batch, policy)
+        src_ndt = batch.grid.n_diag_tiles
+        batch, source, start = _embed_matrix(batch, opts.policy)
+        if plan is not None:
+            plan = plan.shifted(batch.grid.n_diag_tiles - src_ndt)
         fn = jax.vmap(
             lambda dr, r, c: _factorize_window_impl(
-                dr, r, c, batch.grid, impl, tree_chunks, "auto", start))
+                dr, r, c, batch.grid, impl, tree_chunks, sweep, start, plan))
     else:
         fn = jax.vmap(
-            lambda dr, r, c: _factorize_window_impl(dr, r, c, batch.grid,
-                                                    impl, tree_chunks))
+            lambda dr, r, c: _factorize_window_impl(
+                dr, r, c, batch.grid, impl, tree_chunks, sweep, 0, plan))
     spec = (NamedSharding(mesh, P(axis)),) * 3
     # the (B, 3) status words are tiny — replicate them so the ladder's
     # host readback never gathers factor data
@@ -123,7 +129,7 @@ def concurrent_factorize(batch: BandedCTSF, mesh: Optional[Mesh] = None,
 
 
 def concurrent_solve(factor: CholeskyFactor, B: jnp.ndarray,
-                     impl: Optional[str] = None, policy=None) -> jnp.ndarray:
+                     impl=UNSET, policy=UNSET, options=None) -> jnp.ndarray:
     """Solve ``A_i X_i = B`` for every factor in the batch, one vmapped
     multi-RHS sweep.
 
@@ -150,8 +156,11 @@ def concurrent_solve(factor: CholeskyFactor, B: jnp.ndarray,
     """
     from .solve import _embedded_panels, _merge_panels, _solve_panels, \
         _split_rhs
+    opts = resolve_options(options, _where="concurrent_solve",
+                           impl=impl, policy=policy)
+    impl = opts.impl
     panel = B[:, None] if B.ndim == 1 else B
-    ctsf, _, g, panel, start, restrict = _embedded_panels(factor, policy,
+    ctsf, _, g, panel, start, restrict = _embedded_panels(factor, opts.policy,
                                                           panel)
     bd, ba = _split_rhs(g, panel)
     xd, xa = jax.vmap(
@@ -163,8 +172,8 @@ def concurrent_solve(factor: CholeskyFactor, B: jnp.ndarray,
 
 def concurrent_selinv(factor: CholeskyFactor, mesh: Optional[Mesh] = None,
                       axis: str = "data",
-                      impl: Optional[str] = None,
-                      policy=None) -> SelectedInverse:
+                      impl=UNSET, policy=UNSET,
+                      options=None) -> SelectedInverse:
     """Selected inversion of a batch of factors concurrently.
 
     With ``mesh``, the batch axis is sharded over ``axis`` — one backward
@@ -177,10 +186,13 @@ def concurrent_selinv(factor: CholeskyFactor, mesh: Optional[Mesh] = None,
     run the sweep on the canonical grid with the identity prefix skipped
     and return the selected inverse restricted to the source grid.
     """
+    opts = resolve_options(options, _where="concurrent_selinv",
+                           impl=impl, policy=policy)
     if mesh is None:
-        return selinv_batched(factor, impl=impl, bucket=False, policy=policy)
+        return selinv_batched(factor, bucket=False, options=opts)
     from .solve import _resolve_embedding
-    ctsf, src, pad = _resolve_embedding(factor, policy)
+    impl = opts.impl
+    ctsf, src, pad = _resolve_embedding(factor, opts.policy)
     g = ctsf.grid
     if src is not None:
         start = jnp.asarray(pad, jnp.int32)
@@ -199,8 +211,8 @@ def concurrent_selinv(factor: CholeskyFactor, mesh: Optional[Mesh] = None,
 
 
 def concurrent_quadratic_forms(factor: CholeskyFactor, y: jnp.ndarray,
-                               impl: Optional[str] = None,
-                               policy=None) -> jnp.ndarray:
+                               impl=UNSET, policy=UNSET,
+                               options=None) -> jnp.ndarray:
     """``y^T A_i^{-1} y`` for each factor in the batch.
 
     Uses ``‖L_i^{-1} y‖²`` — only the *forward* sweep, vmapped over the
@@ -212,7 +224,10 @@ def concurrent_quadratic_forms(factor: CholeskyFactor, y: jnp.ndarray,
     embedded sweep are zero, so the squared norm needs no restriction.
     """
     from .solve import _embedded_panels, _forward_impl, _split_rhs
-    ctsf, _, g, panel, start, _ = _embedded_panels(factor, policy,
+    opts = resolve_options(options, _where="concurrent_quadratic_forms",
+                           impl=impl, policy=policy)
+    impl = opts.impl
+    ctsf, _, g, panel, start, _ = _embedded_panels(factor, opts.policy,
                                                    y.reshape(-1, 1))
     bd, ba = _split_rhs(g, panel)
     if start is not None:

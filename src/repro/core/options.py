@@ -1,0 +1,140 @@
+"""Unified solver options for every serving entry point.
+
+Nine PRs of organic growth left the entry points threading the same small
+set of knobs — ``policy=``, ``regularize=``, ``impl=``, ``sweep=``, and
+``marginal_variances``'s oddly-named ``method=`` — through a dozen
+signatures, and every new feature (the partitioned sweep's
+``partition_plan`` being the motivating case) had to widen all of them
+again.  :class:`SolverOptions` consolidates that surface: one frozen,
+hashable dataclass accepted as a single ``options=`` kwarg by
+``factorize_window(_batched)``, the ``solve_many`` family,
+``selected_inverse``/``selinv_batched``, the ``concurrent_*`` wrappers
+and the rung server.
+
+Legacy per-kwarg signatures keep working through :func:`resolve_options`,
+which folds them into an options object while emitting one
+``DeprecationWarning`` per legacy kwarg actually passed — internal code
+is fully migrated (CI runs the suite under ``-W
+error::DeprecationWarning`` excluding the shim tests to prove it).
+
+Hashability is load-bearing, not cosmetic: the batching compile caches
+key on :meth:`SolverOptions.compile_key` — the compile-relevant subset of
+the options — so option-equal calls share traced callables no matter
+which construction path produced the object.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Union
+
+from .gridpolicy import GridBucketPolicy
+from .ordering import PartitionPlan
+from .robustness import RegularizePolicy
+
+__all__ = ["SolverOptions", "resolve_options", "UNSET"]
+
+
+class _Unset:
+    """Sentinel distinguishing "kwarg not passed" from an explicit None
+    (``impl=None`` is a meaningful value: the per-backend default)."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self):
+        return "<UNSET>"
+
+    def __bool__(self):
+        return False
+
+
+UNSET = _Unset()
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverOptions:
+    """How to factorize/solve — everything except the data itself.
+
+    Fields:
+      policy: a :class:`~repro.core.gridpolicy.GridBucketPolicy`
+        canonical-grid bucketing policy, or None for exact-grid compiles.
+      regularize: numerical fault tolerance — ``None``/``False`` off,
+        ``True`` the default :class:`~repro.core.robustness.RegularizePolicy`,
+        or an explicit policy (the escalating-jitter retry ladder).
+      impl: kernel backend — ``"pallas"``, ``"ref"``, ``"unrolled"`` or
+        None for the per-backend default (pallas on TPU, ref elsewhere).
+      sweep: factorization sweep mode — ``"auto"`` (default), ``"fused"``,
+        ``"ring"``, ``"window"`` or ``"partitioned"`` (see
+        ``core.cholesky._factorize_window_impl``).
+      partition_plan: a :class:`~repro.core.ordering.PartitionPlan` of
+        independent band partitions; with >1 partition, ``sweep="auto"``
+        dispatches the multi-partition fused sweep (2D Pallas grid, one
+        parallel axis over partitions).
+      method: marginal-variance path — None (= ``"selinv"``) or
+        ``"panels"``; folds ``marginal_variances``'s old ``method=``
+        kwarg into the shared options surface.
+
+    Frozen and hashable (all fields are immutables or frozen dataclasses),
+    so an options object can key compile caches directly.  Per-call data —
+    RHS panels, ``start_tile`` prefixes, batch bucketing — stays out by
+    design: options describe *how*, arguments describe *what*.
+    """
+
+    policy: Optional[GridBucketPolicy] = None
+    regularize: Union[None, bool, RegularizePolicy] = None
+    impl: Optional[str] = None
+    sweep: str = "auto"
+    partition_plan: Optional[PartitionPlan] = None
+    method: Optional[str] = None
+
+    def compile_key(self) -> "SolverOptions":
+        """The compile-relevant subset, as a (hashable) options object.
+
+        ``policy``, ``regularize`` and ``method`` never change what a
+        traced sweep callable computes — the policy picks *which* grid is
+        compiled (already part of every cache key), the ladder re-invokes
+        the same callable, and ``method`` selects between entry points —
+        so they are cleared here and option-equal calls share compile-
+        cache entries across those axes."""
+        return dataclasses.replace(self, policy=None, regularize=None,
+                                   method=None)
+
+    def replace(self, **changes) -> "SolverOptions":
+        """`dataclasses.replace` as a method, for call-site brevity."""
+        return dataclasses.replace(self, **changes)
+
+
+def resolve_options(options: Optional[SolverOptions] = None, *,
+                    _where: str = "this entry point",
+                    _stacklevel: int = 3,
+                    **legacy) -> SolverOptions:
+    """Merge legacy per-kwarg arguments into a :class:`SolverOptions`.
+
+    Every entry point calls this once: ``legacy`` maps field names to the
+    caller's legacy kwarg values, with :data:`UNSET` marking "not
+    passed".  Each legacy kwarg actually passed emits one
+    ``DeprecationWarning`` naming the replacement, then overrides the
+    corresponding field of ``options`` (legacy wins, so half-migrated
+    call sites behave exactly as they read).  With no legacy kwargs the
+    options object passes through untouched — the zero-warning path the
+    ``-W error::DeprecationWarning`` CI leg locks in.
+    """
+    base = options if options is not None else SolverOptions()
+    if not isinstance(base, SolverOptions):
+        raise TypeError(
+            f"options= must be a SolverOptions, got {type(base).__name__}")
+    updates = {}
+    for name, value in legacy.items():
+        if value is UNSET:
+            continue
+        warnings.warn(
+            f"{_where}: the `{name}=` kwarg is deprecated; pass "
+            f"options=SolverOptions({name}=...) instead",
+            DeprecationWarning, stacklevel=_stacklevel)
+        updates[name] = value
+    return dataclasses.replace(base, **updates) if updates else base

@@ -17,7 +17,7 @@ improvement, the method is not used."
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 import scipy.sparse as sp
@@ -27,6 +27,7 @@ from .structure import ArrowheadStructure, TileGrid, measure_arrowhead, tile_pat
 
 __all__ = [
     "OrderingResult",
+    "PartitionPlan",
     "rcm_ordering",
     "amd_ordering",
     "adaptive_nd_ordering",
@@ -34,6 +35,8 @@ __all__ = [
     "best_ordering",
     "apply_permutation",
     "tile_fill_in",
+    "detect_partition_plan",
+    "partition_plan_from_ordering",
 ]
 
 
@@ -51,6 +54,88 @@ class OrderingResult:
         if self.fill_before == 0:
             return 0.0
         return 1.0 - self.fill_after / max(1, self.fill_before)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """Tile-level partition layout of a block-separable band.
+
+    Under the adaptive-ND ordering the band's independent partitions are
+    contiguous runs of diagonal tiles with *no* band tile crossing a
+    partition boundary (the separator's couplings moved to the trailing
+    arrow/corner block).  The plan records those runs:
+
+      boundaries: strictly increasing tile indices ``(0, c_1, ..., ndt)``
+        — partition ``p`` owns diagonal tiles ``[boundaries[p],
+        boundaries[p+1])``.
+      sep_tiles: how many trailing arrow tiles are the moved separator
+        (informational — the separator factorizes with the corner either
+        way; benches fold it into the critical-path accounting).
+
+    Frozen and hashable: a plan is a *static* compile-time argument — the
+    partitioned sweep's grid shape is ``(n_partitions, max_tiles)`` — and
+    rides :class:`~repro.core.options.SolverOptions` into the batching
+    compile-cache keys.
+    """
+
+    boundaries: Tuple[int, ...]
+    sep_tiles: int = 0
+
+    def __post_init__(self):
+        b = tuple(int(x) for x in self.boundaries)
+        object.__setattr__(self, "boundaries", b)
+        if len(b) < 2:
+            raise ValueError(
+                f"PartitionPlan needs >= 2 boundaries (got {b!r})")
+        if b[0] != 0:
+            raise ValueError(f"boundaries must start at 0, got {b!r}")
+        if any(b[i + 1] <= b[i] for i in range(len(b) - 1)):
+            raise ValueError(
+                f"boundaries must be strictly increasing, got {b!r}")
+        if self.sep_tiles < 0:
+            raise ValueError(f"sep_tiles must be >= 0, got {self.sep_tiles}")
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self.boundaries) - 1
+
+    @property
+    def n_tiles(self) -> int:
+        """Total diagonal tiles covered (= the grid's ``n_diag_tiles``)."""
+        return self.boundaries[-1]
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(self.boundaries[i + 1] - self.boundaries[i]
+                     for i in range(self.n_partitions))
+
+    @property
+    def max_tiles(self) -> int:
+        """The partitioned sweep's sequential-grid depth: the critical
+        path drops from O(ndt) to O(max partition tiles)."""
+        return max(self.sizes)
+
+    @classmethod
+    def trivial(cls, n_tiles: int) -> "PartitionPlan":
+        """The single-partition plan covering ``n_tiles`` diagonal tiles —
+        semantically 'no partitioning'; dispatch keeps the plain fused
+        sweep for it, bit-for-bit."""
+        return cls(boundaries=(0, max(int(n_tiles), 1)))
+
+    def shifted(self, pad: int) -> "PartitionPlan":
+        """The plan after a canonical-grid embedding prepends ``pad``
+        identity tiles (``core/gridpolicy.py``): the identity prefix is
+        decoupled from everything, so it joins partition 0.  ``pad`` is
+        static — one compilation per (canonical rung, pad depth) when a
+        plan rides the policy path, vs one per rung without a plan."""
+        pad = int(pad)
+        if pad < 0:
+            raise ValueError(f"pad must be >= 0, got {pad}")
+        if pad == 0:
+            return self
+        return PartitionPlan(
+            boundaries=(0,) + tuple(b + pad for b in self.boundaries[1:]),
+            sep_tiles=self.sep_tiles)
 
 
 # ---------------------------------------------------------------------------
@@ -286,3 +371,84 @@ def best_ordering(pattern: sp.spmatrix, structure: ArrowheadStructure, t: int,
             best_name, best_perm, best_fill = name, perm, fill
     return OrderingResult(best_name, best_perm, base_fill, best_fill,
                           accepted=best_name != "identity")
+
+
+# ---------------------------------------------------------------------------
+# Partition-plan extraction (the partitioned fused sweep's static input)
+# ---------------------------------------------------------------------------
+
+def detect_partition_plan(pattern: sp.spmatrix, structure: ArrowheadStructure,
+                          t: int, min_tiles: int = 1,
+                          sep_tiles: Optional[int] = None) -> PartitionPlan:
+    """Find the independent band partitions of an (already ordered) matrix.
+
+    A cut between diagonal tiles ``c-1`` and ``c`` is valid iff every band
+    tile crossing it is structurally zero — then columns left and right of
+    the cut never exchange data through the band (the arrow/corner, where
+    an adaptive-ND separator lives, couples them only *after* the band
+    sweep).  Scans the tile pattern for all valid cuts, keeps those
+    leaving at least ``min_tiles`` tiles per partition, and returns the
+    resulting :class:`PartitionPlan` (trivial when no cut exists — e.g. a
+    plain arrowhead matrix, which dispatch then factorizes exactly as
+    before).
+
+    ``sep_tiles`` defaults to the structure's arrow tile count — under the
+    paper's adaptive ND the moved separator *is* the trailing block.
+    """
+    grid = TileGrid(structure, t)
+    tiles = tile_pattern_from_coo(pattern, grid)
+    ndt, bt = grid.n_diag_tiles, grid.band_tiles
+    if sep_tiles is None:
+        sep_tiles = grid.n_arrow_tiles
+    if ndt < 2:
+        return PartitionPlan.trivial(ndt)
+    band = np.asarray(tiles)[:ndt, :ndt]
+    cuts = [0]
+    for c in range(1, ndt):
+        lo = max(0, c - bt)
+        if not band[c:min(ndt, c + bt), lo:c].any() and c - cuts[-1] >= min_tiles:
+            cuts.append(c)
+    if ndt - cuts[-1] < min_tiles and len(cuts) > 1:
+        cuts.pop()
+    return PartitionPlan(boundaries=tuple(cuts) + (ndt,),
+                         sep_tiles=int(sep_tiles))
+
+
+def partition_plan_from_ordering(result: OrderingResult,
+                                 structure: ArrowheadStructure,
+                                 t: int) -> PartitionPlan:
+    """Build the tile-level :class:`PartitionPlan` an accepted
+    :func:`adaptive_nd_ordering` result induces.
+
+    The ordering's ``partitions`` array labels each *element* of the new
+    ordering with its partition id (-1 for separator/arrow rows moved to
+    the end).  The partition runs are contiguous by construction; their
+    element boundaries must land on tile boundaries for the kernel-level
+    plan (pick ``n_parts`` so ``nd / n_parts`` is a multiple of ``t``, or
+    fall back to :func:`detect_partition_plan` on the permuted pattern,
+    which simply finds no cut at a misaligned boundary).  The separator +
+    arrow tail maps to ``sep_tiles``.
+    """
+    if result.partitions is None or not result.accepted:
+        grid = TileGrid(structure, t)
+        return PartitionPlan.trivial(grid.n_diag_tiles)
+    parts = np.asarray(result.partitions)
+    body = parts[parts >= 0]
+    n_body = len(body)
+    if n_body % t:
+        raise ValueError(
+            f"partition body size {n_body} is not tile-aligned (t={t}); "
+            "choose n_parts so partition boundaries land on tile edges, "
+            "or run detect_partition_plan on the permuted pattern")
+    ids, counts = np.unique(body, return_counts=True)
+    order = np.argsort(ids)
+    counts = counts[order]
+    if (counts % t).any():
+        raise ValueError(
+            f"partition sizes {counts.tolist()} are not tile-aligned "
+            f"(t={t}); choose n_parts so each partition is a whole number "
+            "of tiles, or run detect_partition_plan instead")
+    bounds = np.concatenate([[0], np.cumsum(counts // t)])
+    n_tail = structure.n - n_body            # separator + arrow elements
+    return PartitionPlan(boundaries=tuple(int(b) for b in bounds),
+                         sep_tiles=int(np.ceil(n_tail / t)))

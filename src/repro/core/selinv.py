@@ -50,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +62,7 @@ from repro.runtime import telemetry
 from .batching import LRUCache, bucketed_batched_call
 from .cholesky import CholeskyFactor
 from .ctsf import BandedCTSF
+from .options import UNSET, resolve_options
 from .structure import TileGrid
 
 __all__ = ["SelectedInverse", "selected_inverse", "selinv_batched"]
@@ -205,8 +206,9 @@ def _tril_tiles(sc_full: jnp.ndarray, nat: int) -> jnp.ndarray:
 
 
 def selected_inverse(factor: CholeskyFactor,
-                     impl: Optional[str] = None,
-                     policy=None) -> SelectedInverse:
+                     impl=UNSET,
+                     policy=UNSET,
+                     options=None) -> SelectedInverse:
     """Band + arrow block of Σ = A^{-1} from a banded-arrowhead Cholesky
     factor, via the blocked Takahashi recurrence (one backward tile sweep,
     cost independent of how many entries are selected).
@@ -218,8 +220,11 @@ def selected_inverse(factor: CholeskyFactor,
     restricted back to the source grid, so every returned entry is an
     exact entry of the source problem's inverse."""
     from .solve import _resolve_embedding
+    opts = resolve_options(options, _where="selected_inverse",
+                           impl=impl, policy=policy)
+    impl = opts.impl
     with telemetry.span("selinv.selected_inverse") as sp:
-        ctsf, src, pad = _resolve_embedding(factor, policy)
+        ctsf, src, pad = _resolve_embedding(factor, opts.policy)
         sp.tag(grid=telemetry.rung_tag(ctsf.grid))
         if src is not None:
             from .gridpolicy import restrict_selinv
@@ -240,14 +245,15 @@ def selected_inverse(factor: CholeskyFactor,
 _BATCHED_SELINV_CACHE = LRUCache(maxsize=64, name="batched_selinv")
 
 
-def _batched_selinv_fn(grid, impl, use_start=False):
-    """One vmapped+jitted recurrence per (grid, impl) — cached on the Python
-    side so repeated same-structure sweeps reuse the traced function object
-    (and XLA's compile cache), mirroring ``cholesky._batched_window_fn``.
-    ``use_start=True`` adds the traced ``start_tile`` argument of the
-    canonical-grid path (one cache entry per canonical rung, shared by
-    every pad depth)."""
-    key = (grid, impl, use_start)
+def _batched_selinv_fn(grid, opts, use_start=False):
+    """One vmapped+jitted recurrence per (grid, options compile key) —
+    cached on the Python side so repeated same-structure sweeps reuse the
+    traced function object (and XLA's compile cache), mirroring
+    ``cholesky._batched_window_fn``.  ``use_start=True`` adds the traced
+    ``start_tile`` argument of the canonical-grid path (one cache entry per
+    canonical rung, shared by every pad depth)."""
+    key = (grid, opts.compile_key(), use_start)
+    impl = opts.impl
 
     def build():
         if use_start:
@@ -260,8 +266,9 @@ def _batched_selinv_fn(grid, impl, use_start=False):
     return _BATCHED_SELINV_CACHE.get_or_create(key, build)
 
 
-def selinv_batched(factor: CholeskyFactor, impl: Optional[str] = None,
-                   bucket: bool = True, policy=None) -> SelectedInverse:
+def selinv_batched(factor: CholeskyFactor, impl=UNSET,
+                   bucket: bool = True, policy=UNSET,
+                   options=None) -> SelectedInverse:
     """Selected inversion of a batch of same-grid factors (leading batch
     axis on the CTSF arrays, as returned by ``factorize_window_batched``) in
     one vmapped dispatch.
@@ -286,15 +293,17 @@ def selinv_batched(factor: CholeskyFactor, impl: Optional[str] = None,
     rung — and the result is restricted back to the source grid.
     """
     from .solve import _resolve_embedding
+    opts = resolve_options(options, _where="selinv_batched",
+                           impl=impl, policy=policy)
     with telemetry.span("selinv.batched") as sp:
-        ctsf, src, pad = _resolve_embedding(factor, policy)
+        ctsf, src, pad = _resolve_embedding(factor, opts.policy)
         if ctsf.Dr.ndim != 5:
             raise ValueError(f"selinv_batched needs a leading batch axis, "
                              f"got Dr.ndim={ctsf.Dr.ndim}")
         sp.tag(b=ctsf.Dr.shape[0], grid=telemetry.rung_tag(ctsf.grid))
         if src is not None:
             from .gridpolicy import restrict_selinv
-            fn = _batched_selinv_fn(ctsf.grid, impl, use_start=True)
+            fn = _batched_selinv_fn(ctsf.grid, opts, use_start=True)
             start = jnp.asarray(pad, jnp.int32)
             call = lambda dr, r, c: fn(dr, r, c, start)
             sd, sr, sc = bucketed_batched_call(
@@ -302,6 +311,6 @@ def selinv_batched(factor: CholeskyFactor, impl: Optional[str] = None,
             return restrict_selinv(SelectedInverse(ctsf.grid, sd, sr, sc),
                                    src)
         sd, sr, sc = bucketed_batched_call(
-            _batched_selinv_fn(ctsf.grid, impl), (ctsf.Dr, ctsf.R, ctsf.C),
+            _batched_selinv_fn(ctsf.grid, opts), (ctsf.Dr, ctsf.R, ctsf.C),
             bucket)
         return SelectedInverse(ctsf.grid, sd, sr, sc)

@@ -37,6 +37,7 @@ from repro.runtime import telemetry
 from .batching import LRUCache, bucketed_batched_call
 from .cholesky import CholeskyFactor
 from .ctsf import BandedCTSF
+from .options import SolverOptions, UNSET, resolve_options
 
 __all__ = ["forward_solve", "backward_solve", "solve", "logdet",
            "forward_solve_many", "backward_solve_many", "solve_many",
@@ -220,8 +221,9 @@ def _merge_panels(xd: jnp.ndarray, xa: jnp.ndarray) -> jnp.ndarray:
 
 
 def forward_solve_many(factor: CholeskyFactor, B: jnp.ndarray,
-                       impl: Optional[str] = None,
-                       start_tile: int = 0, policy=None) -> jnp.ndarray:
+                       impl=UNSET,
+                       start_tile: int = 0, policy=UNSET,
+                       options: Optional[SolverOptions] = None) -> jnp.ndarray:
     """Solve ``L Y = B`` for a panel of right-hand sides in one blocked sweep.
 
     Args:
@@ -230,10 +232,12 @@ def forward_solve_many(factor: CholeskyFactor, B: jnp.ndarray,
         ``factor.ctsf.grid`` (band rows first, then padding, then arrow
         rows — see ``TileGrid.padded_index``).  Rows in the padding region
         must be zero; they solve against identity diagonal tiles.
-      impl: kernel backend — ``"pallas"`` runs the whole band sweep as one
-        fused kernel (``kernels.ops.band_forward_sweep``), ``"ref"`` the
-        per-tile ``fori_loop`` reference; ``None`` picks per backend
-        (pallas on TPU, ref elsewhere).
+      options: a :class:`~repro.core.options.SolverOptions` carrying the
+        solver knobs.  ``options.impl="pallas"`` runs the whole band sweep
+        as one fused kernel (``kernels.ops.band_forward_sweep``), ``"ref"``
+        the per-tile ``fori_loop`` reference; ``None`` picks per backend
+        (pallas on TPU, ref elsewhere).  The bare ``impl=``/``policy=``
+        kwargs are deprecated aliases.
       start_tile: first band tile holding a nonzero (RHS-sparsity fast
         start).  The caller guarantees all rows above ``start_tile * t``
         are zero; the returned Y is identically zero there.
@@ -252,8 +256,12 @@ def forward_solve_many(factor: CholeskyFactor, B: jnp.ndarray,
     fast start and the restriction are handled here, and ``start_tile``
     keeps its source-grid meaning.
     """
+    opts = resolve_options(options, _where="forward_solve_many", impl=impl,
+                           policy=policy)
+    impl = opts.impl
     with telemetry.span("solve.forward_many", k=B.shape[-1]) as sp:
-        ctsf, src, g, B, start, restrict = _embedded_panels(factor, policy, B)
+        ctsf, src, g, B, start, restrict = _embedded_panels(factor,
+                                                            opts.policy, B)
         sp.tag(grid=telemetry.rung_tag(g))
         bd, ba = _split_rhs(g, B)
         if start is not None:
@@ -276,13 +284,20 @@ def forward_solve_many(factor: CholeskyFactor, B: jnp.ndarray,
 
 
 def backward_solve_many(factor: CholeskyFactor, Y: jnp.ndarray,
-                        impl: Optional[str] = None,
-                        policy=None) -> jnp.ndarray:
+                        impl=UNSET,
+                        policy=UNSET,
+                        options: Optional[SolverOptions] = None
+                        ) -> jnp.ndarray:
     """Solve ``L^T X = Y`` for an (padded_n, k) panel of right-hand sides in
     one blocked sweep.  Embedded factors take/return panels in the source
-    layout (cf. :func:`forward_solve_many`)."""
+    layout (cf. :func:`forward_solve_many`).  ``impl=``/``policy=`` are
+    deprecated aliases for the matching ``options`` fields."""
+    opts = resolve_options(options, _where="backward_solve_many", impl=impl,
+                           policy=policy)
+    impl = opts.impl
     with telemetry.span("solve.backward_many", k=Y.shape[-1]) as sp:
-        ctsf, _, g, Y, start, restrict = _embedded_panels(factor, policy, Y)
+        ctsf, _, g, Y, start, restrict = _embedded_panels(factor,
+                                                          opts.policy, Y)
         sp.tag(grid=telemetry.rung_tag(g))
         yd, ya = _split_rhs(g, Y)
         if start is not None:
@@ -314,7 +329,8 @@ def _refine_panels(fDr, fR, fC, mDr, mR, mC, bd, ba, xd, xa, g, impl, start):
 
 
 def solve_many(factor: CholeskyFactor, B: jnp.ndarray,
-               impl: Optional[str] = None, policy=None) -> jnp.ndarray:
+               impl=UNSET, policy=UNSET,
+               options: Optional[SolverOptions] = None) -> jnp.ndarray:
     """``A X = B`` for a panel of right-hand sides via ``L L^T``.
 
     Equivalent to stacking k :func:`solve` calls but swept once: each band
@@ -347,8 +363,12 @@ def solve_many(factor: CholeskyFactor, B: jnp.ndarray,
     *original* A, correcting most of the O(tau) bias the diagonal
     perturbation introduced; clean factors skip it entirely.
     """
+    opts = resolve_options(options, _where="solve_many", impl=impl,
+                           policy=policy)
+    impl = opts.impl
     with telemetry.span("solve.solve_many", k=B.shape[-1]) as sp:
-        ctsf, _, g, B, start, restrict = _embedded_panels(factor, policy, B)
+        ctsf, _, g, B, start, restrict = _embedded_panels(factor,
+                                                          opts.policy, B)
         sp.tag(grid=telemetry.rung_tag(g))
         bd, ba = _split_rhs(g, B)
         xd, xa = _solve_panels(ctsf.Dr, ctsf.R, ctsf.C, bd, ba, g, impl,
@@ -371,13 +391,15 @@ def solve_many(factor: CholeskyFactor, B: jnp.ndarray,
 _BATCHED_SOLVE_CACHE = LRUCache(maxsize=64, name="batched_solve")
 
 
-def _batched_solve_fn(grid, impl, use_start: bool):
-    """One vmapped+jitted ``A X = B`` panel solve per (grid, impl,
-    has-start) — each batch element solves its *own* RHS panel, unlike
-    ``concurrent_solve`` which shares one B across the batch.
-    ``use_start=True`` adds a traced identity-prefix depth broadcast
-    across the batch (the rung-server canonical-grid path)."""
-    key = (grid, impl, use_start)
+def _batched_solve_fn(grid, opts: SolverOptions, use_start: bool):
+    """One vmapped+jitted ``A X = B`` panel solve per (grid,
+    ``opts.compile_key()``, has-start) — each batch element solves its
+    *own* RHS panel, unlike ``concurrent_solve`` which shares one B
+    across the batch.  ``use_start=True`` adds a traced identity-prefix
+    depth broadcast across the batch (the rung-server canonical-grid
+    path)."""
+    key = (grid, opts.compile_key(), use_start)
+    impl = opts.impl
 
     def build():
         if use_start:
@@ -392,14 +414,15 @@ def _batched_solve_fn(grid, impl, use_start: bool):
     return _BATCHED_SOLVE_CACHE.get_or_create(key, build)
 
 
-def _batched_refine_fn(grid, impl, use_start: bool):
+def _batched_refine_fn(grid, opts: SolverOptions, use_start: bool):
     """Vmapped per-element-masked refinement step for jitter-recovered
     batches: each element refines against its own original matrix, and
     the correction applies only where that element's ``tau > 0``.  Kept a
     *separate* dispatch from :func:`_batched_solve_fn` so clean batches
     never run it — and clean elements inside a recovered batch, whose
     corrections are masked off, stay bit-identical to an all-clean run."""
-    key = (grid, impl, use_start, "refine")
+    key = (grid, opts.compile_key(), use_start, "refine")
+    impl = opts.impl
 
     def build():
         def one(fdr, fr, fc, mdr, mr, mc, bd, ba, xd, xa, tau, s=None):
@@ -417,8 +440,10 @@ def _batched_refine_fn(grid, impl, use_start: bool):
 
 
 def solve_many_batched(factor: CholeskyFactor, B: jnp.ndarray,
-                       impl: Optional[str] = None,
-                       start_tile=None, bucket: bool = True) -> jnp.ndarray:
+                       impl=UNSET,
+                       start_tile=None, bucket: bool = True,
+                       options: Optional[SolverOptions] = None
+                       ) -> jnp.ndarray:
     """``A_i X_i = B_i`` for a batched factor with *per-element* RHS
     panels — the rung-batch execution primitive of
     ``launch/rung_server.py`` (``concurrent_solve`` is the other batched
@@ -447,6 +472,7 @@ def solve_many_batched(factor: CholeskyFactor, B: jnp.ndarray,
     clean siblings of a recovered element return solutions bit-identical
     to an uncontaminated batch.
     """
+    opts = resolve_options(options, _where="solve_many_batched", impl=impl)
     ctsf = factor.ctsf
     g = ctsf.grid
     t, ndt, nat = g.t, g.n_diag_tiles, g.n_arrow_tiles
@@ -464,7 +490,7 @@ def solve_many_batched(factor: CholeskyFactor, B: jnp.ndarray,
         bd = B[:, :ndt * t].reshape(nb, ndt, t, k)
         ba = B[:, ndt * t:].reshape(nb, nat, t, k)
         use_start = start_tile is not None
-        fn = _batched_solve_fn(g, impl, use_start)
+        fn = _batched_solve_fn(g, opts, use_start)
         if use_start:
             s = jnp.asarray(start_tile, jnp.int32)
             call = lambda dr, r, c, pd, pa: fn(dr, r, c, pd, pa, s)
@@ -478,7 +504,7 @@ def solve_many_batched(factor: CholeskyFactor, B: jnp.ndarray,
                 and np.asarray(info.tau).shape == (nb,)
                 and bool(np.asarray(info.tau).max() > 0)):
             m = info.matrix
-            rfn = _batched_refine_fn(g, impl, use_start)
+            rfn = _batched_refine_fn(g, opts, use_start)
             rcall = (lambda *a: rfn(*a, s)) if use_start else rfn
             xd, xa = bucketed_batched_call(
                 rcall, (ctsf.Dr, ctsf.R, ctsf.C, m.Dr, m.R, m.C, bd, ba,
@@ -488,21 +514,27 @@ def solve_many_batched(factor: CholeskyFactor, B: jnp.ndarray,
 
 
 def forward_solve(factor: CholeskyFactor, b: jnp.ndarray,
-                  impl: Optional[str] = None) -> jnp.ndarray:
+                  impl=UNSET,
+                  options: Optional[SolverOptions] = None) -> jnp.ndarray:
     """Solve ``L y = b`` (k=1 specialization of the panel sweep)."""
-    return forward_solve_many(factor, b.reshape(-1, 1), impl)[:, 0]
+    opts = resolve_options(options, _where="forward_solve", impl=impl)
+    return forward_solve_many(factor, b.reshape(-1, 1), options=opts)[:, 0]
 
 
 def backward_solve(factor: CholeskyFactor, y: jnp.ndarray,
-                   impl: Optional[str] = None) -> jnp.ndarray:
+                   impl=UNSET,
+                   options: Optional[SolverOptions] = None) -> jnp.ndarray:
     """Solve ``L^T x = y`` (k=1 specialization of the panel sweep)."""
-    return backward_solve_many(factor, y.reshape(-1, 1), impl)[:, 0]
+    opts = resolve_options(options, _where="backward_solve", impl=impl)
+    return backward_solve_many(factor, y.reshape(-1, 1), options=opts)[:, 0]
 
 
 def solve(factor: CholeskyFactor, b: jnp.ndarray,
-          impl: Optional[str] = None, policy=None) -> jnp.ndarray:
+          impl=UNSET, policy=UNSET,
+          options: Optional[SolverOptions] = None) -> jnp.ndarray:
     """A x = b via L L^T."""
-    return solve_many(factor, b.reshape(-1, 1), impl, policy=policy)[:, 0]
+    opts = resolve_options(options, _where="solve", impl=impl, policy=policy)
+    return solve_many(factor, b.reshape(-1, 1), options=opts)[:, 0]
 
 
 def logdet(factor: CholeskyFactor) -> jnp.ndarray:
@@ -516,15 +548,18 @@ def _rhs_grid(factor: CholeskyFactor):
 
 
 def sample_gmrf(factor: CholeskyFactor, key: jax.Array,
-                impl: Optional[str] = None) -> jnp.ndarray:
+                impl=UNSET,
+                options: Optional[SolverOptions] = None) -> jnp.ndarray:
     """Draw x ~ N(0, A^{-1}) via x = L^{-T} z (the INLA sampling primitive)."""
+    opts = resolve_options(options, _where="sample_gmrf", impl=impl)
     z = jax.random.normal(key, (_rhs_grid(factor).padded_n,),
                           dtype=jnp.float32)
-    return backward_solve(factor, z, impl)
+    return backward_solve(factor, z, options=opts)
 
 
 def sample_gmrf_many(factor: CholeskyFactor, key: jax.Array, num: int,
-                     impl: Optional[str] = None) -> jnp.ndarray:
+                     impl=UNSET,
+                     options: Optional[SolverOptions] = None) -> jnp.ndarray:
     """Draw ``num`` samples x ~ N(0, A^{-1}) as one (padded_n, num) panel.
 
     All samples share a single blocked backward sweep (fused into one
@@ -534,10 +569,11 @@ def sample_gmrf_many(factor: CholeskyFactor, key: jax.Array, num: int,
     For embedded factors ``z`` is drawn in the source layout, so a
     bucketed factor reproduces the unbucketed samples bit-for-bit per key.
     """
+    opts = resolve_options(options, _where="sample_gmrf_many", impl=impl)
     with telemetry.span("solve.sample_gmrf_many", num=num):
         z = jax.random.normal(key, (_rhs_grid(factor).padded_n, num),
                               dtype=jnp.float32)
-        return backward_solve_many(factor, z, impl)
+        return backward_solve_many(factor, z, options=opts)
 
 
 def _validate_indices(grid, indices) -> np.ndarray:
@@ -556,14 +592,18 @@ def _validate_indices(grid, indices) -> np.ndarray:
 
 
 def marginal_variances(factor: CholeskyFactor, indices: jnp.ndarray,
-                       method: str = "selinv",
-                       impl: Optional[str] = None,
-                       policy=None) -> jnp.ndarray:
+                       method=UNSET,
+                       impl=UNSET,
+                       policy=UNSET,
+                       options: Optional[SolverOptions] = None) -> jnp.ndarray:
     """Selected diagonal of A^{-1} — INLA's posterior marginal variances.
 
-    Two paths over the same factor:
+    Two paths over the same factor, selected by ``options.method`` (the
+    bare ``method=`` kwarg — like ``impl=``/``policy=`` — is a deprecated
+    alias folded into :class:`~repro.core.options.SolverOptions`):
 
-    * ``method="selinv"`` (default) — the blocked Takahashi recurrence
+    * ``method="selinv"`` (default, = ``options.method None``) — the
+      blocked Takahashi recurrence
       (:func:`repro.core.selinv.selected_inverse`): one backward tile sweep
       computes the whole band + arrow block of Σ, cost independent of k,
       then the k selected diagonal entries are gathered.
@@ -595,27 +635,29 @@ def marginal_variances(factor: CholeskyFactor, indices: jnp.ndarray,
     machinery of :func:`repro.core.selinv.selected_inverse` /
     :func:`forward_solve_many`.
     """
+    opts = resolve_options(options, _where="marginal_variances",
+                           method=method, impl=impl, policy=policy)
+    mth = opts.method or "selinv"
     g = _rhs_grid(factor)
     padded = _validate_indices(g, indices)
-    with telemetry.span("solve.marginal_variances", method=method,
+    with telemetry.span("solve.marginal_variances", method=mth,
                         k=len(padded), grid=telemetry.rung_tag(g)):
-        if method == "selinv":
+        if mth == "selinv":
             from .selinv import selected_inverse
-            sigma = selected_inverse(factor, impl=impl, policy=policy)
+            sigma = selected_inverse(factor, options=opts)
             return jnp.take(sigma.diagonal(padded=True), jnp.asarray(padded),
                             axis=-1)
-        if method == "panels":
+        if mth == "panels":
             k = padded.shape[0]
             E = jnp.zeros((g.padded_n, k), jnp.float32)
             E = E.at[jnp.asarray(padded), jnp.arange(k)].set(1.0)
             # RHS sparsity: unit-vector panels are zero above the selected
             # row, so the band sweep starts at the first nonzero tile.
             start = min(int(padded.min()) // g.t, g.n_diag_tiles) if k else 0
-            Y = forward_solve_many(factor, E, impl=impl, start_tile=start,
-                                   policy=policy)
+            Y = forward_solve_many(factor, E, start_tile=start, options=opts)
             return jnp.sum(Y * Y, axis=0)
         raise ValueError(
-            f"unknown method {method!r} (want 'selinv' or 'panels')")
+            f"unknown method {mth!r} (want 'selinv' or 'panels')")
 
 
 def _marginal_variances_map(factor: CholeskyFactor,

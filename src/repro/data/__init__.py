@@ -1,9 +1,11 @@
 from .gmrf import (TABLE2, ar1_precision, kronecker_st_precision,
                    lattice_precision, make_arrowhead, table2_matrix)
-from .synthetic import (indefinite_arrowhead, nan_contaminated_arrowhead,
-                        near_singular_arrowhead, request_stream)
+from .synthetic import (block_separable_arrowhead, indefinite_arrowhead,
+                        nan_contaminated_arrowhead, near_singular_arrowhead,
+                        request_stream)
 
 __all__ = ["TABLE2", "ar1_precision", "kronecker_st_precision",
            "lattice_precision", "make_arrowhead", "table2_matrix",
-           "indefinite_arrowhead", "nan_contaminated_arrowhead",
-           "near_singular_arrowhead", "request_stream"]
+           "block_separable_arrowhead", "indefinite_arrowhead",
+           "nan_contaminated_arrowhead", "near_singular_arrowhead",
+           "request_stream"]

@@ -50,7 +50,7 @@ from .potrf import factorize_tile
 from .ring import chunk_layout, identity_prefix_panel, ring_read, ring_write
 from .trsm import substitute_right
 
-__all__ = ["band_cholesky_sweep_pallas"]
+__all__ = ["band_cholesky_sweep_pallas", "band_cholesky_partitioned_sweep_pallas"]
 
 
 def _band_cholesky_kernel(start_ref, ac_ref, r_ref, p_ref, ro_ref, sch_ref,
@@ -232,3 +232,201 @@ def band_cholesky_sweep_pallas(Ac, R, nchunks: int = 1, start_tile=0,
         interpret=interpret,
     )(start, Ac, rp)
     return panels, ro[:, :nat], schur[:, :nat, :nat], st[0]
+
+
+def _band_cholesky_partitioned_kernel(bounds_ref, start_ref, ac_ref, r_ref,
+                                      p_ref, ro_ref, sch_ref, st_ref,
+                                      ring_ref, ringa_ref, sacc_ref,
+                                      *, bt: int, nat_p: int):
+    p = pl.program_id(0)
+    k = pl.program_id(1)                       # local step within partition p
+    s0 = bounds_ref[p]
+    size = bounds_ref[p + 1] - s0
+    g = s0 + k                                 # global column index
+    start = start_ref[0]
+    active = k < size
+    t = ac_ref.shape[-1]
+
+    @pl.when(k == 0)
+    def _init():
+        # fresh partition: its rings, Schur accumulator and per-partition
+        # status word all reset — partitions share no state, which is what
+        # lets the leading grid axis carry "parallel" semantics
+        ring_ref[...] = jnp.zeros_like(ring_ref)
+        ringa_ref[...] = jnp.zeros_like(ringa_ref)
+        sacc_ref[...] = jnp.zeros_like(sacc_ref)
+        st_ref[0, 0] = jnp.float32(jnp.inf)
+        st_ref[0, 1] = jnp.float32(0.0)
+        st_ref[0, 2] = jnp.float32(-1.0)
+
+    # Steps k >= size are padding of the rectangular (P, max_tiles) grid:
+    # they touch nothing — the clamped index maps revisit the partition's
+    # last blocks, which persist unchanged.
+    @pl.when(active & (g < start))
+    def _skip():
+        # canonical-grid identity prefix (contiguous global head, so within
+        # a partition the skips precede all work steps) — same contract as
+        # the unpartitioned kernel
+        p_ref[0] = identity_prefix_panel(bt, t).astype(p_ref.dtype)
+        ro_ref[0] = jnp.zeros_like(ro_ref[0])
+        sch_ref[0] = sacc_ref[...].astype(sch_ref.dtype)
+        st_ref[0, 0] = jnp.minimum(st_ref[0, 0], jnp.float32(1.0))
+
+    @pl.when(active & (g >= start))
+    def _work():
+        # identical left-looking step to _band_cholesky_kernel, with the
+        # *local* index k driving the rings (panel k-j of this partition;
+        # k-j < 0 reads the step-0 zeros, exactly the cross-boundary
+        # zeros block-separability guarantees)
+        prev = [ring_read(ring_ref, k - j, bt) for j in range(1, bt + 1)]
+        preva = [ring_read(ringa_ref, k - j, bt) for j in range(1, bt + 1)]
+        rhs = [prev[j - 1][j] for j in range(1, bt + 1)]
+
+        u = []
+        for e in range(bt + 1):
+            acc = jnp.zeros((t, t), jnp.float32)
+            for j in range(1, bt + 1 - e):
+                acc = acc + jax.lax.dot_general(
+                    prev[j - 1][e + j], rhs[j - 1], (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            u.append(acc)
+
+        va = jnp.zeros((nat_p, t, t), jnp.float32)
+        for j in range(1, bt + 1):
+            va = va + jax.lax.dot_general(
+                preva[j - 1], rhs[j - 1], (((2,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+
+        lkk = factorize_tile(ac_ref[0, 0].astype(jnp.float32) - u[0])
+        band_rhs = [ac_ref[0, e].astype(jnp.float32) - u[e]
+                    for e in range(1, bt + 1)]
+        arrow_rhs = r_ref[0].astype(jnp.float32) - va
+        stack = jnp.concatenate([jnp.stack(band_rhs), arrow_rhs], axis=0) \
+            if bt else arrow_rhs
+        sol = substitute_right(lkk, stack)
+        panel = jnp.concatenate([lkk[None], sol[:bt]], axis=0)
+        la = sol[bt:]
+
+        if bt:
+            ring_write(ring_ref, k, bt, panel)
+            ring_write(ringa_ref, k, bt, la)
+
+        # one Schur chunk per partition: the tree-reduction leaf this
+        # partition contributes to the shared corner factorization
+        ss = jax.lax.dot_general(la, la, (((2,), (2,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        sacc_ref[...] += jnp.transpose(ss, (0, 2, 1, 3))
+        sch_ref[0] = sacc_ref[...].astype(sch_ref.dtype)
+
+        p_ref[0] = panel.astype(p_ref.dtype)
+        ro_ref[0] = la.astype(ro_ref.dtype)
+
+        rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+        dmask = rows == cols
+        dsq = jnp.where(dmask, lkk * lkk, jnp.float32(jnp.inf))
+        fin_d = jnp.all(jnp.isfinite(jnp.where(dmask, lkk, 0.0)))
+        piv = jnp.where(fin_d, jnp.min(dsq), jnp.float32(jnp.inf))
+        fin = jnp.all(jnp.isfinite(panel)) & jnp.all(jnp.isfinite(la))
+        bad = jnp.logical_not(fin) | (piv <= 0.0)
+        st_ref[0, 0] = jnp.minimum(st_ref[0, 0], piv)
+        st_ref[0, 1] = jnp.maximum(st_ref[0, 1], jnp.where(fin, 0.0, 1.0))
+        # first_bad is recorded in *global* columns, so the per-partition
+        # words fold with ref.combine_sweep_status directly
+        st_ref[0, 2] = jnp.where((st_ref[0, 2] < 0.0) & bad,
+                                 g.astype(jnp.float32), st_ref[0, 2])
+
+
+@functools.partial(jax.jit, static_argnames=("boundaries", "interpret"))
+def band_cholesky_partitioned_sweep_pallas(Ac, R, boundaries, start_tile=0,
+                                           interpret: bool = True):
+    """Partition-parallel fused band+arrow Cholesky: one launch over all
+    ND partitions.
+
+    Same input layout as :func:`band_cholesky_sweep_pallas`, plus the
+    static ``boundaries`` tuple ``(0, c_1, ..., ndt)`` of a
+    :class:`~repro.core.ordering.PartitionPlan` certifying that no band
+    tile crosses a cut (block-separable input — the adaptive-ND ordering's
+    independent partitions).  The grid becomes 2D:
+
+      grid = (P, max_tiles) — the leading axis walks partitions with
+      ``parallel`` dimension semantics (partitions share no state: rings,
+      Schur accumulator and status word all reset at each partition's step
+      0), the trailing axis is the per-partition sequential factorization.
+      The critical path drops from O(ndt) sequential steps to
+      O(max partition tiles).
+
+    Partition sizes are ragged; the rectangular grid is padded and the
+    per-column index maps clamp to the partition's last tile, where the
+    padding steps are pure no-ops.  ``boundaries`` rides scalar prefetch
+    (`pltpu.PrefetchScalarGridSpec`) so the index maps can look the
+    partition's tile range up dynamically.
+
+    Output layout matches ``ref.band_cholesky_partitioned_sweep_ref``:
+    panels/R_out as usual, ``schur (P, nat, nat, t, t)`` with one
+    tree-reduction leaf per partition, and the global (3,) status word.
+    """
+    from .ref import combine_sweep_status, empty_sweep_status
+
+    ndt, b1, t, _ = Ac.shape
+    bt = b1 - 1
+    nat = R.shape[1]
+    bounds = tuple(int(b) for b in boundaries)
+    if len(bounds) < 2 or bounds[0] != 0 or bounds[-1] != ndt or \
+            any(b1_ <= b0_ for b0_, b1_ in zip(bounds, bounds[1:])):
+        raise ValueError(
+            f"boundaries {bounds!r} must be strictly increasing from 0 "
+            f"to ndt={ndt}")
+    P = len(bounds) - 1
+    maxk = max(b1_ - b0_ for b0_, b1_ in zip(bounds, bounds[1:]))
+    if ndt == 0:
+        return (jnp.zeros((0, b1, t, t), Ac.dtype),
+                jnp.zeros((0, nat, t, t), Ac.dtype),
+                jnp.zeros((P, nat, nat, t, t), Ac.dtype),
+                empty_sweep_status())
+    nat_p = max(nat, 1)
+    rp = R if nat else jnp.zeros((ndt, 1, t, t), Ac.dtype)
+    bounds_arr = jnp.asarray(bounds, jnp.int32)
+    start = jnp.reshape(jnp.asarray(start_tile, jnp.int32), (1,))
+
+    def col(p, k, bounds_ref, start_ref):
+        # partition p's column s0+k, clamped to its last tile for padding
+        return (jnp.minimum(bounds_ref[p] + k, bounds_ref[p + 1] - 1),
+                0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(P, maxk),
+        in_specs=[
+            pl.BlockSpec((1, b1, t, t), col),
+            pl.BlockSpec((1, nat_p, t, t), col),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b1, t, t), col),
+            pl.BlockSpec((1, nat_p, t, t), col),
+            pl.BlockSpec((1, nat_p, nat_p, t, t),
+                         lambda p, k, b, s: (p, 0, 0, 0, 0)),
+            pl.BlockSpec((1, 3), lambda p, k, b, s: (p, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((max(bt, 1), b1, t, t), jnp.float32),
+            pltpu.VMEM((max(bt, 1), nat_p, t, t), jnp.float32),
+            pltpu.VMEM((nat_p, nat_p, t, t), jnp.float32),
+        ],
+    )
+    panels, ro, schur, st = pl.pallas_call(
+        functools.partial(_band_cholesky_partitioned_kernel,
+                          bt=bt, nat_p=nat_p),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((ndt, b1, t, t), Ac.dtype),
+            jax.ShapeDtypeStruct((ndt, nat_p, t, t), Ac.dtype),
+            jax.ShapeDtypeStruct((P, nat_p, nat_p, t, t), Ac.dtype),
+            jax.ShapeDtypeStruct((P, 3), jnp.float32),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(bounds_arr, start, Ac, rp)
+    return (panels, ro[:, :nat], schur[:, :nat, :nat],
+            combine_sweep_status(st))

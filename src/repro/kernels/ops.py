@@ -19,13 +19,15 @@ from .potrf import potrf_pallas
 from .trsm import solve_panel_pallas, trsm_pallas
 from .gemm import gemm_pallas, syrk_pallas, geadd_pallas
 from .band_update import band_update_pallas
-from .band_cholesky import band_cholesky_sweep_pallas
+from .band_cholesky import (band_cholesky_partitioned_sweep_pallas,
+                            band_cholesky_sweep_pallas)
 from .band_solve import band_backward_sweep_pallas, band_forward_sweep_pallas
 from .selinv import selinv_step_pallas, selinv_sweep_pallas
 
 __all__ = ["potrf", "trsm", "solve_panel", "syrk", "gemm", "geadd",
            "band_update", "selinv_step", "band_forward_sweep",
-           "band_backward_sweep", "band_cholesky_sweep", "selinv_sweep",
+           "band_backward_sweep", "band_cholesky_sweep",
+           "band_cholesky_partitioned_sweep", "selinv_sweep",
            "default_impl"]
 
 Impl = Literal["ref", "pallas", "unrolled"]
@@ -176,6 +178,38 @@ def band_cholesky_sweep(Ac: jnp.ndarray, R: jnp.ndarray, nchunks: int = 1,
                                           interpret=_interp())
     return ref.band_cholesky_sweep_ref(Ac, R, nchunks=nchunks,
                                        start_tile=start_tile)
+
+
+def band_cholesky_partitioned_sweep(Ac: jnp.ndarray, R: jnp.ndarray,
+                                    boundaries, start_tile=0,
+                                    impl: Impl | None = None):
+    """Partition-parallel band+arrow Cholesky: every independent partition
+    of a block-separable band factorizes in ONE launch.
+
+    ``boundaries`` is the static tile-boundary tuple of a
+    :class:`~repro.core.ordering.PartitionPlan` (``(0, c_1, ..., ndt)``,
+    hashable — the kernels layer takes the raw tuple so it stays
+    decoupled from core's plan type); the input must be block-separable
+    across those cuts (no band tile crossing a boundary —
+    ``detect_partition_plan`` certifies it).  Returns ``(panels, R_out,
+    schur, status)`` like :func:`band_cholesky_sweep`, except ``schur``
+    is ``(P, nat, nat, t, t)`` — one corner-Schur tree-reduction leaf per
+    partition — and ``status.first_bad`` is already global.
+
+    ``"pallas"`` runs the 2D-grid fused kernel (parallel partition axis ×
+    sequential per-partition axis: critical path O(max partition tiles)
+    instead of O(ndt)); ``"ref"`` runs the per-partition ``lax.scan``
+    oracle.  A trivial single-partition ``boundaries=(0, ndt)`` is valid
+    but pointless — ``core.cholesky`` routes that case to
+    :func:`band_cholesky_sweep` to keep it bit-identical to the
+    unpartitioned sweep."""
+    impl = impl or default_impl()
+    boundaries = tuple(int(b) for b in boundaries)
+    if impl == "pallas":
+        return band_cholesky_partitioned_sweep_pallas(
+            Ac, R, boundaries, start_tile=start_tile, interpret=_interp())
+    return ref.band_cholesky_partitioned_sweep_ref(
+        Ac, R, boundaries, start_tile=start_tile)
 
 
 def selinv_sweep(lcol: jnp.ndarray, R: jnp.ndarray, sc_full: jnp.ndarray,

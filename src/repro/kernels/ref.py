@@ -13,8 +13,9 @@ import jax.numpy as jnp
 __all__ = ["potrf_ref", "trsm_ref", "solve_panel_ref", "syrk_ref",
            "gemm_ref", "geadd_ref", "band_update_ref", "selinv_step_ref",
            "band_forward_sweep_ref", "band_backward_sweep_ref",
-           "band_cholesky_sweep_ref", "selinv_sweep_ref", "sweep_status",
-           "empty_sweep_status"]
+           "band_cholesky_sweep_ref", "band_cholesky_partitioned_sweep_ref",
+           "selinv_sweep_ref", "sweep_status", "empty_sweep_status",
+           "combine_sweep_status"]
 
 _HI = jax.lax.Precision.HIGHEST
 
@@ -304,6 +305,74 @@ def band_cholesky_sweep_ref(Ac: jnp.ndarray, R: jnp.ndarray,
     rchunk = rpad.reshape((nch, csz) + R_out.shape[1:])
     schur = jnp.einsum("nkiab,nkjcb->nijac", rchunk, rchunk, precision=_HI)
     return panels, R_out, schur, sweep_status(panels, R_out)
+
+
+def combine_sweep_status(words: jnp.ndarray) -> jnp.ndarray:
+    """Fold per-partition status words into one global word.
+
+    Input:  words (P, 3) — one :func:`sweep_status` word per partition,
+            ``first_bad`` already in *global* column indices.
+    Output: (3,) — min over pivots, max over nonfinite flags, and the
+            smallest non-negative ``first_bad`` (-1 when every partition
+            is clean).  An empty stack folds to :func:`empty_sweep_status`.
+    """
+    if words.shape[0] == 0:
+        return empty_sweep_status()
+    first = words[:, 2]
+    best = jnp.min(jnp.where(first >= 0, first, jnp.inf))
+    return jnp.stack([jnp.min(words[:, 0]),
+                      jnp.max(words[:, 1]),
+                      jnp.where(jnp.isfinite(best), best, -1.0)])
+
+
+def band_cholesky_partitioned_sweep_ref(Ac: jnp.ndarray, R: jnp.ndarray,
+                                        boundaries, start_tile=0):
+    """Partition-parallel band+arrow Cholesky sweep — the oracle for the
+    2D-grid fused Pallas kernel.
+
+    ``boundaries`` is the static tuple ``(0, c_1, ..., ndt)`` of a
+    :class:`~repro.core.ordering.PartitionPlan`: partition ``p`` owns
+    diagonal tiles ``[boundaries[p], boundaries[p+1])``, and the input is
+    assumed block-separable across those cuts (every band tile crossing a
+    boundary is zero — :func:`~repro.core.ordering.detect_partition_plan`
+    certifies exactly this).  Each partition then factorizes
+    independently: this oracle runs :func:`band_cholesky_sweep_ref` on
+    each slice with one Schur chunk per partition and concatenates.
+
+    Output: panels (ndt, b1, t, t), R_out (ndt, nat, t, t) — same layout
+            as the unpartitioned sweep;
+            schur (P, nat, nat, t, t) — one corner-Schur partial sum per
+            partition (the tree-reduction leaves);
+            status (3,) — partition words folded by
+            :func:`combine_sweep_status`, ``first_bad`` global.
+
+    ``start_tile`` (may be traced) keeps the canonical-grid prefix
+    semantics: globally, columns ``k < start_tile`` are the identity
+    prefix, so partition ``p`` skips its first
+    ``max(0, start_tile - boundaries[p])`` columns.
+    """
+    ndt = Ac.shape[0]
+    bounds = tuple(int(b) for b in boundaries)
+    if len(bounds) < 2 or bounds[0] != 0 or bounds[-1] != ndt or \
+            any(b1_ <= b0_ for b0_, b1_ in zip(bounds, bounds[1:])):
+        raise ValueError(
+            f"boundaries {bounds!r} must be strictly increasing from 0 "
+            f"to ndt={ndt}")
+    static_start = isinstance(start_tile, int)
+    panels, r_out, schurs, words = [], [], [], []
+    for s0, s1 in zip(bounds, bounds[1:]):
+        local_start = max(0, start_tile - s0) if static_start \
+            else jnp.maximum(0, start_tile - s0)
+        p, r, sch, w = band_cholesky_sweep_ref(
+            Ac[s0:s1], R[s0:s1], nchunks=1, start_tile=local_start)
+        panels.append(p)
+        r_out.append(r)
+        schurs.append(sch[0])
+        words.append(w.at[2].set(jnp.where(w[2] >= 0, w[2] + s0, -1.0)))
+    return (jnp.concatenate(panels, axis=0),
+            jnp.concatenate(r_out, axis=0),
+            jnp.stack(schurs, axis=0),
+            combine_sweep_status(jnp.stack(words, axis=0)))
 
 
 def selinv_sweep_ref(lcol: jnp.ndarray, R: jnp.ndarray,

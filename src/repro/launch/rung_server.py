@@ -95,6 +95,7 @@ from repro.core.cholesky import CholeskyFactor, factorize_window_batched
 from repro.core.ctsf import BandedCTSF
 from repro.core.gridpolicy import (GridBucketPolicy, assemble_rung_batch,
                                    assemble_rung_rhs, restrict_rhs)
+from repro.core.options import SolverOptions, UNSET, resolve_options
 from repro.core.robustness import (STATUS_FAILED, STATUS_OK,
                                    STATUS_RECOVERED, STATUS_SHED, FactorInfo)
 from repro.core.solve import solve_many_batched
@@ -664,12 +665,17 @@ class RungExecutor:
     works.  ``finalize`` blocks on the results, restricts each element
     back to its source layout, and resolves the futures."""
 
-    def __init__(self, impl: Optional[str] = None, tree_chunks: int = 8,
-                 sweep: str = "auto", regularize=True, bucket: bool = True):
-        self.impl = impl
+    def __init__(self, impl=UNSET, tree_chunks: int = 8,
+                 sweep=UNSET, regularize=UNSET, bucket: bool = True,
+                 options: Optional[SolverOptions] = None):
+        opts = resolve_options(options, _where="RungExecutor",
+                               impl=impl, sweep=sweep, regularize=regularize)
+        # the server's historical default is the jitter ladder ON; an
+        # explicit options object is respected verbatim
+        if options is None and regularize is UNSET:
+            opts = opts.replace(regularize=True)
+        self.options = opts
         self.tree_chunks = tree_chunks
-        self.sweep = sweep
-        self.regularize = regularize
         self.bucket = bucket
 
     def dispatch(self, batch: RungBatch, now: float) -> _Inflight:
@@ -680,15 +686,15 @@ class RungExecutor:
             stacked, start = assemble_rung_batch(
                 [r.matrix for r in reqs], cgrid)
             factor = factorize_window_batched(
-                stacked, impl=self.impl, tree_chunks=self.tree_chunks,
-                bucket=self.bucket, sweep=self.sweep,
-                regularize=self.regularize, start_tile=start)
+                stacked, tree_chunks=self.tree_chunks,
+                bucket=self.bucket, start_tile=start, options=self.options)
             X = None
             if k is not None:
                 B = assemble_rung_rhs([r.rhs for r in reqs],
                                       [r.grid for r in reqs], cgrid)
-                X = solve_many_batched(factor, B, impl=self.impl,
-                                       start_tile=start, bucket=self.bucket)
+                X = solve_many_batched(factor, B, start_tile=start,
+                                       bucket=self.bucket,
+                                       options=self.options)
             return _Inflight(batch=batch, factor=factor, start=start, X=X)
 
     def finalize(self, inflight: _Inflight, now: float) -> List[RungResult]:
@@ -1019,8 +1025,9 @@ class RungServer:
 
     def __init__(self, policy: Optional[GridBucketPolicy] = None,
                  max_batch: int = 8, max_delay: float = 10e-3,
-                 impl: Optional[str] = None, tree_chunks: int = 8,
-                 sweep: str = "auto", regularize=True, bucket: bool = True,
+                 impl=UNSET, tree_chunks: int = 8,
+                 sweep=UNSET, regularize=UNSET, bucket: bool = True,
+                 options: Optional[SolverOptions] = None,
                  clock=None, poll_interval: float = 1e-3,
                  max_queue: Optional[int] = None,
                  max_pending: Optional[int] = None,
@@ -1033,6 +1040,11 @@ class RungServer:
         if on_overload not in ("raise", "shed"):
             raise ValueError(f"on_overload must be 'raise' or 'shed', "
                              f"got {on_overload!r}")
+        opts = resolve_options(options, _where="RungServer",
+                               impl=impl, sweep=sweep, regularize=regularize)
+        if options is None and regularize is UNSET:
+            opts = opts.replace(regularize=True)
+        self.options = opts
         self.scheduler = RungScheduler(policy=policy, max_batch=max_batch,
                                        max_delay=max_delay,
                                        max_queue=max_queue,
@@ -1055,8 +1067,7 @@ class RungServer:
         sleep_fn = clock.advance if isinstance(clock, SimClock) \
             else time.sleep
         inner = executor if executor is not None else RungExecutor(
-            impl=impl, tree_chunks=tree_chunks, sweep=sweep,
-            regularize=regularize, bucket=bucket)
+            tree_chunks=tree_chunks, bucket=bucket, options=opts)
         self.executor = ResilientRungExecutor(
             inner, clock=self.clock, sleep_fn=sleep_fn, events=self.events,
             max_retries=max_retries, backoff_base=backoff_base,
@@ -1353,7 +1364,9 @@ def main(argv=None) -> None:
     arrivals = _build_arrivals(stream)
     clock = SimClock()
     server = RungServer(max_batch=args.max_batch, max_delay=args.max_delay,
-                        impl=args.impl, clock=clock)
+                        options=SolverOptions(impl=args.impl,
+                                              regularize=True),
+                        clock=clock)
     t0 = time.perf_counter()
     futures = replay(server, clock, arrivals)
     wall = time.perf_counter() - t0

@@ -9,6 +9,7 @@ from repro.core import (BandedCTSF, TileGrid, TileMatrix, factorize_tasklist,
                         factorize_window, forward_solve, backward_solve,
                         logdet, sample_gmrf, solve)
 from repro.data import make_arrowhead
+from repro.core.options import SolverOptions
 
 CASES = [
     # (n, bandwidth, arrow, tile, rho)
@@ -112,8 +113,8 @@ def test_pallas_impl_matches_ref_end_to_end():
     """impl="pallas" now rides the single-launch fused band-Cholesky sweep
     (sweep="auto" resolves to "fused" on the Pallas backend)."""
     A, g, bm, dense = _setup(128, 16, 16, 16, 0.6)
-    f_ref = factorize_window(bm, impl="ref")
-    f_pl = factorize_window(bm, impl="pallas")
+    f_ref = factorize_window(bm, options=SolverOptions(impl="ref"))
+    f_pl = factorize_window(bm, options=SolverOptions(impl="pallas"))
     assert np.allclose(f_ref.ctsf.to_dense(), f_pl.ctsf.to_dense(), atol=2e-4)
 
 
@@ -122,11 +123,11 @@ def test_fused_sweep_matches_dense(n, bw, ar, t, rho):
     """The one-launch factorization (sweep="fused") is a drop-in for the
     scan path on every grid shape, not just where Pallas is the default."""
     A, g, bm, dense = _setup(n, bw, ar, t, rho)
-    f = factorize_window(bm, sweep="fused")
+    f = factorize_window(bm, options=SolverOptions(sweep="fused"))
     Lref = np.linalg.cholesky(dense)
     err = np.abs(f.ctsf.to_dense() - np.tril(Lref)).max()
     assert err < 1e-3 * max(1.0, np.abs(Lref).max())
-    f_ring = factorize_window(bm, sweep="ring")
+    f_ring = factorize_window(bm, options=SolverOptions(sweep="ring"))
     assert np.allclose(f.ctsf.to_dense(), f_ring.ctsf.to_dense(), atol=2e-4)
 
 
@@ -138,10 +139,10 @@ def test_factorize_window_batched_rides_fused_sweep():
     for s in range(3):
         A, g, bm, dense = _setup(160, 8, 16, 16, 0.5, seed=s)
         mats.append(bm)
-    fb = factorize_window_batched(mats, impl="pallas")    # bucket pads 3 -> 4
+    fb = factorize_window_batched(mats, options=SolverOptions(impl="pallas"))    # bucket pads 3 -> 4
     assert fb.ctsf.Dr.shape[0] == 3
     for i, m in enumerate(mats):
-        fi = factorize_window(m, impl="ref")
+        fi = factorize_window(m, options=SolverOptions(impl="ref"))
         np.testing.assert_allclose(np.asarray(fb.ctsf.Dr[i]),
                                    np.asarray(fi.ctsf.Dr),
                                    rtol=2e-4, atol=2e-4)

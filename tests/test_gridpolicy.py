@@ -18,6 +18,7 @@ from repro.core.concurrent import (concurrent_logdet,
                                    concurrent_quadratic_forms,
                                    concurrent_solve, stack_ctsf)
 from repro.data import make_arrowhead
+from repro.core.options import SolverOptions
 
 POLICY = GridBucketPolicy()
 
@@ -168,8 +169,8 @@ def test_rhs_embed_restrict_roundtrip_and_validation(rng):
 @pytest.mark.parametrize("n,bw,ar", CASES)
 def test_factorize_window_policy_parity(n, bw, ar):
     _, grid, m = _problem(n, bw, ar)
-    f0 = factorize_window(m, impl="ref")
-    fp = factorize_window(m, impl="ref", policy=POLICY)
+    f0 = factorize_window(m, options=SolverOptions(impl="ref"))
+    fp = factorize_window(m, options=SolverOptions(impl="ref", policy=POLICY))
     assert fp.source_grid == grid
     assert fp.ctsf.grid == POLICY.canonicalize(grid)
     fr = fp.restrict()
@@ -182,32 +183,32 @@ def test_factorize_window_policy_parity(n, bw, ar):
 @pytest.mark.parametrize("n,bw,ar", CASES)
 def test_solve_and_marginals_policy_parity(n, bw, ar, rng):
     A, grid, m = _problem(n, bw, ar)
-    f0 = factorize_window(m, impl="ref")
-    fp = factorize_window(m, impl="ref", policy=POLICY)
+    f0 = factorize_window(m, options=SolverOptions(impl="ref"))
+    fp = factorize_window(m, options=SolverOptions(impl="ref", policy=POLICY))
     B = jnp.asarray(rng.standard_normal((grid.padded_n, 4))
                     .astype(np.float32))
-    X0 = solve_many(f0, B, impl="ref")
-    _assert_close(solve_many(fp, B, impl="ref"), X0)
+    X0 = solve_many(f0, B, options=SolverOptions(impl="ref"))
+    _assert_close(solve_many(fp, B, options=SolverOptions(impl="ref")), X0)
     # policy on a plain factor embeds on the fly — same answer
-    _assert_close(solve_many(f0, B, impl="ref", policy=POLICY), X0)
+    _assert_close(solve_many(f0, B, options=SolverOptions(impl="ref", policy=POLICY)), X0)
     idx = np.arange(0, grid.structure.n, 7)
-    v0 = marginal_variances(f0, idx, impl="ref")
-    _assert_close(marginal_variances(fp, idx, impl="ref"), v0)
-    _assert_close(marginal_variances(fp, idx, method="panels", impl="ref"),
-                  marginal_variances(f0, idx, method="panels", impl="ref"))
+    v0 = marginal_variances(f0, idx, options=SolverOptions(impl="ref"))
+    _assert_close(marginal_variances(fp, idx, options=SolverOptions(impl="ref")), v0)
+    _assert_close(marginal_variances(fp, idx, options=SolverOptions(method="panels", impl="ref")),
+                  marginal_variances(f0, idx, options=SolverOptions(method="panels", impl="ref")))
     # sampling reproduces the unbucketed draw bit-for-bit per key
-    s0 = sample_gmrf_many(f0, jax.random.PRNGKey(5), 3, impl="ref")
-    s1 = sample_gmrf_many(fp, jax.random.PRNGKey(5), 3, impl="ref")
+    s0 = sample_gmrf_many(f0, jax.random.PRNGKey(5), 3, options=SolverOptions(impl="ref"))
+    s1 = sample_gmrf_many(fp, jax.random.PRNGKey(5), 3, options=SolverOptions(impl="ref"))
     _assert_close(s1, s0, 0)
 
 
 @pytest.mark.parametrize("n,bw,ar", CASES)
 def test_selinv_policy_parity(n, bw, ar):
     _, grid, m = _problem(n, bw, ar)
-    f0 = factorize_window(m, impl="ref")
-    fp = factorize_window(m, impl="ref", policy=POLICY)
-    s0 = selected_inverse(f0, impl="ref")
-    s1 = selected_inverse(fp, impl="ref")
+    f0 = factorize_window(m, options=SolverOptions(impl="ref"))
+    fp = factorize_window(m, options=SolverOptions(impl="ref", policy=POLICY))
+    s0 = selected_inverse(f0, options=SolverOptions(impl="ref"))
+    s1 = selected_inverse(fp, options=SolverOptions(impl="ref"))
     assert s1.grid == grid
     _assert_close(s1.Dr, s0.Dr)                 # Σ band
     _assert_close(s1.R, s0.R)                   # Σ arrow
@@ -219,32 +220,32 @@ def test_pallas_fused_sweeps_ride_the_embedding(rng):
     """The fused kernels' traced start_tile path: pallas bucketed results
     must match the unbucketed ref path."""
     _, grid, m = _problem(96, 10, 5)
-    f0 = factorize_window(m, impl="ref")
-    fp = factorize_window(m, impl="pallas", policy=POLICY)
+    f0 = factorize_window(m, options=SolverOptions(impl="ref"))
+    fp = factorize_window(m, options=SolverOptions(impl="pallas", policy=POLICY))
     _assert_close(fp.restrict().ctsf.Dr, f0.ctsf.Dr)
     B = jnp.asarray(rng.standard_normal((grid.padded_n, 4))
                     .astype(np.float32))
-    _assert_close(solve_many(fp, B, impl="pallas"),
-                  solve_many(f0, B, impl="ref"))
-    _assert_close(selected_inverse(fp, impl="pallas").diagonal(),
-                  selected_inverse(f0, impl="ref").diagonal())
+    _assert_close(solve_many(fp, B, options=SolverOptions(impl="pallas")),
+                  solve_many(f0, B, options=SolverOptions(impl="ref")))
+    _assert_close(selected_inverse(fp, options=SolverOptions(impl="pallas")).diagonal(),
+                  selected_inverse(f0, options=SolverOptions(impl="ref")).diagonal())
 
 
 def test_batched_and_concurrent_policy_parity(rng):
     _, grid, m = _problem(96, 10, 5)
     mats = [m] * 3
-    fb0 = factorize_window_batched(mats, impl="ref")
-    fbp = factorize_window_batched(mats, impl="ref", policy=POLICY)
+    fb0 = factorize_window_batched(mats, options=SolverOptions(impl="ref"))
+    fbp = factorize_window_batched(mats, options=SolverOptions(impl="ref", policy=POLICY))
     assert fbp.source_grid == grid
     _assert_close(restrict_factor(fbp).ctsf.Dr, fb0.ctsf.Dr)
     _assert_close(concurrent_logdet(fbp), concurrent_logdet(fb0))
     y = jnp.asarray(rng.standard_normal((grid.padded_n,)).astype(np.float32))
-    _assert_close(concurrent_solve(fbp, y, impl="ref"),
-                  concurrent_solve(fb0, y, impl="ref"))
-    _assert_close(concurrent_quadratic_forms(fbp, y, impl="ref"),
-                  concurrent_quadratic_forms(fb0, y, impl="ref"))
-    sb0 = selinv_batched(fb0, impl="ref")
-    sbp = selinv_batched(fbp, impl="ref")
+    _assert_close(concurrent_solve(fbp, y, options=SolverOptions(impl="ref")),
+                  concurrent_solve(fb0, y, options=SolverOptions(impl="ref")))
+    _assert_close(concurrent_quadratic_forms(fbp, y, options=SolverOptions(impl="ref")),
+                  concurrent_quadratic_forms(fb0, y, options=SolverOptions(impl="ref")))
+    sb0 = selinv_batched(fb0, options=SolverOptions(impl="ref"))
+    sbp = selinv_batched(fbp, options=SolverOptions(impl="ref"))
     assert sbp.grid == grid
     _assert_close(sbp.diagonal(), sb0.diagonal())
     _assert_close(sbp.Dr, sb0.Dr)
@@ -259,8 +260,8 @@ def test_stack_ctsf_policy_embeds_mixed_grids():
     assert stacked.grid == POLICY.join([g1, g2])
     assert stacked.Dr.shape[0] == 2
     # each slice factorizes to the same (restricted) factor as its source
-    fb = factorize_window_batched(stacked, impl="ref", policy=POLICY)
-    f1 = factorize_window(m1, impl="ref", policy=POLICY)
+    fb = factorize_window_batched(stacked, options=SolverOptions(impl="ref", policy=POLICY))
+    f1 = factorize_window(m1, options=SolverOptions(impl="ref", policy=POLICY))
     band1 = embed_ctsf(f1.ctsf, stacked.grid).Dr
     _assert_close(fb.ctsf.Dr[0], band1)
 
@@ -281,7 +282,7 @@ def test_stack_ctsf_embeds_bandless_grid_with_banded_ones():
     stacked = stack_ctsf([m1, m0], policy=POLICY)
     assert stacked.grid.n_diag_tiles > 0
     # the embedded corner-only slice factorizes to blockdiag(I, chol(A))
-    fb = factorize_window_batched(stacked, impl="ref", policy=POLICY)
+    fb = factorize_window_batched(stacked, options=SolverOptions(impl="ref", policy=POLICY))
     want = np.linalg.cholesky(dense)
     corner = np.asarray(fb.ctsf.C[1])
     got = corner.transpose(0, 2, 1, 3).reshape(16, 16)
@@ -298,8 +299,8 @@ def test_logdet_broadcasts_over_batched_factors():
     batch element (it used to index the batch axis as the band axis and
     collapse everything into one wrong scalar)."""
     _, grid, m = _problem(96, 10, 5)
-    f1 = factorize_window(m, impl="ref")
-    fb = factorize_window_batched([m, m, m], impl="ref")
+    f1 = factorize_window(m, options=SolverOptions(impl="ref"))
+    fb = factorize_window_batched([m, m, m], options=SolverOptions(impl="ref"))
     ld = fb.logdet()
     assert ld.shape == (3,)
     _assert_close(ld, jnp.full((3,), f1.logdet()))
@@ -317,13 +318,12 @@ def test_mixed_grid_stream_shares_canonical_cache_entries():
     before = set(cache.keys())
     # tree_chunks=7 keeps this test's key space disjoint from whatever
     # earlier tests already traced into the module-level cache
-    outs = [factorize_window_batched([m, m], impl="ref", tree_chunks=7,
-                                     policy=POLICY)
+    outs = [factorize_window_batched([m, m], tree_chunks=7, options=SolverOptions(impl="ref", policy=POLICY))
             for _, _, m in probs]
     new = set(cache.keys()) - before
     assert len(new) == 1
     # ... and despite sharing the compiled sweep, each grid's results are
     # its own (no cache-key collision across true shapes)
     for (_, g, m), f in zip(probs, outs):
-        f0 = factorize_window_batched([m, m], impl="ref", tree_chunks=7)
+        f0 = factorize_window_batched([m, m], tree_chunks=7, options=SolverOptions(impl="ref"))
         _assert_close(restrict_factor(f).ctsf.Dr, f0.ctsf.Dr)

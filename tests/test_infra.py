@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops
+from repro.core.options import SolverOptions
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -132,7 +133,7 @@ def test_canonical_rung_cache_key_distinguishes_use_start():
     cgrid = pol.canonicalize(g)
     cache = core_cholesky._BATCHED_WINDOW_CACHE
     before = set(cache.keys())
-    factorize_window_batched([m], impl="ref", tree_chunks=5, policy=pol)
+    factorize_window_batched([m], tree_chunks=5, options=SolverOptions(impl="ref", policy=pol))
     new = set(cache.keys()) - before
     assert len(new) == 1
     (key,) = new
@@ -141,7 +142,7 @@ def test_canonical_rung_cache_key_distinguishes_use_start():
     # a same-rung grid with a different true shape reuses that entry
     A2, s2 = make_arrowhead(90, 9, 3, rho=0.6, seed=1)
     m2 = BandedCTSF.from_sparse(A2, TileGrid(s2, t=8))
-    factorize_window_batched([m2], impl="ref", tree_chunks=5, policy=pol)
+    factorize_window_batched([m2], tree_chunks=5, options=SolverOptions(impl="ref", policy=pol))
     assert set(cache.keys()) - before == new
 
 

@@ -15,6 +15,7 @@ from repro.kernels.potrf import potrf_pallas
 from repro.kernels.ring import band_row_to_col
 from repro.kernels.selinv import selinv_step_pallas, selinv_sweep_pallas
 from repro.kernels.trsm import trsm_pallas
+from repro.core.options import SolverOptions
 
 TILES = [8, 16, 32, 64]
 DTYPES = [jnp.float32]
@@ -278,7 +279,7 @@ def test_selinv_sweep(n, bw, ar, t):
     """One-launch Takahashi recurrence matches the per-column scan oracle."""
     from repro.core import factorize_window
     bm, grid = _spd_ctsf(n, bw, ar, t)
-    f = factorize_window(bm, impl="ref").ctsf
+    f = factorize_window(bm, options=SolverOptions(impl="ref")).ctsf
     lcol = band_row_to_col(f.Dr)
     sc = _corner_sigma(f.C, grid.n_arrow_tiles, t)
     gp, ga = selinv_sweep_pallas(lcol, f.R, sc)
@@ -292,7 +293,7 @@ def test_selinv_sweep(n, bw, ar, t):
 def test_selinv_sweep_vmap():
     from repro.core import factorize_window
     facs, grids = zip(*[(_spd_ctsf(96, 40, 16, 8, seed=s)) for s in range(2)])
-    fs = [factorize_window(m, impl="ref").ctsf for m in facs]
+    fs = [factorize_window(m, options=SolverOptions(impl="ref")).ctsf for m in facs]
     lcolb = jnp.stack([band_row_to_col(f.Dr) for f in fs])
     Rb = jnp.stack([f.R for f in fs])
     scb = jnp.stack([_corner_sigma(f.C, grids[0].n_arrow_tiles, 8)
@@ -368,7 +369,7 @@ def test_selinv_sweep_start_tile():
     pad = 3
     cgrid = TileGrid.from_tile_counts(
         8, grid.n_diag_tiles + pad, grid.band_tiles, grid.n_arrow_tiles)
-    f = factorize_window(embed_ctsf(bm, cgrid), impl="ref").ctsf
+    f = factorize_window(embed_ctsf(bm, cgrid), options=SolverOptions(impl="ref")).ctsf
     lcol = band_row_to_col(f.Dr)
     sc = _corner_sigma(f.C, cgrid.n_arrow_tiles, 8)
     st = jnp.asarray(pad, jnp.int32)
@@ -382,7 +383,7 @@ def test_selinv_sweep_start_tile():
                                np.broadcast_to(np.eye(8), (pad, 8, 8)),
                                atol=1e-6)
     assert np.abs(np.asarray(gp)[:pad, 1:]).max() == 0.0
-    f0 = factorize_window(bm, impl="ref").ctsf
+    f0 = factorize_window(bm, options=SolverOptions(impl="ref")).ctsf
     wp0, _ = ref.selinv_sweep_ref(band_row_to_col(f0.Dr), f0.R,
                                   _corner_sigma(f0.C, grid.n_arrow_tiles, 8))
     np.testing.assert_allclose(np.asarray(gp)[pad:], np.asarray(wp0),

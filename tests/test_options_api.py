@@ -1,0 +1,205 @@
+"""API-surface contract tests: the ``repro.api`` facade and the unified
+``SolverOptions`` knob object.
+
+Two golden snapshots pin the public surface — ``repro.api.__all__`` and
+the ``SolverOptions`` field set/defaults — so additions are deliberate
+diffs and removals are loud failures.  The shim tests (marked
+``legacy_shim``) assert every deprecated per-call kwarg still works and
+warns exactly once; the options-path tests assert the blessed spelling
+is silent under ``-W error::DeprecationWarning``.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro import api
+from repro.core import BandedCTSF, TileGrid
+from repro.core.options import SolverOptions, resolve_options
+from repro.data import make_arrowhead
+
+API_SNAPSHOT = [
+    # matrix + grid types
+    "ArrowheadStructure", "BandedCTSF", "TileGrid", "measure_arrowhead",
+    # the one knob object + its ingredients
+    "SolverOptions", "GridBucketPolicy", "PartitionPlan", "RegularizePolicy",
+    # orderings / partition detection
+    "adaptive_nd_ordering", "detect_partition_plan",
+    "partition_plan_from_ordering",
+    # factorization
+    "CholeskyFactor", "FactorInfo", "factorize_window",
+    "factorize_window_batched", "concurrent_factorize", "stack_ctsf",
+    # solves
+    "solve", "solve_many", "solve_many_batched", "forward_solve",
+    "forward_solve_many", "backward_solve", "backward_solve_many",
+    "concurrent_solve", "concurrent_quadratic_forms", "logdet",
+    "concurrent_logdet", "sample_gmrf", "sample_gmrf_many",
+    # selected inversion
+    "SelectedInverse", "selected_inverse", "selinv_batched",
+    "concurrent_selinv", "marginal_variances",
+    # per-element status codes on FactorInfo
+    "STATUS_OK", "STATUS_RECOVERED", "STATUS_FAILED", "STATUS_SHED",
+    # serving
+    "RungServer", "SimClock",
+]
+
+OPTIONS_FIELDS = {
+    "policy": None,
+    "regularize": None,
+    "impl": None,
+    "sweep": "auto",
+    "partition_plan": None,
+    "method": None,
+}
+
+
+def _factor(opts=None):
+    A, st = make_arrowhead(64, 6, 4, seed=0)
+    m = BandedCTSF.from_sparse(A, TileGrid(st, 8))
+    return api.factorize_window(
+        m, options=opts or SolverOptions(impl="ref")), m
+
+
+# ---------------------------------------------------------------------------
+# golden snapshots
+# ---------------------------------------------------------------------------
+
+def test_api_all_snapshot():
+    assert list(api.__all__) == API_SNAPSHOT
+
+
+def test_api_names_resolve():
+    for name in api.__all__:
+        assert getattr(api, name) is not None
+
+
+def test_solver_options_field_snapshot():
+    fields = {f.name: f.default for f in dataclasses.fields(SolverOptions)}
+    assert fields == OPTIONS_FIELDS
+
+
+def test_solver_options_frozen_and_hashable():
+    opts = SolverOptions(impl="ref")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        opts.impl = "pallas"
+    assert hash(opts) == hash(SolverOptions(impl="ref"))
+    assert opts != SolverOptions(impl="pallas")
+    assert opts.replace(sweep="fused").sweep == "fused"
+    assert opts.replace(sweep="fused") is not opts
+
+
+def test_compile_key_drops_non_compile_fields():
+    from repro.core.robustness import RegularizePolicy
+    a = SolverOptions(impl="ref", regularize=RegularizePolicy(),
+                      method="panels")
+    b = SolverOptions(impl="ref")
+    assert a.compile_key() == b.compile_key()
+    assert a.compile_key() != SolverOptions(impl="pallas").compile_key()
+
+
+def test_resolve_options_rejects_wrong_type():
+    with pytest.raises(TypeError):
+        resolve_options({"impl": "ref"})
+
+
+# ---------------------------------------------------------------------------
+# the blessed options path is silent
+# ---------------------------------------------------------------------------
+
+def test_options_path_emits_no_deprecation_warnings():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        opts = SolverOptions(impl="ref")
+        f, m = _factor(opts)
+        b = np.zeros((m.grid.padded_n, 2), np.float32)
+        b[:3, :] = 1.0
+        api.solve_many(f, b, options=opts)
+        api.selected_inverse(f, options=opts)
+        api.marginal_variances(f, np.arange(4), options=opts)
+        api.marginal_variances(f, np.arange(4),
+                               options=opts.replace(method="panels"))
+        batch = api.stack_ctsf([m, m])
+        fb = api.concurrent_factorize(batch, options=opts)
+        api.selinv_batched(fb, options=opts)
+        api.concurrent_selinv(fb, options=opts)
+        api.solve_many_batched(fb, b[None].repeat(2, 0), options=opts)
+
+
+# ---------------------------------------------------------------------------
+# every legacy kwarg warns (one DeprecationWarning per kwarg passed)
+# ---------------------------------------------------------------------------
+
+def _one_deprecation(fn):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn()
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(w.message) for w in rec]
+    assert "options=SolverOptions(" in str(dep[0].message)
+    return out
+
+
+@pytest.mark.legacy_shim
+def test_factorize_window_legacy_kwargs_warn():
+    A, st = make_arrowhead(64, 6, 4, seed=0)
+    m = BandedCTSF.from_sparse(A, TileGrid(st, 8))
+    f_new = api.factorize_window(m, options=SolverOptions(impl="ref"))
+    f_old = _one_deprecation(lambda: api.factorize_window(m, impl="ref"))
+    np.testing.assert_array_equal(np.asarray(f_old.ctsf.Dr),
+                                  np.asarray(f_new.ctsf.Dr))
+    _one_deprecation(lambda: api.factorize_window(m, sweep="ring"))
+    _one_deprecation(lambda: api.factorize_window(m, regularize=True))
+
+
+@pytest.mark.legacy_shim
+def test_solve_and_selinv_legacy_kwargs_warn():
+    f, m = _factor()
+    b = np.zeros((m.grid.padded_n, 2), np.float32)
+    b[:3, :] = 1.0
+    _one_deprecation(lambda: api.solve_many(f, b, impl="ref"))
+    _one_deprecation(lambda: api.forward_solve_many(f, b, impl="ref"))
+    _one_deprecation(lambda: api.backward_solve_many(f, b, impl="ref"))
+    _one_deprecation(lambda: api.selected_inverse(f, impl="ref"))
+    _one_deprecation(
+        lambda: api.marginal_variances(f, np.arange(4), method="panels"))
+
+
+@pytest.mark.legacy_shim
+def test_batched_and_concurrent_legacy_kwargs_warn():
+    _, m = _factor()
+    batch = api.stack_ctsf([m, m])
+    fb = _one_deprecation(lambda: api.concurrent_factorize(batch, impl="ref"))
+    _one_deprecation(lambda: api.selinv_batched(fb, impl="ref"))
+    _one_deprecation(lambda: api.concurrent_selinv(fb, impl="ref"))
+    _one_deprecation(
+        lambda: api.factorize_window_batched([m, m], impl="ref"))
+
+
+@pytest.mark.legacy_shim
+def test_legacy_kwarg_wins_over_options_field():
+    # transition-period contract: an explicitly passed legacy kwarg
+    # overrides the same field in options (and still warns)
+    A, st = make_arrowhead(64, 6, 4, seed=0)
+    m = BandedCTSF.from_sparse(A, TileGrid(st, 8))
+    f = _one_deprecation(lambda: api.factorize_window(
+        m, impl="ref", options=SolverOptions(impl="pallas", sweep="ring")))
+    f_ref = api.factorize_window(
+        m, options=SolverOptions(impl="ref", sweep="ring"))
+    np.testing.assert_array_equal(np.asarray(f.ctsf.Dr),
+                                  np.asarray(f_ref.ctsf.Dr))
+
+
+@pytest.mark.legacy_shim
+def test_rung_server_legacy_kwargs_warn():
+    from repro.launch.rung_server import RungExecutor, RungServer, SimClock
+    _one_deprecation(lambda: RungExecutor(impl="ref"))
+    _one_deprecation(lambda: RungServer(clock=SimClock(), impl="ref"))
+    # default server behavior keeps the jitter ladder on
+    srv = RungServer(clock=SimClock())
+    assert srv.options.regularize is True
+    explicit = RungServer(clock=SimClock(), options=SolverOptions(impl="ref"))
+    assert explicit.options.regularize is None

@@ -22,6 +22,7 @@ from repro.kernels.band_cholesky import band_cholesky_sweep_pallas
 from repro.kernels.potrf import factorize_tile
 from repro.kernels.ring import band_row_to_col
 from repro.runtime.fault_tolerance import NumericalFaultInjector
+from repro.core.options import SolverOptions
 
 GRIDS = [(16, 4, 0, 16), (30, 6, 14, 16), (160, 8, 0, 16),
          (130, 40, 30, 16), (96, 40, 16, 8)]
@@ -102,7 +103,7 @@ def test_ladder_recovers_indefinite_single():
     is exactly the Cholesky factor of A + tau*I."""
     g, bm, dense = _spd(96, 16, 8, 8)
     bad = _corrupt_diag(bm, tile=2)
-    f = factorize_window(bad, regularize=True)
+    f = factorize_window(bad, options=SolverOptions(regularize=True))
     info = f.info
     assert int(np.asarray(info.status)) == STATUS_RECOVERED
     assert int(np.asarray(info.attempts)) > 1
@@ -121,7 +122,7 @@ def test_ladder_leaves_spd_untouched():
     a bit-identical factor to the unregularized call."""
     g, bm, _ = _spd(130, 40, 30, 16)
     f0 = factorize_window(bm)
-    f1 = factorize_window(bm, regularize=True)
+    f1 = factorize_window(bm, options=SolverOptions(regularize=True))
     info = f1.info
     assert int(np.asarray(info.status)) == STATUS_OK
     assert int(np.asarray(info.attempts)) == 1
@@ -140,7 +141,7 @@ def test_gershgorin_rung_guarantees_finite_recovery():
     bad = _corrupt_diag(bm, tile=1, shift=1e4)
     sh = float(np.asarray(gershgorin_shift(bad.Dr, bad.R, bad.C, g)))
     assert sh > 0
-    f = factorize_window(bad, regularize=True)
+    f = factorize_window(bad, options=SolverOptions(regularize=True))
     assert int(np.asarray(f.info.status)) == STATUS_RECOVERED
     assert np.isfinite(np.asarray(f.ctsf.Dr)).all()
 
@@ -165,7 +166,7 @@ def test_batched_injection_end_to_end():
     assert [(i, m) for i, m, _ in inj.injected] == [(1, "indefinite"),
                                                     (2, "nan")]
 
-    f = factorize_window_batched(corrupted, bucket=False, regularize=True)
+    f = factorize_window_batched(corrupted, bucket=False, options=SolverOptions(regularize=True))
     status = np.asarray(f.info.status)
     assert status.shape == (B,)
     assert status[0] == STATUS_OK and status[3] == STATUS_OK
@@ -198,14 +199,13 @@ def test_batched_bucketed_gridpolicy_ladder():
     corrupted = NumericalFaultInjector(seed=1).corrupt(batch,
                                                        {1: "indefinite"})
     pol = GridBucketPolicy()
-    f = factorize_window_batched(corrupted, bucket=True, policy=pol,
-                                 regularize=True)
+    f = factorize_window_batched(corrupted, bucket=True, options=SolverOptions(policy=pol, regularize=True))
     assert f.source_grid == g
     status = np.asarray(f.info.status)
     assert status.shape == (B,)
     assert status[1] == STATUS_RECOVERED
     assert status[0] == STATUS_OK and status[2] == STATUS_OK
-    plain = factorize_window_batched(corrupted, bucket=True, policy=pol)
+    plain = factorize_window_batched(corrupted, bucket=True, options=SolverOptions(policy=pol))
     for i in (0, 2):
         np.testing.assert_array_equal(np.asarray(f.ctsf.Dr[i]),
                                       np.asarray(plain.ctsf.Dr[i]))
@@ -220,9 +220,9 @@ def test_concurrent_factorize_ladder_mesh():
     mats = [_spd(96, 16, 8, 8, seed=s)[1] for s in range(4)]
     bad = NumericalFaultInjector(seed=0).corrupt(stack_ctsf(mats),
                                                  {2: "indefinite"})
-    f = concurrent_factorize(bad, regularize=True)
+    f = concurrent_factorize(bad, options=SolverOptions(regularize=True))
     mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
-    fm = concurrent_factorize(bad, mesh=mesh, regularize=True)
+    fm = concurrent_factorize(bad, mesh=mesh, options=SolverOptions(regularize=True))
     for fi in (f, fm):
         status = np.asarray(fi.info.status)
         assert status[2] == STATUS_RECOVERED
@@ -234,7 +234,7 @@ def test_nan_single_flagged_not_raised():
     A, st = nan_contaminated_arrowhead(64, 8, 4, seed=0)
     g = TileGrid(st, t=8)
     bm = BandedCTSF.from_sparse(A, g)
-    f = factorize_window(bm, regularize=True)  # must not raise
+    f = factorize_window(bm, options=SolverOptions(regularize=True))  # must not raise
     assert int(np.asarray(f.info.status)) == STATUS_FAILED
     assert not f.info.ok()
 
@@ -262,7 +262,7 @@ def test_indefinite_generator_recovers_through_ladder():
     A, st = indefinite_arrowhead(96, 16, 8, seed=3)
     g = TileGrid(st, t=8)
     bm = BandedCTSF.from_sparse(A, g)
-    f = factorize_window(bm, regularize=True)
+    f = factorize_window(bm, options=SolverOptions(regularize=True))
     assert int(np.asarray(f.info.status)) == STATUS_RECOVERED
     assert np.isfinite(np.asarray(f.ctsf.Dr)).all()
 
@@ -402,7 +402,7 @@ if _HAVE_HYPOTHESIS:
         g = TileGrid(stc, t=t)
         bm = BandedCTSF.from_sparse(A, g)
         f0 = factorize_window(bm)
-        f1 = factorize_window(bm, regularize=True)
+        f1 = factorize_window(bm, options=SolverOptions(regularize=True))
         assert float(np.asarray(f1.info.tau)) == 0.0
         assert int(np.asarray(f1.info.status)) == STATUS_OK
         np.testing.assert_array_equal(np.asarray(f0.ctsf.Dr),

@@ -10,6 +10,7 @@ from repro.core import (BandedCTSF, TileGrid, concurrent_selinv,
                         marginal_variances, selected_inverse, selinv_batched)
 from repro.core.solve import _marginal_variances_map
 from repro.data import make_arrowhead
+from repro.core.options import SolverOptions
 
 
 def _factored(n, bw, ar, t, seed=0, rho=0.6):
@@ -71,7 +72,7 @@ def test_marginal_variances_selinv_agrees_with_panels_and_map():
     bm, f, grid = _factored(320, 24, 32, 16)
     idx = jnp.asarray([0, 7, 63, 150, 250, 319])
     got = np.asarray(marginal_variances(f, idx))
-    panels = np.asarray(marginal_variances(f, idx, method="panels"))
+    panels = np.asarray(marginal_variances(f, idx, options=SolverOptions(method="panels")))
     ref = np.asarray(_marginal_variances_map(f, idx))
     np.testing.assert_allclose(got, panels, rtol=1e-4, atol=1e-6)
     np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-6)
@@ -83,7 +84,7 @@ def test_marginal_variances_panels_fast_start_matches_full_sweep():
     band steps, yet the variances agree with the unskipped recurrence."""
     bm, f, grid = _factored(320, 24, 32, 16)
     idx = jnp.asarray([200, 250, 287, 300, 319])   # first band tile = 12
-    panels = np.asarray(marginal_variances(f, idx, method="panels"))
+    panels = np.asarray(marginal_variances(f, idx, options=SolverOptions(method="panels")))
     got = np.asarray(marginal_variances(f, idx))
     ref = np.asarray(_marginal_variances_map(f, idx))
     np.testing.assert_allclose(panels, got, rtol=1e-4, atol=1e-6)
@@ -131,8 +132,8 @@ def test_selinv_pallas_impl_matches_ref():
     kernel launch (kernels.ops.selinv_sweep) — parity vs the per-column
     scan reference."""
     bm, f, grid = _factored(160, 16, 16, 16)
-    s_ref = selected_inverse(f, impl="ref")
-    s_pal = selected_inverse(f, impl="pallas")
+    s_ref = selected_inverse(f, options=SolverOptions(impl="ref"))
+    s_pal = selected_inverse(f, options=SolverOptions(impl="pallas"))
     np.testing.assert_allclose(np.asarray(s_pal.Dr), np.asarray(s_ref.Dr),
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(s_pal.R), np.asarray(s_ref.R),
@@ -148,7 +149,7 @@ def test_selinv_fused_sweep_matches_dense_inverse(n, bw, ar, t):
     """The fused sweep is exact on the factor pattern, same bar as the scan
     path: its band + arrow block reproduces np.linalg.inv entries."""
     bm, f, grid = _factored(n, bw, ar, t)
-    sigma = selected_inverse(f, impl="pallas")
+    sigma = selected_inverse(f, options=SolverOptions(impl="pallas"))
     inv = np.linalg.inv(bm.to_dense(lower_only=False).astype(np.float64))
     mask = _pattern_mask(grid, bm)
     err = np.abs(np.where(mask, sigma.to_dense_band() - inv, 0.0)).max()
@@ -156,16 +157,18 @@ def test_selinv_fused_sweep_matches_dense_inverse(n, bw, ar, t):
 
 
 def test_selinv_batched_pallas_rides_fused_sweep():
-    """selinv_batched(impl="pallas") — the fused kernel under vmap —
+    """selinv_batched(options=SolverOptions(impl="pallas")) — the fused kernel under vmap —
     matches the looped ref recurrences."""
     mats = []
     for s in range(3):
         bm, f, grid = _factored(160, 16, 16, 16, seed=s)
         mats.append(bm)
-    fb = factorize_window_batched(mats, impl="ref")
-    sb = selinv_batched(fb, impl="pallas")
+    fb = factorize_window_batched(mats, options=SolverOptions(impl="ref"))
+    sb = selinv_batched(fb, options=SolverOptions(impl="pallas"))
     for i, m in enumerate(mats):
-        si = selected_inverse(factorize_window(m, impl="ref"), impl="ref")
+        si = selected_inverse(
+            factorize_window(m, options=SolverOptions(impl="ref")),
+            options=SolverOptions(impl="ref"))
         np.testing.assert_allclose(np.asarray(sb.Dr[i]), np.asarray(si.Dr),
                                    rtol=2e-4, atol=2e-4)
         np.testing.assert_allclose(np.asarray(sb.R[i]), np.asarray(si.R),

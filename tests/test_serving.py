@@ -30,6 +30,7 @@ from repro.launch.rung_server import (FLUSH_DEADLINE, FLUSH_DRAIN,
                                       RungServer, SimClock, replay)
 from repro.runtime import telemetry
 from repro.runtime.fault_tolerance import NumericalFaultInjector
+from repro.core.options import SolverOptions
 
 pytestmark = pytest.mark.serving
 
@@ -169,7 +170,7 @@ def test_replay_matches_sequential_oracle():
     _, results = _serve(arrivals)
     for (arrival, m, b, _dl), r in zip(arrivals, results):
         assert r.status == 0 and r.attempts == 1
-        f = factorize_window(m, regularize=True)
+        f = factorize_window(m, options=SolverOptions(regularize=True))
         x_oracle = np.asarray(solve_many(f, b))
         assert np.abs(r.x - x_oracle).max() < 2e-5
         # the per-request factor solves in the request's own layout too
@@ -264,7 +265,7 @@ def test_factorize_only_requests():
     server.drain()
     r = fut.result(timeout=0)
     assert r.x is None and r.status == 0
-    f_oracle = factorize_window(m, regularize=True)
+    f_oracle = factorize_window(m, options=SolverOptions(regularize=True))
     assert np.allclose(np.asarray(r.factor.restrict().ctsf.Dr),
                        np.asarray(f_oracle.ctsf.Dr), atol=2e-5)
 
@@ -291,7 +292,7 @@ def test_threaded_server_end_to_end_smoke():
         server.stop()
     for (_, m, b, _), r in zip(arrivals, results):
         assert r.status == 0
-        f = factorize_window(m, regularize=True)
+        f = factorize_window(m, options=SolverOptions(regularize=True))
         assert np.abs(r.x - np.asarray(solve_many(f, b))).max() < 2e-5
     assert threading.active_count() >= 1         # pump thread joined
     assert server._thread is None

@@ -13,6 +13,7 @@ from repro.core.concurrent import (concurrent_quadratic_forms,
                                    concurrent_solve, stack_ctsf)
 from repro.core.solve import _marginal_variances_map, backward_solve
 from repro.data import make_arrowhead
+from repro.core.options import SolverOptions
 
 
 def _factored_problem(n=320, bw=24, ar=32, t=16, seed=0):
@@ -128,8 +129,8 @@ def test_fused_pallas_solve_matches_looped_ref(k, problem):
     bm, f, grid = _factored_problem(**problem)
     rng = np.random.default_rng(11)
     B = jnp.asarray(rng.standard_normal((grid.padded_n, k)).astype(np.float32))
-    got = np.asarray(solve_many(f, B, impl="pallas"))
-    want = np.asarray(solve_many(f, B, impl="ref"))
+    got = np.asarray(solve_many(f, B, options=SolverOptions(impl="pallas")))
+    want = np.asarray(solve_many(f, B, options=SolverOptions(impl="ref")))
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
@@ -141,11 +142,11 @@ def test_fused_pallas_forward_start_tile_matches_ref():
     E = jnp.zeros((grid.padded_n, len(idx)), jnp.float32)
     E = E.at[jnp.asarray(idx), jnp.arange(len(idx))].set(1.0)
     start = min(idx) // grid.t
-    got = np.asarray(forward_solve_many(f, E, impl="pallas", start_tile=start))
-    want = np.asarray(forward_solve_many(f, E, impl="ref", start_tile=start))
+    got = np.asarray(forward_solve_many(f, E, start_tile=start, options=SolverOptions(impl="pallas")))
+    want = np.asarray(forward_solve_many(f, E, start_tile=start, options=SolverOptions(impl="ref")))
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
     # and the fast start changes nothing vs the full sweep
-    full = np.asarray(forward_solve_many(f, E, impl="ref"))
+    full = np.asarray(forward_solve_many(f, E, options=SolverOptions(impl="ref")))
     np.testing.assert_allclose(want, full, rtol=2e-4, atol=2e-4)
 
 
@@ -159,8 +160,8 @@ def test_concurrent_solve_fused_pallas_matches_ref():
     fb = factorize_window_batched(mats)
     B = jnp.asarray(np.random.default_rng(6).standard_normal(
         (mats[0].grid.padded_n, 3)).astype(np.float32))
-    got = np.asarray(concurrent_solve(fb, B, impl="pallas"))
-    want = np.asarray(concurrent_solve(fb, B, impl="ref"))
+    got = np.asarray(concurrent_solve(fb, B, options=SolverOptions(impl="pallas")))
+    want = np.asarray(concurrent_solve(fb, B, options=SolverOptions(impl="ref")))
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
@@ -169,10 +170,8 @@ def test_marginal_variances_panels_fused_pallas():
     fast-start forward sweep) under the fused kernels."""
     bm, f, grid = _factored_problem(n=160, bw=16, ar=16)
     idx = jnp.asarray([40, 90, 130, 159])
-    got = np.asarray(marginal_variances(f, idx, method="panels",
-                                        impl="pallas"))
-    want = np.asarray(marginal_variances(f, idx, method="panels",
-                                         impl="ref"))
+    got = np.asarray(marginal_variances(f, idx, options=SolverOptions(method="panels", impl="pallas")))
+    want = np.asarray(marginal_variances(f, idx, options=SolverOptions(method="panels", impl="ref")))
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-6)
 
 

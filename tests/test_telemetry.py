@@ -22,6 +22,7 @@ from repro.kernels.ring import band_row_to_col
 from repro.runtime import telemetry
 from repro.runtime.telemetry import (Telemetry, count_pallas_launches,
                                      kernel_report, sweep_cost)
+from repro.core.options import SolverOptions
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -183,17 +184,17 @@ def test_disabled_overhead_on_cached_solve_many_under_5pct():
     ``solve_many`` dispatch.  Measured as per-op cost in a tight loop
     (deterministic) rather than an A/B wall-clock diff (bimodal in CI)."""
     grid, m = _problem()
-    f = factorize_window(m, impl="ref")
+    f = factorize_window(m, options=SolverOptions(impl="ref"))
     rng = np.random.default_rng(0)
     B = jax.numpy.asarray(
         rng.standard_normal((grid.padded_n, 4)).astype(np.float32))
-    jax.block_until_ready(solve_many(f, B, impl="ref"))  # warm the caches
+    jax.block_until_ready(solve_many(f, B, options=SolverOptions(impl="ref")))  # warm the caches
 
     reps = 30
     times = []
     for _ in range(reps):
         t0 = time.perf_counter()
-        jax.block_until_ready(solve_many(f, B, impl="ref"))
+        jax.block_until_ready(solve_many(f, B, options=SolverOptions(impl="ref")))
         times.append(time.perf_counter() - t0)
     dispatch = float(np.median(times))
 
@@ -428,12 +429,12 @@ def test_mixed_grid_replay_snapshot_and_trace():
                               ((96, 8, 4), 2)]:
         A, s = make_arrowhead(n, bw, ar, rho=0.6, seed=seed)
         m = BandedCTSF.from_sparse(A, TileGrid(s, t=8))
-        fb = factorize_window_batched([m, m], impl="ref", policy=pol)
-        f = factorize_window(m, impl="ref", policy=pol)
+        fb = factorize_window_batched([m, m], options=SolverOptions(impl="ref", policy=pol))
+        f = factorize_window(m, options=SolverOptions(impl="ref", policy=pol))
         B = jax.numpy.asarray(rng.standard_normal(
             (m.grid.padded_n, 3)).astype(np.float32))
-        jax.block_until_ready(solve_many(f, B, impl="ref"))
-        selinv_batched(fb, impl="ref")
+        jax.block_until_ready(solve_many(f, B, options=SolverOptions(impl="ref")))
+        selinv_batched(fb, options=SolverOptions(impl="ref"))
     snap = telemetry.snapshot()
     counters = snap["counters"]
     # cache hit/miss counts: same-rung repeats hit, each rung misses once
@@ -466,7 +467,7 @@ def test_robustness_ladder_counters():
     telemetry.enable()
     grid, m = _problem(seed=3)
     # clean input: one attempt, all ok — counted off the existing readback
-    factorize_window(m, impl="ref", regularize=True)
+    factorize_window(m, options=SolverOptions(impl="ref", regularize=True))
     snap = telemetry.snapshot()
     assert snap["counters"]["robustness.attempts"] >= 1.0
     assert snap["counters"]["robustness.status{outcome=ok}"] >= 1.0
@@ -474,7 +475,7 @@ def test_robustness_ladder_counters():
     telemetry.reset()
     Dr = m.Dr.at[..., 0, 0, 0, 0].set(-50.0)       # break a diagonal
     bad = BandedCTSF(grid, Dr, m.R, m.C)
-    f = factorize_window(bad, impl="ref", regularize=True)
+    f = factorize_window(bad, options=SolverOptions(impl="ref", regularize=True))
     assert f.info is not None
     snap = telemetry.snapshot()
     assert snap["counters"]["robustness.attempts"] >= 2.0
